@@ -1,0 +1,40 @@
+"""Paper Fig. 14: mixed-precision GEMM throughput (FP32 vs FP16->FP32 vs
+INT8->INT32; here fp32 / bf16->f32 / int8->i32).
+
+Reports modeled roofline time per precision on the paper workloads and the
+achieved fraction of each precision's peak — the paper's 94%-of-peak
+claim (their IDs 14, 18) is the reference point, checked on the same IDs."""
+import numpy as np
+
+from benchmarks.common import PAPER_WORKLOADS, emit, modeled_time_s
+from repro.core.blocking import plan_gemm
+from repro.core.constants import DEFAULT_HW
+
+
+def run():
+    hw = DEFAULT_HW
+    peaks = {"float32": hw.peak_flops_fp32, "bfloat16": hw.peak_flops_bf16,
+             "int8": hw.peak_ops_int8}
+    for wid, m, n, k in PAPER_WORKLOADS:
+        times = {}
+        for dtype in ("float32", "bfloat16", "int8"):
+            plan = plan_gemm(m, n, k, dtype)
+            times[dtype] = modeled_time_s(plan.flops, plan.hbm_bytes, dtype)
+        frac = {d: (2 * m * n * k / times[d]) / peaks[d] for d in times}
+        emit(f"mixed_precision_{wid:02d}", 0.0,
+             f"bf16_speedup_vs_f32={times['float32']/times['bfloat16']:.2f};"
+             f"int8_speedup_vs_bf16={times['bfloat16']/times['int8']:.2f};"
+             f"peak_frac_f32={frac['float32']:.2f};"
+             f"peak_frac_bf16={frac['bfloat16']:.2f};"
+             f"peak_frac_int8={frac['int8']:.2f}")
+    # paper's 94%-of-peak reference cells
+    for wid, m, n, k in [PAPER_WORKLOADS[13], PAPER_WORKLOADS[17]]:
+        plan = plan_gemm(m, n, k, "int8")
+        t = modeled_time_s(plan.flops, plan.hbm_bytes, "int8")
+        frac = (2 * m * n * k / t) / peaks["int8"]
+        emit(f"mixed_precision_peakcheck_id{wid}", 0.0,
+             f"int8_peak_fraction={frac:.3f};paper_reference=0.94")
+
+
+if __name__ == "__main__":
+    run()

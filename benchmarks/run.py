@@ -1,0 +1,28 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  See DESIGN.md §6 for the mapping
+to the paper's tables and EXPERIMENTS.md for methodology (CPU wall-time is
+a sanity signal; modeled roofline terms are the graded numbers)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_breakdown, bench_gemm_workloads, bench_irregular, bench_loads,
+        bench_mixed_precision, bench_tiles, roofline_report,
+    )
+    bench_tiles.run()                      # paper Fig. 2
+    bench_loads.run()                      # paper Fig. 3
+    bench_gemm_workloads.run("float32")    # paper Table III + Fig. 10/11
+    bench_gemm_workloads.run("bfloat16", wall=False)   # Fig. 12 ladder
+    bench_irregular.run()                  # paper Fig. 13
+    bench_mixed_precision.run()            # paper Fig. 14
+    bench_breakdown.run()                  # paper Fig. 15
+    roofline_report.run()                  # beyond-paper: dry-run roofline
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Fault-tolerance drill: crash a training run mid-flight, restore, verify
+the resumed run matches an uninterrupted one bit-for-bit; then exercise the
+straggler detector and the elastic re-mesh planner.
+
+    PYTHONPATH=src python examples/fault_tolerance_drill.py
+"""
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+
+from repro.configs import base as cb
+from repro.configs.base import ShapeConfig
+from repro.distributed.fault_tolerance import (
+    FailureEvent, plan_elastic_mesh, simulate_failures,
+)
+from repro.models.transformer import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = cb.get("starcoder2-3b", smoke=True)
+    model = build_model(cfg, policy="fp32", remat=False)
+    shape = ShapeConfig("tiny", 32, 4, "train")
+    ckdir = tempfile.mkdtemp(prefix="ft_drill_")
+
+    # 1. Uninterrupted 12-step run (the reference).
+    tcfg = TrainerConfig(steps=12, checkpoint_every=6, checkpoint_dir=ckdir,
+                         log_every=1000, opt=AdamWConfig(lr=1e-3))
+    ref = Trainer(model, shape, tcfg)
+    p_ref, _ = ref.run()
+
+    # 2. "Crash" after step 6 (we restore from the step-6 checkpoint) and
+    #    resume to step 12 — must equal the reference exactly.
+    tr = Trainer(model, shape, tcfg)
+    p_like, o_like = tr.init_state()
+    p, o, step = tr.restore(p_like, o_like, step=6)
+    print(f"crashed @ step ~9, restored checkpoint @ step {step}")
+    p, o = tr.run(p, o, start_step=step)
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("resume is BIT-EXACT vs uninterrupted run")
+
+    # 3. Straggler + crash simulation through the controller contract.
+    saved = {"step": 0}
+    log = simulate_failures(
+        lambda s: 1.0, total_steps=24,
+        events=[FailureEvent(step=9, kind="crash"),
+                FailureEvent(step=15, kind="straggle", magnitude=8)],
+        checkpoint_every=6,
+        save=lambda s: saved.update(step=s), restore=lambda: saved["step"])
+    print("failure-sim log:", log)
+
+    # 4. Elastic re-mesh plan after losing chips.
+    for chips in (256, 240, 128, 17):
+        print(f"elastic plan for {chips} chips:", plan_elastic_mesh(chips))
+
+    shutil.rmtree(ckdir, ignore_errors=True)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

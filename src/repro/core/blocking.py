@@ -1,0 +1,255 @@
+"""Analytic block-size planner for MPGEMM-TPU.
+
+This is the TPU adaptation of the paper's cache-aware partitioning model
+(Section IV-B, equations (1)-(3)):
+
+  paper eq (1): working set of packed blocks < shared-L2 (8 MB)
+      -> here: double-buffered A/B input blocks + resident accumulator must
+         fit the VMEM budget.
+
+  paper eq (2): TLB-entry bound on kc
+      -> no TLB on TPU.  Replaced by a DMA-granularity bound: every block's
+         minor (lane) dimension must span >= ``min_dma_row_bytes`` contiguous
+         bytes, the analogue of issuing four-Z-register (256 B) grouped loads
+         instead of single-Z (64 B) loads.
+
+  paper eq (3): maximize compute-to-memory ratio (CMR)
+      -> same objective.  For a K-innermost revisiting grid the total HBM
+         traffic is
+            bytes = A_bytes * ceil(N/bn) + B_bytes * ceil(M/bm) + C_bytes
+         so CMR maximization == traffic minimization.  We solve the
+         continuous relaxation (Lagrange: bm == bn at the optimum, bk as
+         large as capacity allows) and then refine over the hardware-aligned
+         discrete lattice, mirroring the paper's "analytical model + final
+         alignment to mr/nr".
+
+The planner emits a :class:`GemmPlan` consumed by ``kernels/mpgemm.py`` (as
+BlockSpec shapes) and by benchmarks (as the predicted-traffic model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import DEFAULT_HW, HardwareSpec
+
+
+def _dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _round_down(x: int, m: int) -> int:
+    return max(m, (x // m) * m)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """A fully-specified blocking decision for one GEMM."""
+
+    m: int
+    n: int
+    k: int
+    bm: int
+    bn: int
+    bk: int
+    a_dtype: str
+    b_dtype: str
+    out_dtype: str
+    acc_dtype: str
+    # Derived.
+    grid: Tuple[int, int, int]
+    vmem_bytes: int          # modeled VMEM working set
+    hbm_bytes: int           # modeled HBM traffic for the whole GEMM
+    flops: int               # 2*M*N*K
+    cmr: float               # flops / hbm_bytes (the paper's eq (3) value)
+    k_rem: int               # K % bk (0 -> no K-edge predication needed)
+    notes: str = ""
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.cmr
+
+    def describe(self) -> str:
+        return (
+            f"GemmPlan[{self.m}x{self.n}x{self.k} {self.a_dtype}->"
+            f"{self.out_dtype}] blocks=({self.bm},{self.bn},{self.bk}) "
+            f"grid={self.grid} vmem={self.vmem_bytes/2**20:.2f}MiB "
+            f"CMR={self.cmr:.1f} {self.notes}"
+        )
+
+
+def modeled_traffic_bytes(
+    m: int, n: int, k: int, bm: int, bn: int,
+    a_bytes: int, b_bytes: int, c_bytes: int, beta: float = 0.0,
+) -> int:
+    """HBM traffic for a K-innermost revisiting grid (C resident in VMEM).
+
+    A is re-read once per column-block of C; B once per row-block of C; C is
+    written once (and read once iff beta != 0).
+    """
+    n_col_blocks = math.ceil(n / bn)
+    n_row_blocks = math.ceil(m / bm)
+    c_factor = 2 if beta else 1
+    return (
+        m * k * a_bytes * n_col_blocks
+        + k * n * b_bytes * n_row_blocks
+        + m * n * c_bytes * c_factor
+    )
+
+
+def vmem_working_set(
+    bm: int, bn: int, bk: int,
+    a_bytes: int, b_bytes: int, out_bytes: int, acc_bytes: int = 4,
+    beta: float = 0.0,
+) -> int:
+    """Paper eq (1), VMEM form.
+
+    The paper reserves space for the *next* iteration's Bc and the C block on
+    top of the current blocks (LRU anti-eviction).  The TPU analogue is the
+    Pallas pipeline's double buffering of the streamed inputs, plus the
+    resident accumulator and the output staging block.
+    """
+    dbuf = 2  # double-buffered HBM->VMEM pipeline
+    ws = dbuf * (bm * bk * a_bytes + bk * bn * b_bytes)
+    ws += bm * bn * acc_bytes          # resident accumulator (the "ZA tiles")
+    ws += bm * bn * out_bytes          # output staging
+    if beta:
+        ws += dbuf * bm * bn * out_bytes   # streamed C input blocks
+    return ws
+
+
+def plan_gemm(
+    m: int,
+    n: int,
+    k: int,
+    a_dtype="float32",
+    b_dtype=None,
+    out_dtype=None,
+    acc_dtype=None,
+    *,
+    beta: float = 0.0,
+    hw: HardwareSpec = DEFAULT_HW,
+    vmem_budget_frac: float = 0.75,
+    max_block: int = 2048,
+) -> GemmPlan:
+    """Pick (bm, bn, bk) for an M x N x K GEMM.
+
+    Mirrors the paper's flow: fix the register-level micro tile from the ISA
+    (here the MXU's 128), derive the reduction block from the granularity
+    constraint (paper: TLB eq (2); here: DMA row width), then maximize CMR
+    subject to the capacity constraint (paper: 8 MB L2; here: VMEM budget).
+    """
+    b_dtype = b_dtype or a_dtype
+    out_dtype = out_dtype or ("int32" if jnp.dtype(a_dtype).kind == "i" else a_dtype)
+    if acc_dtype is None:
+        acc_dtype = "int32" if jnp.dtype(a_dtype).kind == "i" else "float32"
+    ab = _dtype_bytes(a_dtype)
+    bb = _dtype_bytes(b_dtype)
+    ob = _dtype_bytes(out_dtype)
+    accb = _dtype_bytes(acc_dtype)
+
+    budget = int(hw.vmem_bytes * vmem_budget_frac)
+    lane = hw.lane
+
+    # --- granularity floors (paper P2: four-Z-register loads) -------------
+    # Minor-dim spans must cover >= min_dma_row_bytes of contiguous data.
+    min_bk = max(lane, _round_up(hw.min_dma_row_bytes // ab, lane))   # A minor
+    min_bn = max(lane, _round_up(hw.min_dma_row_bytes // bb, lane))   # B minor
+    sub_a = hw.sublane(ab)   # A/acc second-minor granularity
+    sub_b = hw.sublane(bb)   # B second-minor granularity (constrains bk)
+
+    # --- candidate lattices -------------------------------------------------
+    def _cands(minimum: int, align: int, dim: int):
+        out = []
+        v = minimum
+        while v <= min(max_block, _round_up(dim, align)):
+            out.append(v)
+            v *= 2
+        # Exact-fit candidate for small dims (edge micro-kernel selection).
+        exact = _round_up(dim, align)
+        if exact <= max_block and exact not in out:
+            out.append(exact)
+        return sorted(set(out))
+
+    bm_cands = _cands(max(sub_a, min(128, _round_up(m, sub_a))), sub_a, m)
+    # bm prefers MXU multiples when m is large.
+    bm_cands = [c for c in bm_cands if c <= _round_up(m, sub_a)]
+    bn_cands = [c for c in _cands(min_bn, lane, n) if c <= _round_up(n, lane)]
+    bk_align = max(lane, sub_b)
+    bk_cands = [c for c in _cands(min_bk, bk_align, k) if c <= _round_up(k, bk_align)]
+
+    best = None
+    for bm in bm_cands:
+        for bn in bn_cands:
+            for bk in bk_cands:
+                ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta)
+                if ws > budget:
+                    continue
+                traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta)
+                flops = 2 * m * n * k
+                cmr = flops / max(1, traffic)
+                # Secondary objectives: fewer grid steps, squarer C block.
+                grid_steps = (
+                    math.ceil(m / bm) * math.ceil(n / bn) * math.ceil(k / bk)
+                )
+                key = (cmr, -grid_steps, min(bm, bn))
+                if best is None or key > best[0]:
+                    best = (key, (bm, bn, bk, ws, traffic, cmr))
+    if best is None:
+        # Degenerate fallback: smallest aligned blocks.
+        bm, bn, bk = sub_a, lane, bk_align
+        ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta)
+        traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta)
+        cmr = 2 * m * n * k / max(1, traffic)
+    else:
+        bm, bn, bk, ws, traffic, cmr = best[1]
+
+    bm = min(bm, _round_up(m, sub_a))
+    bn = min(bn, _round_up(n, lane))
+    bk = min(bk, _round_up(k, bk_align))
+    grid = (math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk))
+    notes = []
+    if m % bm or n % bn:
+        notes.append("edge-mn")
+    k_rem = k % bk
+    if k_rem:
+        notes.append("edge-k(predicated)")
+    return GemmPlan(
+        m=m, n=n, k=k, bm=bm, bn=bn, bk=bk,
+        a_dtype=str(jnp.dtype(a_dtype)), b_dtype=str(jnp.dtype(b_dtype)),
+        out_dtype=str(jnp.dtype(out_dtype)), acc_dtype=str(jnp.dtype(acc_dtype)),
+        grid=grid, vmem_bytes=ws, hbm_bytes=traffic, flops=2 * m * n * k,
+        cmr=cmr, k_rem=k_rem, notes=" ".join(notes),
+    )
+
+
+def naive_plan(m: int, n: int, k: int, a_dtype="float32", **kw) -> GemmPlan:
+    """The 'three-level loop, fixed tile' baseline the paper ablates against.
+
+    Fixed 256^3 blocks regardless of shape or dtype — the analogue of the
+    baselines' fixed micro-tile + single-matrix packing.  Used by
+    benchmarks/bench_breakdown.py.
+    """
+    plan = plan_gemm(m, n, k, a_dtype, **kw)
+    bm = min(256, _round_up(m, 8))
+    bn = min(256, _round_up(n, 128))
+    bk = min(256, _round_up(k, 128))
+    ab = _dtype_bytes(plan.a_dtype)
+    bb = _dtype_bytes(plan.b_dtype)
+    ob = _dtype_bytes(plan.out_dtype)
+    traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob)
+    return dataclasses.replace(
+        plan, bm=bm, bn=bn, bk=bk,
+        grid=(math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk)),
+        vmem_bytes=vmem_working_set(bm, bn, bk, ab, bb, ob),
+        hbm_bytes=traffic, cmr=2 * m * n * k / max(1, traffic),
+        k_rem=k % bk, notes="naive-256^3",
+    )

@@ -1,0 +1,49 @@
+"""Global runtime configuration for the MPGEMM op layer.
+
+Backend dispatch:
+  * ``pallas``     — real Mosaic lowering (TPU runtime).
+  * ``interpret``  — Pallas interpret mode (CPU correctness tests).
+  * ``xla``        — plain XLA dot_general with the same precision semantics
+                     (CPU dry-runs / AOT compiles; also the fallback any time
+                     a GEMM shape is degenerate).
+
+The dry-run lowers the ``xla`` path: cost_analysis FLOPs/bytes are identical
+to the kernel path, and the Mosaic kernel cannot lower to the CPU backend.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+
+import jax
+
+_state = threading.local()
+
+_VALID = ("auto", "pallas", "interpret", "xla")
+
+
+def _default_backend() -> str:
+    env = os.environ.get("REPRO_GEMM_BACKEND", "auto")
+    return env if env in _VALID else "auto"
+
+
+def get_gemm_backend() -> str:
+    backend = getattr(_state, "backend", None) or _default_backend()
+    if backend == "auto":
+        platform = jax.default_backend()
+        backend = "pallas" if platform == "tpu" else "xla"
+    return backend
+
+
+@contextlib.contextmanager
+def gemm_backend(name: str):
+    """Context manager: force the GEMM backend (tests use ``interpret``)."""
+    if name not in _VALID:
+        raise ValueError(f"unknown backend {name!r}; valid: {_VALID}")
+    prev = getattr(_state, "backend", None)
+    _state.backend = name
+    try:
+        yield
+    finally:
+        _state.backend = prev

@@ -1,0 +1,52 @@
+"""Hardware constants for the TPU v5e target and roofline math.
+
+The container is CPU-only; these constants describe the TARGET hardware used
+for the analytic block planner (core/blocking.py) and the roofline report
+(core/roofline.py).  They are overridable for other TPU generations.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    # Compute.
+    peak_flops_bf16: float  # FLOP/s per chip (MXU, bf16 inputs / f32 acc)
+    peak_flops_fp32: float  # FLOP/s per chip for fp32 inputs
+    peak_ops_int8: float    # OP/s per chip for int8 inputs / i32 acc
+    # Memory.
+    hbm_bytes: int
+    hbm_bw: float           # bytes/s per chip
+    vmem_bytes: int         # software-managed vector memory per core
+    # Interconnect.
+    ici_bw: float           # bytes/s per link (roofline uses chips x link_bw)
+    # Tiling granularity of the vector/matrix units.
+    mxu_dim: int = 128      # MXU systolic array is mxu_dim x mxu_dim
+    lane: int = 128         # VREG lane count
+    # Minimum efficient contiguous DMA row, in bytes.  This is the TPU
+    # analogue of the paper's "four-Z-register (256B) grouped loads": narrow
+    # rows waste descriptor bandwidth exactly like single-Z loads waste bus
+    # beats on SME.
+    min_dma_row_bytes: int = 512
+
+    def sublane(self, dtype_bytes: int) -> int:
+        """Second-minor tiling granularity for a dtype ((8,128) f32 etc.)."""
+        return max(8, 32 // max(1, dtype_bytes))
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_fp32=197e12 / 4,   # fp32 MXU passes cost ~4x bf16 (cf. paper's
+                                  # FP64 = 1/4 FP32 observation on SME)
+    peak_ops_int8=394e12,         # int8 2x bf16 (paper: SMOPA 2x FMOPA)
+    hbm_bytes=16 * 2**30,
+    hbm_bw=819e9,
+    vmem_bytes=16 * 2**20,
+    ici_bw=50e9,
+)
+
+# Default spec used across the framework.
+DEFAULT_HW = TPU_V5E

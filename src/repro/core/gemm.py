@@ -1,0 +1,176 @@
+"""``mp_dot`` — the paper's technique as a first-class, differentiable op.
+
+Every matmul in every model in this framework flows through here.  The op:
+
+* applies a :class:`PrecisionPolicy` (fp32 / bf16->f32 / dynamic int8->i32 —
+  the paper's Section V multi-precision surface),
+* dispatches to the Pallas MPGEMM kernel (TPU / interpret) or to an XLA
+  ``dot_general`` with identical precision semantics (CPU dry-run),
+* implements its own VJP whose backward GEMMs use the **fused-transpose**
+  kernel variants (dx = dy · Wᵀ, dW = Xᵀ · dy) — the training-time payoff of
+  the paper's on-the-fly transposition: no transposed weight copies are ever
+  materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import config as cfg
+from repro.core.policy import PrecisionPolicy, get_policy, quantize_per_tensor
+from repro.kernels.mpgemm import mpgemm_pallas
+
+
+def _dims(trans_a: bool, trans_b: bool):
+    ca = 0 if trans_a else 1
+    cb = 1 if trans_b else 0
+    return (((ca,), (cb,)), ((), ()))
+
+
+def _matmul_2d(
+    x, w, bias, policy: PrecisionPolicy, trans_a: bool, trans_b: bool, backend: str,
+    out_dtype=None, acc_dtype=None,
+):
+    """One 2-D GEMM under a policy, on the selected backend.
+
+    ``acc_dtype`` overrides the accumulator/partial-sum dtype: backward
+    GEMMs pass bf16 so that TP partial-sum all-reduces move bf16 instead of
+    f32 (halves gradient/activation-grad wire bytes; standard practice).
+
+    ``w`` may be a static-int8 {"q","scale"} dict (core/quantization.py):
+    the dequant rides the GEMM — int8 HBM reads, upcast at the compute unit."""
+    from repro.core.quantization import dequantize_tensor, is_quantized
+    if is_quantized(w):
+        w = dequantize_tensor(w, jnp.dtype(policy.compute_dtype))
+    out_dtype = out_dtype or policy.out_dtype
+    if policy.quantized:
+        xq, sx = quantize_per_tensor(x)
+        wq, sw = quantize_per_tensor(w)
+        scale = sx * sw
+        if backend in ("pallas", "interpret"):
+            return mpgemm_pallas(
+                xq, wq, trans_a=trans_a, trans_b=trans_b, scale=scale,
+                bias=bias, out_dtype=out_dtype,
+                interpret=(backend == "interpret"),
+            )
+        acc = jax.lax.dot_general(
+            xq, wq, _dims(trans_a, trans_b), preferred_element_type=jnp.int32
+        )
+        y = acc.astype(jnp.float32) * scale
+        if bias is not None:
+            y = y + bias.reshape(1, -1).astype(y.dtype)
+        return y.astype(out_dtype)
+
+    cd = jnp.dtype(policy.compute_dtype)
+    xc = x.astype(cd)
+    wc = w.astype(cd)
+    if wc.dtype != w.dtype:
+        # Pin the down-cast to happen shard-local BEFORE any FSDP
+        # all-gather: without the barrier GSPMD gathers the f32 master
+        # weights and converts after, doubling gather wire bytes
+        # (measured on mixtral train_4k — EXPERIMENTS.md §Perf).
+        wc = jax.lax.optimization_barrier(wc)
+    if backend in ("pallas", "interpret"):
+        return mpgemm_pallas(
+            xc, wc, trans_a=trans_a, trans_b=trans_b, bias=bias,
+            out_dtype=out_dtype, interpret=(backend == "interpret"),
+        )
+    acc = jax.lax.dot_general(
+        xc, wc, _dims(trans_a, trans_b),
+        preferred_element_type=jnp.dtype(acc_dtype or policy.acc_dtype),
+    )
+    if bias is not None:
+        acc = acc + bias.reshape(1, -1).astype(acc.dtype)
+    return acc.astype(out_dtype)
+
+
+# --- differentiable core -----------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _mp_dot_core(x2d, w, bias, policy_name: str, trans_w: bool, backend: str):
+    policy = get_policy(policy_name)
+    return _matmul_2d(x2d, w, bias, policy, False, trans_w, backend)
+
+
+def _mp_dot_fwd(x2d, w, bias, policy_name, trans_w, backend):
+    y = _mp_dot_core(x2d, w, bias, policy_name, trans_w, backend)
+    return y, (x2d, w, bias is not None)
+
+
+def _mp_dot_bwd(policy_name, trans_w, backend, res, dy):
+    x2d, w, has_bias = res
+    policy = get_policy(policy_name)
+    # Backward runs in the non-quantized sibling precision (STE for int8).
+    bwd_policy = get_policy("fp32" if policy.name == "fp32" else "bf16")
+    # bf16 partial sums so TP/FSDP gradient reductions move bf16 on the wire
+    # (no-op for the fp32 policy).
+    bwd_acc = "float32" if policy.name == "fp32" else "bfloat16"
+    # dx = dy @ op(w)^T : if w stored (k,n) -> dy(m,n) x w(k,n)^T == trans_b=True
+    #                     if w stored (n,k) (trans_w) -> plain dy @ w.
+    dx = _matmul_2d(
+        dy, w, None, bwd_policy, False, not trans_w, backend,
+        out_dtype=x2d.dtype, acc_dtype=bwd_acc,
+    )
+    # dw: (k,n) = x^T @ dy ; transposed storage: (n,k) = dy^T @ x.
+    if trans_w:
+        dw = _matmul_2d(
+            dy, x2d, None, bwd_policy, True, False, backend,
+            out_dtype=w.dtype, acc_dtype=bwd_acc,
+        )
+    else:
+        dw = _matmul_2d(
+            x2d, dy, None, bwd_policy, True, False, backend,
+            out_dtype=w.dtype, acc_dtype=bwd_acc,
+        )
+    dbias = jnp.sum(dy, axis=0, dtype=jnp.float32) if has_bias else None
+    return dx, dw, dbias
+
+
+_mp_dot_core.defvjp(_mp_dot_fwd, _mp_dot_bwd)
+
+
+def mp_dot(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    policy="bf16",
+    trans_w: bool = False,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """y[..., n] = x[..., k] @ (w[n, k]ᵀ if trans_w else w[k, n]) + bias.
+
+    ``trans_w=True`` is the on-the-fly-transposition path — used e.g. for
+    tied-embedding logits (w stored (vocab, d_model)).
+    """
+    policy = get_policy(policy)
+    backend = backend or cfg.get_gemm_backend()
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    if bias is not None:
+        bias = bias.reshape(-1)
+    y2d = _mp_dot_core(x2d, w, bias, policy.name, trans_w, backend)
+    wshape = w["q"].shape if isinstance(w, dict) else w.shape
+    n = wshape[0] if trans_w else wshape[-1]
+    return y2d.reshape(*lead, n)
+
+
+def mp_einsum(spec: str, *operands, policy="bf16") -> jax.Array:
+    """Policy-aware einsum for non-2D contractions (MoE experts, attention).
+
+    Runs on XLA with the policy's compute/accumulate dtypes; quantized
+    policies fall back to their bf16 sibling here (documented in DESIGN.md —
+    per-expert dynamic quantization would need per-slice scales).
+    """
+    policy = get_policy(policy)
+    if policy.quantized:
+        policy = get_policy("bf16")
+    cd = jnp.dtype(policy.compute_dtype)
+    ops = [o.astype(cd) if jnp.dtype(o.dtype).kind == "f" else o for o in operands]
+    out = jnp.einsum(
+        spec, *ops, preferred_element_type=jnp.dtype(policy.acc_dtype)
+    )
+    return out.astype(policy.out_dtype)

@@ -1,0 +1,53 @@
+"""Precision policies — the paper's multi-precision GEMM surface (Section V).
+
+SME pairs lower-precision inputs with higher-precision accumulation
+(FP16->FP32, INT8->INT32).  The MXU's native pairs are bf16->f32 and
+int8->int32; fp32 runs at 1/4 MXU rate (the paper's FP64 story, one level
+up the precision ladder).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    name: str
+    compute_dtype: str   # what GEMM operands are cast to
+    acc_dtype: str       # accumulator precision
+    param_dtype: str     # how params are stored
+    out_dtype: str       # activation dtype flowing between layers
+    quantized: bool = False  # dynamic per-tensor int8 quantization
+
+    def flops_per_chip(self, hw) -> float:
+        if self.quantized:
+            return hw.peak_ops_int8
+        if self.compute_dtype in ("bfloat16", "float16"):
+            return hw.peak_flops_bf16
+        return hw.peak_flops_fp32
+
+
+FP32 = PrecisionPolicy("fp32", "float32", "float32", "float32", "float32")
+BF16 = PrecisionPolicy("bf16", "bfloat16", "float32", "float32", "bfloat16")
+# Pure-bf16 storage for serving (halves weight HBM traffic).
+BF16_SERVE = PrecisionPolicy("bf16_serve", "bfloat16", "float32", "bfloat16", "bfloat16")
+INT8 = PrecisionPolicy("int8", "int8", "int32", "bfloat16", "bfloat16", quantized=True)
+
+POLICIES = {p.name: p for p in (FP32, BF16, BF16_SERVE, INT8)}
+
+
+def get_policy(name_or_policy) -> PrecisionPolicy:
+    if isinstance(name_or_policy, PrecisionPolicy):
+        return name_or_policy
+    return POLICIES[name_or_policy]
+
+
+def quantize_per_tensor(x, dtype=jnp.int8):
+    """Dynamic symmetric per-tensor quantization (used by the INT8 policy)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(dtype), scale

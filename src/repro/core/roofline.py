@@ -1,0 +1,99 @@
+"""Three-term roofline from a compiled AOT artifact.
+
+    compute_s    = HLO_FLOPs(per-device) / peak_FLOP/s
+    memory_s     = HLO_bytes(per-device) / HBM_bw
+    collective_s = collective_bytes(per-device) / link_bw
+
+(The per-device HLO module is the post-SPMD program, so dividing per-device
+terms by per-chip rates is identical to the global/(chips x rate) form.)
+
+FLOPs/bytes come from core.hlo_analysis (NOT cost_analysis: XLA counts while
+bodies once; our stacks are scanned).  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.constants import DEFAULT_HW, HardwareSpec
+from repro.core.hlo_analysis import HloCost, analyze_hlo_text
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-device HLO terms
+    flops: float
+    dot_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+    # seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    # useful-compute accounting
+    model_flops_global: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+    step_s: float                # max of the three terms (no-overlap bound)
+    hw_peak_used: float
+    notes: str = ""
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:>22s} {self.shape:>12s} {self.mesh:>6s} "
+            f"comp={self.compute_s:9.4f}s mem={self.memory_s:9.4f}s "
+            f"coll={self.collective_s:9.4f}s -> {self.bottleneck:10s} "
+            f"useful={self.useful_ratio:6.3f}"
+        )
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6*N*D for training; 2*N*D for inference forward (per generated token
+    for decode).  N = active params."""
+    n_active = cfg.active_params()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def build_report(
+    *, arch: str, shape_cfg, mesh_name: str, n_chips: int, hlo: HloCost,
+    cfg, kind: str, policy: str = "bf16", hw: HardwareSpec = DEFAULT_HW,
+    notes: str = "",
+) -> RooflineReport:
+    peak = hw.peak_flops_bf16 if policy != "fp32" else hw.peak_flops_fp32
+    if policy == "int8":
+        peak = hw.peak_ops_int8
+    compute_s = hlo.flops / peak
+    memory_s = hlo.hbm_bytes / hw.hbm_bw
+    wire = getattr(hlo, "wire_bytes", 0.0) or hlo.collective_bytes
+    collective_s = wire / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_cfg, kind)
+    useful = mf / max(1.0, hlo.flops * n_chips)
+    return RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, n_chips=n_chips,
+        flops=hlo.flops, dot_flops=hlo.dot_flops, hbm_bytes=hlo.hbm_bytes,
+        collective_bytes=hlo.collective_bytes,
+        collective_by_kind=dict(hlo.collective_by_kind),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops_global=mf, useful_ratio=useful,
+        step_s=max(terms.values()), hw_peak_used=peak, notes=notes,
+    )
+
+
+def report_to_dict(r: RooflineReport) -> Dict:
+    return dataclasses.asdict(r)

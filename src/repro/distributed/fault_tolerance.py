@@ -1,0 +1,118 @@
+"""Fault tolerance for 1000+-node operation: design + simulation harness.
+
+The physical layer (process death, NIC loss) is owned by the cluster
+scheduler; this module owns the framework's contract with it:
+
+  1. **Checkpoint/restart** — `checkpoint.Checkpointer` writes per-host
+     shards + manifest (atomic rename, async).  `TrainController.restore`
+     resumes (params, optimizer, data-pipeline state) bit-exactly: the
+     synthetic pipeline is a pure function of (seed, step), so the token
+     stream continues where it stopped.
+
+  2. **Elastic re-mesh** — on degraded capacity, relaunch with a smaller
+     mesh; `sharding.params_shardings` is a pure function of (tree, cfg,
+     mesh), so the same checkpoint restores with new NamedShardings
+     (`restore(..., target_shardings=...)`).  `plan_elastic_mesh` picks the
+     largest valid (data, model) grid for the surviving chip count.
+
+  3. **Straggler mitigation** — synchronous SPMD cannot drop a slow worker
+     mid-step, so mitigation = detection + re-dispatch: the controller
+     tracks per-step wall time EWMA; a step exceeding `straggler_factor` x
+     EWMA marks the step suspect, and after `patience` suspect steps the
+     controller requests a re-mesh excluding the slow host (simulated
+     here).  Microbatched steps also bound the blast radius of transient
+     slowness (smaller per-dispatch quantum).
+
+`simulate_failures` exercises 1-3 against an in-process trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    factor: float = 2.5
+    patience: int = 3
+    ewma: float = 0.0
+    alpha: float = 0.1
+    suspect_streak: int = 0
+
+    def observe(self, step_time: float) -> str:
+        """-> 'ok' | 'suspect' | 'remesh'."""
+        if self.ewma == 0.0:
+            self.ewma = step_time
+            return "ok"
+        verdict = "ok"
+        if step_time > self.factor * self.ewma:
+            self.suspect_streak += 1
+            verdict = "suspect"
+            if self.suspect_streak >= self.patience:
+                verdict = "remesh"
+                self.suspect_streak = 0
+        else:
+            self.suspect_streak = 0
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
+        return verdict
+
+
+def plan_elastic_mesh(n_chips: int, *, model_parallel: int = 16,
+                      min_data: int = 1) -> Optional[Tuple[int, int]]:
+    """Largest (data, model) grid for the surviving chip count.
+
+    Keeps the model axis fixed (weight shardings stay valid) and shrinks
+    data parallelism; returns None if not even (min_data x model) survives.
+    """
+    data = n_chips // model_parallel
+    if data < min_data:
+        return None
+    return (data, model_parallel)
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    step: int
+    kind: str          # 'crash' | 'straggle'
+    magnitude: float = 10.0  # slowdown factor for straggle
+
+
+def simulate_failures(
+    run_step: Callable[[int], float],
+    total_steps: int,
+    events: List[FailureEvent],
+    *,
+    checkpoint_every: int = 5,
+    save: Callable[[int], None] = lambda step: None,
+    restore: Callable[[], int] = lambda: 0,
+):
+    """Drive a trainer through crash + straggler events.
+
+    ``run_step(step)`` returns the step wall-time; a 'crash' event makes
+    the controller restore from the latest checkpoint; a 'straggle' event
+    inflates observed step time to exercise the detector.
+    Returns the event log."""
+    log = []
+    det = StragglerDetector()
+    by_step = {e.step: e for e in events}
+    step = restore()
+    while step < total_steps:
+        ev = by_step.get(step)
+        if ev and ev.kind == "crash":
+            del by_step[step]
+            log.append((step, "crash->restore"))
+            step = restore()
+            continue
+        t = run_step(step)
+        if ev and ev.kind == "straggle":
+            t *= ev.magnitude
+        verdict = det.observe(t)
+        if verdict != "ok":
+            log.append((step, verdict))
+        if (step + 1) % checkpoint_every == 0:
+            save(step + 1)
+            log.append((step + 1, "checkpoint"))
+        step += 1
+    return log

@@ -1,0 +1,227 @@
+"""MPGEMM-TPU Pallas kernel.
+
+TPU-native re-derivation of the paper's SME micro-kernel (Sections IV-C, V-C):
+
+* "All four ZA tiles resident across the K loop"  ->  an fp32/int32 VMEM
+  scratch accumulator revisited by a K-innermost grid; the output block is
+  written exactly once, after the full reduction (Algorithm 1 lines 1/8).
+* "Four-Z-register grouped loads"  ->  BlockSpec minor dims chosen by the
+  analytic planner so every DMA row is >= 512 contiguous bytes.
+* "On-the-fly transposition"  ->  ``dot_general`` dimension numbers contract
+  whichever axis the stored layout dictates; no materialized transpose pass.
+* "Predicated edge micro-kernels"  ->  K-remainder masking with iota
+  predicates in-kernel; M/N edges use Pallas partial-block masked stores.
+* "Mixed precision FMOPA"  ->  bf16 x bf16 -> f32 and int8 x int8 -> int32 via
+  ``preferred_element_type``, with a fused dequant/alpha/beta/bias/activation
+  epilogue (the paper's first-round-online-packing lesson: never run a
+  separate memory pass for work that can ride the GEMM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu imports fine on CPU installs; guard anyway.
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+from repro.core.blocking import GemmPlan, plan_gemm
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _mask_contract(x, axis: int, valid):
+    """Zero out lanes >= ``valid`` along ``axis`` (edge predication)."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis)
+    return jnp.where(idx < valid, x, jnp.zeros_like(x))
+
+
+def _dot_dims(trans_a: bool, trans_b: bool):
+    """dot_general dimension numbers for on-the-fly transposition.
+
+    a block is stored (bm,bk) or, transposed, (bk,bm); likewise b is (bk,bn)
+    or (bn,bk).  The contracting axis in the *stored* layout:
+    """
+    ca = 0 if trans_a else 1
+    cb = 1 if trans_b else 0
+    return (((ca,), (cb,)), ((), ()))
+
+
+def mpgemm_kernel(
+    *refs,
+    nk: int,
+    k_rem: int,
+    trans_a: bool,
+    trans_b: bool,
+    acc_dtype,
+    alpha: float,
+    beta: float,
+    has_bias: bool,
+    activation: Optional[str],
+    has_scale: bool,
+):
+    """Grid = (M/bm, N/bn, K/bk), K innermost ('arbitrary')."""
+    idx = 0
+    a_ref = refs[idx]; idx += 1
+    b_ref = refs[idx]; idx += 1
+    c_ref = refs[idx] if beta != 0.0 else None
+    idx += 1 if beta != 0.0 else 0
+    bias_ref = refs[idx] if has_bias else None
+    idx += 1 if has_bias else 0
+    scale_ref = refs[idx] if has_scale else None
+    idx += 1 if has_scale else 0
+    out_ref = refs[idx]; idx += 1
+    acc_ref = refs[idx]
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if k_rem:
+        # Paper's predicate registers: mask the K tail so pipeline pad
+        # garbage (possibly NaN) never pollutes the accumulator.
+        valid = jnp.where(k == nk - 1, k_rem, a.shape[0 if trans_a else 1])
+        a = _mask_contract(a, 0 if trans_a else 1, valid)
+        b = _mask_contract(b, 1 if trans_b else 0, valid)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, _dot_dims(trans_a, trans_b), preferred_element_type=acc_dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if has_scale:
+            # int8 dequant / general scaling: acc(i32|f32) * scalar -> f32.
+            acc = acc.astype(jnp.float32) * scale_ref[0]
+        if alpha != 1.0:
+            acc = acc * jnp.asarray(alpha, acc.dtype)
+        if has_bias:
+            acc = acc + bias_ref[...].astype(acc.dtype)
+        acc = _ACTIVATIONS[activation](acc)
+        if beta != 0.0:
+            acc = acc + jnp.asarray(beta, acc.dtype) * c_ref[...].astype(acc.dtype)
+        out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _compiler_params(interpret: bool):
+    if interpret or pltpu is None:
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:
+        return None
+    try:
+        return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except Exception:  # pragma: no cover
+        return None
+
+
+def mpgemm_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    bias: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    plan: Optional[GemmPlan] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out = activation(alpha * op(a) @ op(b) * scale + bias) + beta * c."""
+    m = a.shape[1] if trans_a else a.shape[0]
+    ka = a.shape[0] if trans_a else a.shape[1]
+    n = b.shape[0] if trans_b else b.shape[1]
+    kb = b.shape[1] if trans_b else b.shape[0]
+    if ka != kb:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    k = ka
+    if plan is None:
+        plan = plan_gemm(
+            m, n, k, a.dtype, b.dtype, out_dtype=out_dtype, beta=beta
+        )
+    out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
+    acc_dtype = jnp.dtype(plan.acc_dtype)
+    bm, bn, bk = plan.bm, plan.bn, plan.bk
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+
+    a_spec = (
+        pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
+        if trans_a
+        else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    )
+    b_spec = (
+        pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+        if trans_b
+        else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    )
+    in_specs = [a_spec, b_spec]
+    inputs = [a, b]
+    if beta != 0.0:
+        if c is None:
+            raise ValueError("beta != 0 requires c")
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        inputs.append(c)
+    if bias is not None:
+        bias2d = bias.reshape(1, -1)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        inputs.append(bias2d)
+    if scale is not None:
+        scale1d = jnp.asarray(scale, jnp.float32).reshape(1)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM if (pltpu and not interpret) else None))
+        inputs.append(scale1d)
+
+    scratch = [pltpu.VMEM((bm, bn), acc_dtype)] if pltpu else [
+        pl.BlockSpec(memory_space=pl.ANY)
+    ]
+
+    kernel = functools.partial(
+        mpgemm_kernel,
+        nk=grid[2],
+        k_rem=plan.k_rem,
+        trans_a=trans_a,
+        trans_b=trans_b,
+        acc_dtype=acc_dtype,
+        alpha=float(alpha),
+        beta=float(beta),
+        has_bias=bias is not None,
+        activation=activation,
+        has_scale=scale is not None,
+    )
+
+    kwargs = {}
+    params = _compiler_params(interpret)
+    if params is not None:
+        kwargs["compiler_params"] = params
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(*inputs)

@@ -1,0 +1,73 @@
+"""Jit'd public wrappers for the Pallas kernels in this package."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import mpgemm as _mpgemm
+from repro.kernels import ref as _ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "trans_a", "trans_b", "alpha", "beta", "activation", "out_dtype",
+        "interpret", "backend",
+    ),
+)
+def mpgemm(
+    a,
+    b,
+    c=None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    bias=None,
+    scale=None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    interpret: bool = False,
+    backend: str = "pallas",
+):
+    """out = activation(alpha * op(a)·op(b) * scale + bias) + beta*c."""
+    if backend == "xla":
+        return _ref.mpgemm_ref(
+            a, b, c, trans_a=trans_a, trans_b=trans_b, alpha=alpha, beta=beta,
+            bias=bias, scale=scale, activation=activation, out_dtype=out_dtype,
+        )
+    return _mpgemm.mpgemm_pallas(
+        a, b, c, trans_a=trans_a, trans_b=trans_b, alpha=alpha, beta=beta,
+        bias=bias, scale=scale, activation=activation, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret", "backend"),
+)
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window=None,
+    scale=None,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+    backend: str = "pallas",
+):
+    """Blocked online-softmax attention; q (B,H,Tq,D), k/v (B,Hkv,Tk,D)."""
+    if backend == "xla":
+        kr = jnp.repeat(k, q.shape[1] // k.shape[1], axis=1)
+        vr = jnp.repeat(v, q.shape[1] // v.shape[1], axis=1)
+        return _ref.flash_attention_ref(q, kr, vr, causal=causal,
+                                        window=window, scale=scale)
+    from repro.kernels.flash_attention import flash_attention as _fa
+    return _fa(q, k, v, causal=causal, window=window, scale=scale,
+               block_q=block_q, block_k=block_k, interpret=interpret)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def mpgemm_ref(
+    a,
+    b,
+    c=None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    bias=None,
+    scale=None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    acc_dtype=None,
+):
+    """Oracle for kernels.mpgemm.mpgemm_pallas."""
+    if acc_dtype is None:
+        acc_dtype = jnp.int32 if jnp.dtype(a.dtype).kind == "i" else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if jnp.dtype(a.dtype).kind == "i" else a.dtype
+    lhs = a.T if trans_a else a
+    rhs = b.T if trans_b else b
+    acc = jax.lax.dot(lhs, rhs, preferred_element_type=acc_dtype)
+    if scale is not None:
+        acc = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    if alpha != 1.0:
+        acc = acc * jnp.asarray(alpha, acc.dtype)
+    if bias is not None:
+        acc = acc + bias.reshape(1, -1).astype(acc.dtype)
+    acc = _ACTIVATIONS[activation](acc)
+    if beta != 0.0:
+        acc = acc + jnp.asarray(beta, acc.dtype) * c.astype(acc.dtype)
+    return acc.astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None, bias=None):
+    """Oracle for kernels.flash_attention (q,k,v: [T, H] per head, or batched)."""
+    sm_scale = scale if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * sm_scale
+    tq, tk = q.shape[-2], k.shape[-2]
+    qi = jnp.arange(tq)[:, None] + (tk - tq)  # right-aligned for decode
+    ki = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    if bias is not None:
+        logits = logits + bias
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", probs, v.astype(probs.dtype)).astype(q.dtype)

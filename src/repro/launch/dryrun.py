@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the FULL-config model (ShapeDtypeStruct only — no allocation),
+  2. constructs in/out NamedShardings from distributed/sharding.py rules,
+  3. jits train_step (train shapes) or prefill/decode (serve shapes),
+  4. ``.lower().compile()`` on the 16x16 (single-pod, 256 chips) or
+     2x16x16 (multi-pod, 512 chips) mesh,
+  5. records memory_analysis, XLA cost_analysis, and our while-aware HLO
+     cost model (core/hlo_analysis) + roofline terms (core/roofline)
+     to experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --summary          # print roofline table
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cb
+from repro.core import roofline as rf
+from repro.core.hlo_analysis import analyze_hlo_text
+from repro.distributed import act
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step, pick_microbatches
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+OUT_DIR = os.path.abspath(OUT_DIR)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg, shape: cb.ShapeConfig, kind: str, model) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if kind == "train":
+        batch = {"tokens": _sds((b, s + 1), jnp.int32)}
+    elif kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+    else:  # decode
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+    if cfg.family == "vlm" and kind != "decode":
+        batch["image_embeds"] = _sds(
+            (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio" and kind != "decode":
+        batch["audio_embeds"] = _sds(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  - ma.alias_size_in_bytes
+                                  + ma.temp_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy_train: str = "bf16", policy_serve: str = "bf16_serve",
+             quant: bool = False, save: bool = True) -> Dict:
+    mesh_name = "multi" if multi_pod else "single"
+    if quant:
+        mesh_name += "-int8"
+    shape = cb.SHAPES[shape_name]
+    cfg = cb.get(arch)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind, "status": "ok"}
+    ok, reason = cb.supports_shape(cfg, shape)
+    if not ok:
+        result.update(status="skip", reason=reason)
+        if save:
+            _save(result)
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    ddp = n_chips // mesh.shape["model"]
+    policy = policy_train if shape.kind == "train" else policy_serve
+    model = build_model(cfg, policy=policy, remat=(shape.kind == "train"))
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.kind != "train":
+        params_shape = jax.tree_util.tree_map(
+            lambda x: _sds(x.shape, jnp.bfloat16), params_shape)
+        if quant:
+            from repro.core.quantization import quantize_params
+            params_shape = jax.eval_shape(quantize_params, params_shape)
+    p_shard = sh.params_shardings(params_shape, cfg, mesh)
+    batch = input_specs(cfg, shape, shape.kind, model)
+    b_shard = sh.batch_shardings(batch, mesh)
+    repl = sh.replicated(mesh)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        opt_shard = type(opt_shape)(step=repl, m=p_shard, v=p_shard)
+        micro = pick_microbatches(cfg, shape, ddp)
+        result["microbatches"] = micro
+        step_fn = make_train_step(model, AdamWConfig(), microbatches=micro,
+                                  grad_shardings=p_shard)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh, act.use_mesh(mesh):
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        prefill = functools.partial(model.prefill, max_len=shape.seq_len)
+        caches_shape = jax.eval_shape(
+            lambda: model.init_caches(shape.global_batch, shape.seq_len))
+        c_shard = sh.caches_shardings(caches_shape, cfg, mesh)
+        da = sh.batch_axes(mesh)
+        logits_shard = NamedSharding(
+            mesh, sh._guard(mesh, (da if len(da) > 1 else da[0], "model"),
+                            (shape.global_batch, 1)))
+        jitted = jax.jit(prefill, out_shardings=(logits_shard, c_shard),
+                         in_shardings=(p_shard, b_shard))
+        with mesh, act.use_mesh(mesh):
+            lowered = jitted.lower(params_shape, batch)
+            compiled = lowered.compile()
+    else:  # decode
+        caches_shape = jax.eval_shape(
+            lambda: model.init_caches(shape.global_batch, shape.seq_len))
+        c_shard = sh.caches_shardings(caches_shape, cfg, mesh)
+        da = sh.batch_axes(mesh)
+        logits_shard = NamedSharding(
+            mesh, sh._guard(mesh, (da if len(da) > 1 else da[0], "model"),
+                            (shape.global_batch, 1)))
+        token = _sds((shape.global_batch, 1), jnp.int32)
+        pos = _sds((), jnp.int32)
+        step = lambda p, t, c, q: model.decode_step(p, t, c, q)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, sh.batch_shardings(token, mesh),
+                          c_shard, repl),
+            out_shardings=(logits_shard, c_shard),
+            donate_argnums=(2,),
+        )
+        with mesh, act.use_mesh(mesh):
+            lowered = jitted.lower(params_shape, token, caches_shape, pos)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    result["compile_s"] = round(compile_s, 2)
+    result["memory"] = _mem_dict(compiled)
+    try:
+        ca = compiled.cost_analysis()
+        result["xla_cost"] = {k: float(v) for k, v in ca.items()
+                              if "flops" in k or k == "bytes accessed"}
+    except Exception as e:
+        result["xla_cost"] = {"error": str(e)}
+
+    hlo_text = compiled.as_text()
+    result["hlo_chars"] = len(hlo_text)
+    hlo = analyze_hlo_text(hlo_text)
+    report = rf.build_report(
+        arch=arch, shape_cfg=shape, mesh_name=mesh_name, n_chips=n_chips,
+        hlo=hlo, cfg=cfg, kind=shape.kind, policy="bf16")
+    result["hlo_cost"] = {
+        "flops": hlo.flops, "dot_flops": hlo.dot_flops,
+        "hbm_bytes": hlo.hbm_bytes, "upcast_bytes": hlo.upcast_bytes,
+        "collective_bytes": hlo.collective_bytes,
+        "collective_by_kind": hlo.collective_by_kind,
+        "n_while": hlo.n_while, "trip_counts": hlo.trip_counts[:64],
+    }
+    result["roofline"] = rf.report_to_dict(report)
+    if save:
+        _save(result)
+    return result
+
+
+def _save(result: Dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(result, f, indent=1, default=float)
+
+
+def summary(mesh_filter: str = "single"):
+    rows = []
+    for fname in sorted(os.listdir(OUT_DIR)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(OUT_DIR, fname)) as f:
+            r = json.load(f)
+        if r["mesh"] != mesh_filter:
+            continue
+        if r["status"] == "skip":
+            rows.append(f"{r['arch']:>22s} {r['shape']:>12s}  SKIP ({r['reason'][:40]})")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']:>22s} {r['shape']:>12s}  FAIL")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"{r['arch']:>22s} {r['shape']:>12s} "
+            f"comp={ro['compute_s']:9.4f} mem={ro['memory_s']:9.4f} "
+            f"coll={ro['collective_s']:9.4f} -> {ro['bottleneck']:10s} "
+            f"useful={ro['useful_ratio']:6.3f} "
+            f"mem/dev={r['memory'].get('peak_bytes_est', 0)/2**30:6.2f}GiB")
+    print("\n".join(rows))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--quant", action="store_true",
+                    help="static-int8 weights for serve cells")
+    args = ap.parse_args()
+    if args.summary:
+        summary("single")
+        print("\n--- multi-pod ---")
+        summary("multi")
+        return
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = cb.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(cb.SHAPES) if (args.all or not args.shape) else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                try:
+                    r = run_cell(arch, shape, mp, quant=args.quant)
+                    status = r["status"]
+                    extra = (f" compile={r.get('compile_s')}s"
+                             f" bottleneck={r.get('roofline', {}).get('bottleneck')}"
+                             if status == "ok" else r.get("reason", ""))
+                    print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+                except Exception:
+                    print(f"[dryrun] {tag}: EXCEPTION", flush=True)
+                    traceback.print_exc()
+                    _save({"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "kind": cb.SHAPES[shape].kind,
+                           "status": "error",
+                           "error": traceback.format_exc()[-2000:]})
+
+
+if __name__ == "__main__":
+    main()

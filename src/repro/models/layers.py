@@ -1,0 +1,114 @@
+"""Common neural-net layers.  Every matmul routes through ``core.gemm.mp_dot``
+so the paper's multi-precision GEMM technique is the substrate of every
+architecture in the framework.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import mp_dot
+
+
+# --- initializers ------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# --- rotary position embeddings ---------------------------------------------
+
+def rope_frequencies(head_dim: int, max_t: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_t, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)                        # (T, hd/2)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin, positions=None):
+    """x: (B, H, T, hd); cos/sin: (maxT, hd/2); positions: (T,) or (B,T)."""
+    if positions is not None:
+        cos = cos[positions]
+        sin = sin[positions]
+    else:
+        cos = cos[: x.shape[-2]]
+        sin = sin[: x.shape[-2]]
+    while cos.ndim < x.ndim - 1:
+        cos = cos[None]
+        sin = sin[None]
+    # cos/sin now broadcastable to (B?, 1?, T, hd/2) against (B,H,T,hd/2)
+    if cos.ndim == x.ndim - 1:
+        cos = jnp.expand_dims(cos, -3)
+        sin = jnp.expand_dims(sin, -3)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLPs ---------------------------------------------------------------------
+
+def swiglu_mlp(params, x, policy):
+    gate = mp_dot(x, params["w_gate"], policy=policy)
+    up = mp_dot(x, params["w_up"], policy=policy)
+    return mp_dot(jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up,
+                  params["w_down"], policy=policy)
+
+
+def gelu_mlp(params, x, policy):
+    h = mp_dot(x, params["w_up"], params.get("b_up"), policy=policy)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return mp_dot(h, params["w_down"], params.get("b_down"), policy=policy)
+
+
+def init_swiglu(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype),
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+
+
+def init_gelu_mlp(key, d: int, f: int, dtype=jnp.float32, bias: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {"w_up": dense_init(k1, d, f, dtype), "w_down": dense_init(k2, f, d, dtype)}
+    if bias:
+        p["b_up"] = jnp.zeros((f,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# --- embedding / logits -------------------------------------------------------
+
+def embed_tokens(emb, tokens, policy_out_dtype=jnp.bfloat16):
+    return emb[tokens].astype(policy_out_dtype)
+
+
+def logits_from_hidden(x, head, *, tied: bool, policy):
+    """tied=True: head is the (V, d) embedding table -> on-the-fly transpose."""
+    return mp_dot(x, head, policy=policy, trans_w=tied)

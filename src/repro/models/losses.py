@@ -1,0 +1,58 @@
+"""Losses.  The vocab cross-entropy is chunked over the sequence so the
+(B, S, V) logits tensor is never materialized — essential for the 32k-seq
+shapes with 32k-256k vocabularies (checkpointed scan; backward recomputes
+each chunk's logits)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import mp_dot
+from repro.distributed import act
+
+
+def chunked_softmax_xent(
+    hidden,            # (B, S, d)
+    head,              # (d, V) or, tied, (V, d)
+    labels,            # (B, S) int32
+    *,
+    tied: bool = False,
+    policy="bf16",
+    chunk: int = 512,
+    mask=None,         # (B, S) 0/1 valid-token mask
+    valid_vocab=None,  # mask padded vocab columns beyond this index
+):
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    nc = hidden.shape[1] // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        h, lab, mk = xs
+        h = act.constrain(h, "batch", None, None)
+        logits = mp_dot(h, head, policy=policy, trans_w=tied).astype(jnp.float32)
+        logits = act.constrain(logits, "batch", None, "model")
+        vp = logits.shape[-1]
+        if valid_vocab is not None and valid_vocab < vp:
+            logits = jnp.where(jnp.arange(vp) < valid_vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mk
+        return (tot + nll.sum(), cnt + mk.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(step), (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

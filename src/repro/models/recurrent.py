@@ -1,0 +1,313 @@
+"""Recurrent blocks: RWKV-6 ("Finch") time/channel mix and RecurrentGemma's
+RG-LRU + causal-conv Griffin block.
+
+Both recurrences are processed in CHUNKS with an exact inner scan; the outer
+chunk scan is checkpointed, so backward memory is O(T / chunk) boundary
+states — the paper's blocking discipline (bound the resident working set,
+stream the reduction) applied to linear recurrences instead of GEMM K-loops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import mp_dot
+from repro.models.layers import dense_init, rmsnorm
+
+CHUNK = 128
+
+
+def _chunk_scan(step_fn, state, xs, chunk: int):
+    """scan(step_fn) over leading time axis, chunked + checkpointed.
+
+    xs leaves: (T, ...).  The T % chunk tail runs as a separate unpadded
+    scan — zero-padding the tail would run extra recurrence steps and
+    corrupt the carried state (caught by tests/test_recurrent.py).
+    """
+    t = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    chunk = min(chunk, t)
+    n_full = t // chunk
+    rem = t - n_full * chunk
+    ys_parts = []
+    if n_full:
+        xs_main = jax.tree_util.tree_map(
+            lambda a: a[: n_full * chunk].reshape(
+                (n_full, chunk) + a.shape[1:]), xs)
+
+        def chunk_fn(carry, xc):
+            return jax.lax.scan(step_fn, carry, xc)
+
+        state, ys = jax.lax.scan(jax.checkpoint(chunk_fn), state, xs_main)
+        ys_parts.append(jax.tree_util.tree_map(
+            lambda a: a.reshape((n_full * chunk,) + a.shape[2:]), ys))
+    if rem:
+        xs_rem = jax.tree_util.tree_map(lambda a: a[n_full * chunk:], xs)
+        state, ys_rem = jax.lax.scan(step_fn, state, xs_rem)
+        ys_parts.append(ys_rem)
+    if len(ys_parts) == 1:
+        return state, ys_parts[0]
+    ys = jax.tree_util.tree_map(
+        lambda *parts: jnp.concatenate(parts, axis=0), *ys_parts)
+    return state, ys
+
+
+# =========================== RWKV-6 (Finch) ===================================
+
+def init_rwkv(key, cfg):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    r = 32  # low-rank for data-dependent lerp / decay
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": {"scale": jnp.zeros((d,), jnp.float32)},
+        "ln2": {"scale": jnp.zeros((d,), jnp.float32)},
+        # time-mix
+        "mu": jnp.full((5, d), 0.5, jnp.float32),        # r,k,v,w,g lerp bases
+        "lora_a": dense_init(ks[0], d, r * 5),
+        "lora_b": (jax.random.normal(ks[1], (5, r, d)) * 0.01).astype(jnp.float32),
+        "wr": dense_init(ks[2], d, d),
+        "wk": dense_init(ks[3], d, d),
+        "wv": dense_init(ks[4], d, d),
+        "wg": dense_init(ks[5], d, d),
+        "wo": dense_init(ks[6], d, d),
+        "w_base": jnp.full((d,), -6.0, jnp.float32),     # decay base (pre -exp)
+        "w_lora_a": dense_init(ks[7], d, 64),
+        "w_lora_b": (jax.random.normal(ks[8], (64, d)) * 0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[9], (h, dh)) * 0.1).astype(jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        # channel-mix
+        "mu_c": jnp.full((2, d), 0.5, jnp.float32),
+        "ck": dense_init(ks[10], d, cfg.d_ff),
+        "cv": dense_init(ks[11], cfg.d_ff, d),
+        "cr": dense_init(jax.random.fold_in(key, 99), d, d),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B, d) last token of the previous segment; returns shifted x."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_step(state, inp):
+    """state: (B, H, dk, dv);  inp r/k/v/w: (B, H, dh), u: (H, dh)."""
+    r, k, v, w, u = inp
+    kv = k[..., :, None] * v[..., None, :]               # (B,H,dk,dv)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, out
+
+
+def rwkv_time_mix(params, x, prev_shift, state, cfg, policy):
+    """x: (B,T,d).  Returns (out, new_shift, new_state)."""
+    b, t, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    xs = _token_shift(x, prev_shift)
+    # data-dependent lerp: mix_i = mu_i + tanh(x A) B_i   (low-rank, per stream)
+    lora = jnp.tanh(mp_dot(x, params["lora_a"], policy=policy))
+    lora = lora.reshape(b, t, 5, -1).astype(jnp.float32)
+    dd = jnp.einsum("btfr,frd->btfd", lora, params["lora_b"])
+    mix = jnp.clip(params["mu"][None, None] + dd, 0.0, 1.0)     # (B,T,5,d)
+    xi = (x[:, :, None].astype(jnp.float32) * mix
+          + xs[:, :, None].astype(jnp.float32) * (1 - mix)).astype(x.dtype)
+    xr, xk, xv, xw, xg = [xi[:, :, i] for i in range(5)]
+    r = mp_dot(xr, params["wr"], policy=policy)
+    k = mp_dot(xk, params["wk"], policy=policy)
+    v = mp_dot(xv, params["wv"], policy=policy)
+    g = mp_dot(xg, params["wg"], policy=policy)
+    wlog = -jnp.exp(
+        params["w_base"][None, None]
+        + jnp.tanh(mp_dot(xw, params["w_lora_a"], policy=policy)).astype(jnp.float32)
+        @ params["w_lora_b"]
+    )                                                            # (B,T,d) <= 0
+    w = jnp.exp(wlog)                                            # decay in (0,1)
+
+    def heads(a):
+        return a.reshape(b, t, h, dh).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    u = params["u"]  # constant across time; fed via closure
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        return _wkv_step(s, (r_t, k_t, v_t, w_t, u))
+
+    state, outs = _chunk_scan(step, state,
+                              (heads(r), heads(k), heads(v), heads(w)), CHUNK)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, t, d)            # (B,T,d)
+    out = rmsnorm(out, params["gn_scale"] - 1.0)                 # group-ish norm
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = mp_dot(out, params["wo"], policy=policy)
+    return out, x[:, -1], state
+
+
+def rwkv_channel_mix(params, x, prev_shift, policy):
+    xs = _token_shift(x, prev_shift)
+    mix = params["mu_c"][None, None]
+    x32, xs32 = x.astype(jnp.float32), xs.astype(jnp.float32)
+    xk = (x32 * mix[:, :, 0] + xs32 * (1 - mix[:, :, 0])).astype(x.dtype)
+    xr = (x32 * mix[:, :, 1] + xs32 * (1 - mix[:, :, 1])).astype(x.dtype)
+    k = mp_dot(xk, params["ck"], policy=policy)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    v = mp_dot(k, params["cv"], policy=policy)
+    r = jax.nn.sigmoid(mp_dot(xr, params["cr"], policy=policy).astype(jnp.float32))
+    return (r.astype(x.dtype) * v), x[:, -1]
+
+
+def rwkv_fwd(params, x, ctx):
+    """Full RWKV-6 layer (train/prefill, fresh state).
+    Returns (x, aux=0, cache|None) per the uniform block interface."""
+    cfg, policy = ctx["cfg"], ctx["policy"]
+    b, t, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    shift0 = jnp.zeros((b, d), x.dtype)
+    hmix = rmsnorm(x, params["ln1"]["scale"])
+    o, shift_t, state = rwkv_time_mix(params, hmix, shift0, state0, cfg, policy)
+    x = x + o
+    hmix = rmsnorm(x, params["ln2"]["scale"])
+    o, shift_c = rwkv_channel_mix(params, hmix, shift0, policy)
+    x = x + o
+    cache = None
+    if ctx.get("collect_cache"):
+        dt = ctx.get("cache_dtype", jnp.bfloat16)
+        cache = {"state": state, "shift_t": shift_t.astype(dt),
+                 "shift_c": shift_c.astype(dt)}
+    return x, jnp.float32(0.0), cache
+
+
+def rwkv_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    return {
+        "state": jnp.zeros((batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                           jnp.float32),
+        "shift_t": jnp.zeros((batch, d), dtype),
+        "shift_c": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv_decode(params, x, cache, ctx):
+    """x: (B,1,d) — one recurrence step; constant-memory decode."""
+    cfg, policy = ctx["cfg"], ctx["policy"]
+    hmix = rmsnorm(x, params["ln1"]["scale"])
+    o, shift_t, state = rwkv_time_mix(
+        params, hmix, cache["shift_t"], cache["state"], cfg, policy)
+    x = x + o
+    hmix = rmsnorm(x, params["ln2"]["scale"])
+    o, shift_c = rwkv_channel_mix(params, hmix, cache["shift_c"], policy)
+    x = x + o
+    return x, {"state": state, "shift_t": shift_t.astype(cache["shift_t"].dtype),
+               "shift_c": shift_c.astype(cache["shift_c"].dtype)}
+
+
+# =========================== RG-LRU (Griffin) =================================
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "ln1": {"scale": jnp.zeros((d,), jnp.float32)},
+        "ln2": {"scale": jnp.zeros((d,), jnp.float32)},
+        "w_x": dense_init(ks[0], d, w),        # recurrent branch in-proj
+        "w_y": dense_init(ks[1], d, w),        # gate branch in-proj
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_gate_r": dense_init(ks[3], w, w),   # recurrence gate
+        "w_gate_i": dense_init(ks[4], w, w),   # input gate
+        "lambda_p": jnp.full((w,), 2.0, jnp.float32),  # softplus param of a
+        "w_out": dense_init(ks[5], w, d),
+        "mlp": {
+            "w_gate": dense_init(ks[6], d, cfg.d_ff),
+            "w_up": dense_init(jax.random.fold_in(key, 7), d, cfg.d_ff),
+            "w_down": dense_init(jax.random.fold_in(key, 8), cfg.d_ff, d),
+        },
+    }
+
+
+_C_RGLRU = 8.0
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d.  x: (B,T,W); w: (K,W).  conv_state: (B,K-1,W)."""
+    kw = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+        for i in range(kw)
+    )
+    new_state = xp[:, -(kw - 1):] if kw > 1 else conv_state
+    return out + b.astype(x.dtype), new_state
+
+
+def rglru_scan(params, u, h0):
+    """RG-LRU recurrence.  u: (B,T,W) conv output; h0: (B,W) f32."""
+    r = jax.nn.sigmoid(mp_dot(u, params["w_gate_r"], policy="fp32"))
+    i = jax.nn.sigmoid(mp_dot(u, params["w_gate_i"], policy="fp32"))
+    log_a = -_C_RGLRU * jax.nn.softplus(params["lambda_p"])[None, None] * \
+        r.astype(jnp.float32)                                    # (B,T,W) <= 0
+    a = jnp.exp(log_a)
+    gated = (i.astype(jnp.float32) * u.astype(jnp.float32))
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + gx_t
+        return h, h
+
+    xs = (a.transpose(1, 0, 2), (scale * gated).transpose(1, 0, 2))
+    h_last, hs = _chunk_scan(step, h0, xs, CHUNK)
+    return hs.transpose(1, 0, 2).astype(u.dtype), h_last
+
+
+def rglru_fwd(params, x, ctx):
+    cfg, policy = ctx["cfg"], ctx["policy"]
+    b, t, d = x.shape
+    w = cfg.lru_width or d
+    h = rmsnorm(x, params["ln1"]["scale"])
+    # gate branch
+    y = jax.nn.gelu(mp_dot(h, params["w_y"], policy=policy).astype(jnp.float32))
+    # recurrent branch
+    u = mp_dot(h, params["w_x"], policy=policy)
+    u, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"])
+    hs, h_last = rglru_scan(params, u, jnp.zeros((b, w), jnp.float32))
+    o = mp_dot(hs * y.astype(hs.dtype), params["w_out"], policy=policy)
+    x = x + o
+    from repro.models.layers import swiglu_mlp  # local import to avoid cycle
+    x = x + swiglu_mlp(params["mlp"], rmsnorm(x, params["ln2"]["scale"]), policy)
+    cache = None
+    if ctx.get("collect_cache"):
+        dt = ctx.get("cache_dtype", jnp.bfloat16)
+        cache = {"h": h_last, "conv": conv_state.astype(dt)}
+    return x, jnp.float32(0.0), cache
+
+
+def rglru_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(params, x, cache, ctx):
+    cfg, policy = ctx["cfg"], ctx["policy"]
+    h = rmsnorm(x, params["ln1"]["scale"])
+    y = jax.nn.gelu(mp_dot(h, params["w_y"], policy=policy).astype(jnp.float32))
+    u = mp_dot(h, params["w_x"], policy=policy)
+    u, conv = _causal_conv(u, params["conv_w"], params["conv_b"],
+                           cache["conv"].astype(u.dtype))
+    hs, h_last = rglru_scan(params, u, cache["h"])
+    o = mp_dot(hs * y.astype(hs.dtype), params["w_out"], policy=policy)
+    x = x + o
+    from repro.models.layers import swiglu_mlp
+    x = x + swiglu_mlp(params["mlp"], rmsnorm(x, params["ln2"]["scale"]), policy)
+    return x, {"h": h_last, "conv": conv.astype(cache["conv"].dtype)}

@@ -1,0 +1,136 @@
+"""Training controller: jit'd step + data pipeline + checkpointing + the
+fault-tolerance contract (resume, straggler detection, elastic re-mesh
+hooks).  Runs unsharded on one device or sharded under a mesh."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointing import Checkpointer
+from repro.data.pipeline import SyntheticLM
+from repro.distributed import act
+from repro.distributed import sharding as sh
+from repro.distributed.fault_tolerance import StragglerDetector
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    microbatches: int = 1
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, model, shape, tcfg: TrainerConfig, mesh=None,
+                 seed: int = 0):
+        self.model = model
+        self.cfg = model.cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        extra = {}
+        if self.cfg.family == "vlm":
+            extra["image_embeds"] = ((self.cfg.n_image_tokens,
+                                      self.cfg.d_model), "float32")
+        if self.cfg.family == "audio":
+            extra["audio_embeds"] = ((self.cfg.encoder_seq,
+                                      self.cfg.d_model), "float32")
+        self.pipeline = SyntheticLM(self.cfg.vocab, shape.global_batch,
+                                    shape.seq_len, seed=seed,
+                                    extra_specs=extra)
+        self.step_fn = make_train_step(model, tcfg.opt,
+                                       microbatches=tcfg.microbatches,
+                                       total_steps=tcfg.steps)
+        self.ckpt = (Checkpointer(tcfg.checkpoint_dir)
+                     if tcfg.checkpoint_dir else None)
+        self.detector = StragglerDetector()
+        self.metrics_log = []
+
+        if mesh is not None:
+            params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+            p_shard = sh.params_shardings(params_shape, self.cfg, mesh)
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            opt_shard = type(opt_shape)(step=sh.replicated(mesh),
+                                        m=p_shard, v=p_shard)
+            self._jit = jax.jit(self.step_fn,
+                                in_shardings=(p_shard, opt_shard, None),
+                                out_shardings=(p_shard, opt_shard, None),
+                                donate_argnums=(0, 1))
+            self._p_shard = p_shard
+            self._opt_shard = opt_shard
+        else:
+            self._jit = jax.jit(self.step_fn, donate_argnums=(0, 1))
+            self._p_shard = self._opt_shard = None
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        ctx = act.use_mesh(self.mesh) if self.mesh is not None else _null()
+        with ctx:
+            params = self.model.init(jax.random.PRNGKey(seed))
+            if self._p_shard is not None:
+                params = jax.tree_util.tree_map(jax.device_put, params,
+                                                self._p_shard)
+            opt = adamw_init(params)
+        return params, opt
+
+    def save(self, step: int, params, opt, blocking=True):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(step, {"params": params, "opt": opt},
+                       extra={"pipeline": self.pipeline.snapshot()},
+                       blocking=blocking)
+
+    def restore(self, params_like, opt_like, step: Optional[int] = None):
+        tree, manifest = self.ckpt.restore(
+            {"params": params_like, "opt": opt_like}, step=step,
+            target_shardings=(None if self._p_shard is None else
+                              {"params": self._p_shard,
+                               "opt": self._opt_shard}))
+        self.pipeline.restore(manifest["extra"]["pipeline"])
+        return tree["params"], tree["opt"], manifest["step"]
+
+    # -- loop ----------------------------------------------------------------
+
+    def run(self, params=None, opt=None, start_step: int = 0):
+        if params is None:
+            params, opt = self.init_state()
+        ctx = act.use_mesh(self.mesh) if self.mesh is not None else _null()
+        with ctx:
+            for step in range(start_step, self.tcfg.steps):
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.pipeline.next_batch().items()}
+                t0 = time.time()
+                params, opt, metrics = self._jit(params, opt, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                verdict = self.detector.observe(dt)
+                row = {"step": step, "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "time_s": dt, "straggler": verdict}
+                self.metrics_log.append(row)
+                if step % self.tcfg.log_every == 0:
+                    print(f"[train] step={step} loss={row['loss']:.4f} "
+                          f"gnorm={row['grad_norm']:.3f} {dt*1e3:.0f}ms",
+                          flush=True)
+                if self.ckpt and (step + 1) % self.tcfg.checkpoint_every == 0:
+                    self.save(step + 1, params, opt, blocking=False)
+        if self.ckpt:
+            self.ckpt.wait()
+        return params, opt
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run's 512-device trick is
+# strictly scoped to launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,41 @@
+"""Hypothesis property tests for the MPGEMM kernel itself: random shapes,
+dtypes, and transposes against the oracle, in interpret mode."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.mpgemm import mpgemm_pallas
+from repro.kernels.ref import mpgemm_ref
+
+dims = st.integers(min_value=1, max_value=300)
+
+
+@hp.given(m=dims, n=dims, k=dims,
+          dtype=st.sampled_from(["float32", "bfloat16"]),
+          trans_a=st.booleans(), trans_b=st.booleans(),
+          seed=st.integers(0, 2 ** 16))
+@hp.settings(max_examples=25, deadline=None)
+def test_mpgemm_random_shapes(m, n, k, dtype, trans_a, trans_b, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((k, m) if trans_a else (m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((n, k) if trans_b else (k, n)), dtype)
+    out = mpgemm_pallas(a, b, trans_a=trans_a, trans_b=trans_b,
+                        interpret=True)
+    ref = mpgemm_ref(a, b, trans_a=trans_a, trans_b=trans_b)
+    tol = (1e-5 if dtype == "float32" else 4e-2) * max(1.0, k / 64)
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64),
+                               atol=tol, rtol=2e-2)
+
+
+@hp.given(m=dims, n=dims, k=dims, seed=st.integers(0, 2 ** 16))
+@hp.settings(max_examples=15, deadline=None)
+def test_mpgemm_int8_random_shapes(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-127, 127, (m, k)), "int8")
+    b = jnp.asarray(rng.integers(-127, 127, (k, n)), "int8")
+    out = mpgemm_pallas(a, b, interpret=True)
+    ref = mpgemm_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
