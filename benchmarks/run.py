@@ -11,8 +11,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks import (
-        bench_breakdown, bench_gemm_workloads, bench_irregular, bench_loads,
-        bench_mixed_precision, bench_tiles, roofline_report,
+        bench_autotune, bench_breakdown, bench_gemm_workloads,
+        bench_irregular, bench_loads, bench_mixed_precision, bench_tiles,
+        roofline_report,
     )
     bench_tiles.run()                      # paper Fig. 2
     bench_loads.run()                      # paper Fig. 3
@@ -22,6 +23,7 @@ def main() -> None:
     bench_mixed_precision.run()            # paper Fig. 14
     bench_breakdown.run()                  # paper Fig. 15
     roofline_report.run()                  # beyond-paper: dry-run roofline
+    bench_autotune.run()                   # beyond-paper: Sec. III closed loop
 
 
 if __name__ == "__main__":

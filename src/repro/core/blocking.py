@@ -25,6 +25,12 @@ This is the TPU adaptation of the paper's cache-aware partitioning model
 
 The planner emits a :class:`GemmPlan` consumed by ``kernels/mpgemm.py`` (as
 BlockSpec shapes) and by benchmarks (as the predicted-traffic model).
+
+The analytic model is deliberately open-loop — it never sees a measurement.
+``repro.tuning`` closes the loop: :func:`enumerate_block_lattice` exposes the
+exact candidate lattice the planner searches, :func:`plan_with_blocks` prices
+an arbitrary lattice point, and :func:`plan_to_dict` / :func:`plan_from_dict`
+let tuned plans persist across processes (tuning/plan_cache.py).
 """
 from __future__ import annotations
 
@@ -84,6 +90,69 @@ class GemmPlan:
             f"grid={self.grid} vmem={self.vmem_bytes/2**20:.2f}MiB "
             f"CMR={self.cmr:.1f} {self.notes}"
         )
+
+
+def _resolve_dtypes(a_dtype, b_dtype=None, out_dtype=None, acc_dtype=None):
+    """Canonical (a, b, out, acc) dtype strings under the policy defaults.
+
+    int inputs accumulate in int32 and default to an int32 output; float
+    inputs accumulate in f32 and default to the input dtype out (the MXU's
+    native pairs, paper Section V).
+    """
+    b_dtype = b_dtype or a_dtype
+    out_dtype = out_dtype or ("int32" if jnp.dtype(a_dtype).kind == "i" else a_dtype)
+    if acc_dtype is None:
+        acc_dtype = "int32" if jnp.dtype(a_dtype).kind == "i" else "float32"
+    return (
+        str(jnp.dtype(a_dtype)), str(jnp.dtype(b_dtype)),
+        str(jnp.dtype(out_dtype)), str(jnp.dtype(acc_dtype)),
+    )
+
+
+def enumerate_block_lattice(
+    m: int,
+    n: int,
+    k: int,
+    a_dtype="float32",
+    b_dtype=None,
+    *,
+    hw: HardwareSpec = DEFAULT_HW,
+    max_block: int = 2048,
+) -> Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...]]:
+    """The hardware-aligned candidate lattice (bm, bn, bk) the planner searches.
+
+    Each axis is a power-of-two ladder from the granularity floor (sublane /
+    lane / DMA-row-width alignment — the paper's P2 wide-load constraint) up
+    to ``max_block``, plus an exact-fit candidate for small dims (the edge
+    micro-kernel choice).  ``repro.tuning.microbench`` sweeps this same
+    lattice so measured plans can never leave the space the kernel supports.
+    """
+    a_dtype, b_dtype, _, _ = _resolve_dtypes(a_dtype, b_dtype)
+    ab = _dtype_bytes(a_dtype)
+    bb = _dtype_bytes(b_dtype)
+    lane = hw.lane
+    min_bk = max(lane, _round_up(hw.min_dma_row_bytes // ab, lane))
+    min_bn = max(lane, _round_up(hw.min_dma_row_bytes // bb, lane))
+    sub_a = hw.sublane(ab)
+    sub_b = hw.sublane(bb)
+
+    def _cands(minimum: int, align: int, dim: int):
+        out = []
+        v = minimum
+        while v <= min(max_block, _round_up(dim, align)):
+            out.append(v)
+            v *= 2
+        exact = _round_up(dim, align)
+        if exact <= max_block and exact not in out:
+            out.append(exact)
+        return sorted(set(out))
+
+    bm_cands = _cands(max(sub_a, min(128, _round_up(m, sub_a))), sub_a, m)
+    bm_cands = [c for c in bm_cands if c <= _round_up(m, sub_a)]
+    bn_cands = [c for c in _cands(min_bn, lane, n) if c <= _round_up(n, lane)]
+    bk_align = max(lane, sub_b)
+    bk_cands = [c for c in _cands(min_bk, bk_align, k) if c <= _round_up(k, bk_align)]
+    return tuple(bm_cands), tuple(bn_cands), tuple(bk_cands)
 
 
 def modeled_traffic_bytes(
@@ -147,10 +216,9 @@ def plan_gemm(
     constraint (paper: TLB eq (2); here: DMA row width), then maximize CMR
     subject to the capacity constraint (paper: 8 MB L2; here: VMEM budget).
     """
-    b_dtype = b_dtype or a_dtype
-    out_dtype = out_dtype or ("int32" if jnp.dtype(a_dtype).kind == "i" else a_dtype)
-    if acc_dtype is None:
-        acc_dtype = "int32" if jnp.dtype(a_dtype).kind == "i" else "float32"
+    a_dtype, b_dtype, out_dtype, acc_dtype = _resolve_dtypes(
+        a_dtype, b_dtype, out_dtype, acc_dtype
+    )
     ab = _dtype_bytes(a_dtype)
     bb = _dtype_bytes(b_dtype)
     ob = _dtype_bytes(out_dtype)
@@ -158,33 +226,15 @@ def plan_gemm(
 
     budget = int(hw.vmem_bytes * vmem_budget_frac)
     lane = hw.lane
-
-    # --- granularity floors (paper P2: four-Z-register loads) -------------
-    # Minor-dim spans must cover >= min_dma_row_bytes of contiguous data.
-    min_bk = max(lane, _round_up(hw.min_dma_row_bytes // ab, lane))   # A minor
-    min_bn = max(lane, _round_up(hw.min_dma_row_bytes // bb, lane))   # B minor
     sub_a = hw.sublane(ab)   # A/acc second-minor granularity
     sub_b = hw.sublane(bb)   # B second-minor granularity (constrains bk)
-
-    # --- candidate lattices -------------------------------------------------
-    def _cands(minimum: int, align: int, dim: int):
-        out = []
-        v = minimum
-        while v <= min(max_block, _round_up(dim, align)):
-            out.append(v)
-            v *= 2
-        # Exact-fit candidate for small dims (edge micro-kernel selection).
-        exact = _round_up(dim, align)
-        if exact <= max_block and exact not in out:
-            out.append(exact)
-        return sorted(set(out))
-
-    bm_cands = _cands(max(sub_a, min(128, _round_up(m, sub_a))), sub_a, m)
-    # bm prefers MXU multiples when m is large.
-    bm_cands = [c for c in bm_cands if c <= _round_up(m, sub_a)]
-    bn_cands = [c for c in _cands(min_bn, lane, n) if c <= _round_up(n, lane)]
     bk_align = max(lane, sub_b)
-    bk_cands = [c for c in _cands(min_bk, bk_align, k) if c <= _round_up(k, bk_align)]
+
+    # Granularity floors (paper P2: four-Z-register loads) are baked into the
+    # lattice: minor-dim spans cover >= min_dma_row_bytes of contiguous data.
+    bm_cands, bn_cands, bk_cands = enumerate_block_lattice(
+        m, n, k, a_dtype, b_dtype, hw=hw, max_block=max_block
+    )
 
     best = None
     for bm in bm_cands:
@@ -206,29 +256,81 @@ def plan_gemm(
     if best is None:
         # Degenerate fallback: smallest aligned blocks.
         bm, bn, bk = sub_a, lane, bk_align
-        ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta)
-        traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta)
-        cmr = 2 * m * n * k / max(1, traffic)
     else:
-        bm, bn, bk, ws, traffic, cmr = best[1]
+        bm, bn, bk = best[1][:3]
+    return plan_with_blocks(
+        m, n, k, bm, bn, bk, a_dtype, b_dtype, out_dtype, acc_dtype,
+        beta=beta, hw=hw,
+    )
+
+
+def plan_with_blocks(
+    m: int,
+    n: int,
+    k: int,
+    bm: int,
+    bn: int,
+    bk: int,
+    a_dtype="float32",
+    b_dtype=None,
+    out_dtype=None,
+    acc_dtype=None,
+    *,
+    beta: float = 0.0,
+    hw: HardwareSpec = DEFAULT_HW,
+    notes: str = "",
+) -> GemmPlan:
+    """Price one lattice point: a :class:`GemmPlan` for *forced* (bm, bn, bk).
+
+    Blocks are clamped to the problem's aligned extent and all derived model
+    terms (grid, VMEM working set, HBM traffic, CMR, K-edge predication) are
+    recomputed, so a tuned plan carries the same metadata as an analytic one.
+    The autotuner (repro.tuning) is the main caller.
+    """
+    a_dtype, b_dtype, out_dtype, acc_dtype = _resolve_dtypes(
+        a_dtype, b_dtype, out_dtype, acc_dtype
+    )
+    ab = _dtype_bytes(a_dtype)
+    bb = _dtype_bytes(b_dtype)
+    ob = _dtype_bytes(out_dtype)
+    accb = _dtype_bytes(acc_dtype)
+    sub_a = hw.sublane(ab)
+    bk_align = max(hw.lane, hw.sublane(bb))
 
     bm = min(bm, _round_up(m, sub_a))
-    bn = min(bn, _round_up(n, lane))
+    bn = min(bn, _round_up(n, hw.lane))
     bk = min(bk, _round_up(k, bk_align))
+    ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta)
+    traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta)
     grid = (math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk))
-    notes = []
+    auto_notes = [notes] if notes else []
     if m % bm or n % bn:
-        notes.append("edge-mn")
+        auto_notes.append("edge-mn")
     k_rem = k % bk
     if k_rem:
-        notes.append("edge-k(predicated)")
+        auto_notes.append("edge-k(predicated)")
     return GemmPlan(
         m=m, n=n, k=k, bm=bm, bn=bn, bk=bk,
-        a_dtype=str(jnp.dtype(a_dtype)), b_dtype=str(jnp.dtype(b_dtype)),
-        out_dtype=str(jnp.dtype(out_dtype)), acc_dtype=str(jnp.dtype(acc_dtype)),
+        a_dtype=a_dtype, b_dtype=b_dtype,
+        out_dtype=out_dtype, acc_dtype=acc_dtype,
         grid=grid, vmem_bytes=ws, hbm_bytes=traffic, flops=2 * m * n * k,
-        cmr=cmr, k_rem=k_rem, notes=" ".join(notes),
+        cmr=2 * m * n * k / max(1, traffic), k_rem=k_rem,
+        notes=" ".join(auto_notes),
     )
+
+
+def plan_to_dict(plan: GemmPlan) -> dict:
+    """JSON-safe dict form of a plan (tuning/plan_cache.py wire format)."""
+    d = dataclasses.asdict(plan)
+    d["grid"] = list(plan.grid)
+    return d
+
+
+def plan_from_dict(d: dict) -> GemmPlan:
+    """Inverse of :func:`plan_to_dict`."""
+    d = dict(d)
+    d["grid"] = tuple(d["grid"])
+    return GemmPlan(**d)
 
 
 def naive_plan(m: int, n: int, k: int, a_dtype="float32", **kw) -> GemmPlan:

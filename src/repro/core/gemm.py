@@ -4,8 +4,11 @@ Every matmul in every model in this framework flows through here.  The op:
 
 * applies a :class:`PrecisionPolicy` (fp32 / bf16->f32 / dynamic int8->i32 —
   the paper's Section V multi-precision surface),
+* consults the tuned-plan cache (repro.tuning) so empirically characterized
+  block shapes transparently replace the analytic planner's on a hit,
 * dispatches to the Pallas MPGEMM kernel (TPU / interpret) or to an XLA
-  ``dot_general`` with identical precision semantics (CPU dry-run),
+  ``dot_general`` with identical precision semantics (CPU dry-run; XLA
+  picks its own tiling, so plans only affect the kernel backends),
 * implements its own VJP whose backward GEMMs use the **fused-transpose**
   kernel variants (dx = dy · Wᵀ, dW = Xᵀ · dy) — the training-time payoff of
   the paper's on-the-fly transposition: no transposed weight copies are ever
@@ -28,6 +31,24 @@ def _dims(trans_a: bool, trans_b: bool):
     ca = 0 if trans_a else 1
     cb = 1 if trans_b else 0
     return (((ca,), (cb,)), ((), ()))
+
+
+def _cached_plan(x, w, trans_a: bool, trans_b: bool, out_dtype):
+    """Tuned plan for this GEMM instance from the global plan cache, or None.
+
+    Resolved at trace time (shapes are static under jit), so a cache hit
+    changes only the BlockSpecs baked into the lowered kernel — numerics are
+    plan-independent.  Miss -> None -> mpgemm_pallas falls back to the
+    analytic planner.  Lazy import: core must not hard-depend on tuning.
+    """
+    from repro.tuning.plan_cache import lookup_plan
+    m = x.shape[1] if trans_a else x.shape[0]
+    k = x.shape[0] if trans_a else x.shape[1]
+    n = w.shape[0] if trans_b else w.shape[1]
+    return lookup_plan(
+        m, n, k, x.dtype, w.dtype, out_dtype,
+        trans_a=trans_a, trans_b=trans_b,
+    )
 
 
 def _matmul_2d(
@@ -54,6 +75,7 @@ def _matmul_2d(
             return mpgemm_pallas(
                 xq, wq, trans_a=trans_a, trans_b=trans_b, scale=scale,
                 bias=bias, out_dtype=out_dtype,
+                plan=_cached_plan(xq, wq, trans_a, trans_b, out_dtype),
                 interpret=(backend == "interpret"),
             )
         acc = jax.lax.dot_general(
@@ -76,7 +98,9 @@ def _matmul_2d(
     if backend in ("pallas", "interpret"):
         return mpgemm_pallas(
             xc, wc, trans_a=trans_a, trans_b=trans_b, bias=bias,
-            out_dtype=out_dtype, interpret=(backend == "interpret"),
+            out_dtype=out_dtype,
+            plan=_cached_plan(xc, wc, trans_a, trans_b, out_dtype),
+            interpret=(backend == "interpret"),
         )
     acc = jax.lax.dot_general(
         xc, wc, _dims(trans_a, trans_b),

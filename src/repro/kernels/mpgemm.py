@@ -158,6 +158,15 @@ def mpgemm_pallas(
         raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
     k = ka
     if plan is None:
+        # Closed-loop planning: a tuned plan from the persistent cache wins
+        # over the analytic model (repro.tuning populates it; lazy import
+        # keeps the kernel layer free of a hard tuning dependency).
+        from repro.tuning.plan_cache import lookup_plan
+        plan = lookup_plan(
+            m, n, k, a.dtype, b.dtype, out_dtype,
+            trans_a=trans_a, trans_b=trans_b, beta=beta,
+        )
+    if plan is None:
         plan = plan_gemm(
             m, n, k, a.dtype, b.dtype, out_dtype=out_dtype, beta=beta
         )

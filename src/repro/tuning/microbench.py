@@ -1,0 +1,383 @@
+"""Empirical characterization of the MPGEMM kernel — the paper's Section III.
+
+The paper's methodology is *measure first, then model*: sweep load widths,
+tile counts, and blocking factors on real hardware, distill the sweeps into
+guidelines, and only then fix the kernel design.  This module is that
+characterization loop for the TPU port:
+
+* :func:`sweep` times ``mpgemm_pallas`` over a **bounded lattice** of
+  ``(bm, bn, bk)`` block shapes seeded by the analytic optimum from
+  ``plan_gemm`` — the discrete neighborhood search "Hello SME!" (Remke &
+  Breuer 2024) showed recovers performance a fixed analytic model leaves
+  behind.
+* :func:`sweep_axis` is the 1-D form (vary ``bk`` with ``bm/bn`` pinned,
+  etc.) mirroring the paper's load-width and tile-count sweeps.
+* :func:`tune_gemm` runs a sweep, picks the winner, and persists it into a
+  :class:`~repro.tuning.plan_cache.PlanCache` so every later ``mp_dot`` on
+  the same GEMM instance transparently picks it up.
+
+Measurement modes
+-----------------
+``compiled``   real ``pallas_call`` lowering — the numbers that matter;
+               requires a TPU runtime.
+``interpret``  Pallas interpret mode on CPU.  Wall time is dominated by the
+               Python grid interpreter, so it is a *structural* signal
+               (pipeline/grid overheads), not MXU throughput.
+``modeled``    no execution: candidates are scored by the roofline time of
+               their modeled HBM traffic.  Deterministic; the CPU-container
+               default.
+``auto``       ``compiled`` on TPU, else ``modeled``.
+
+Each measurement records both the wall clock *and* the model prediction, so
+the characterization report (tuning/report.py) can show where the analytic
+model and the hardware disagree — the paper's Fig. 10/11 story.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import (
+    GemmPlan, enumerate_block_lattice, plan_gemm, plan_with_blocks,
+    vmem_working_set,
+)
+from repro.core.constants import DEFAULT_HW, HardwareSpec
+from repro.kernels.mpgemm import mpgemm_pallas
+from repro.tuning.plan_cache import PlanCache, get_plan_cache, make_key
+
+MODES = ("auto", "compiled", "interpret", "modeled")
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One lattice point: the plan tried and what it cost."""
+
+    plan: GemmPlan
+    mode: str            # how wall_us was obtained (compiled/interpret/modeled)
+    wall_us: float       # measured wall clock (== modeled_us in modeled mode)
+    modeled_us: float    # roofline prediction from the plan's traffic model
+
+    @property
+    def blocks(self) -> Tuple[int, int, int]:
+        return (self.plan.bm, self.plan.bn, self.plan.bk)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of :func:`tune_gemm` for one GEMM instance."""
+
+    key: str
+    analytic: Measurement          # the planner's open-loop choice
+    best: Measurement              # the sweep winner (may equal analytic)
+    measurements: Tuple[Measurement, ...]
+
+    @property
+    def speedup(self) -> float:
+        """Measured analytic-time / best-time (>= 1.0 by construction)."""
+        return self.analytic.wall_us / max(self.best.wall_us, 1e-9)
+
+    @property
+    def tuned_differs(self) -> bool:
+        return self.best.blocks != self.analytic.blocks
+
+
+def _resolve_mode(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; valid: {MODES}")
+    if mode == "auto":
+        return "compiled" if jax.default_backend() == "tpu" else "modeled"
+    return mode
+
+
+def _modeled_us(plan: GemmPlan, hw: HardwareSpec) -> float:
+    if plan.a_dtype == "int8":
+        peak = hw.peak_ops_int8
+    elif plan.a_dtype in ("bfloat16", "float16"):
+        peak = hw.peak_flops_bf16
+    else:
+        peak = hw.peak_flops_fp32
+    return max(plan.flops / peak, plan.hbm_bytes / hw.hbm_bw) * 1e6
+
+
+def _operands(m: int, n: int, k: int, plan: GemmPlan,
+              trans_a: bool, trans_b: bool, seed: int = 0):
+    rng = np.random.default_rng(seed)
+
+    def _mk(shape, dtype):
+        if jnp.dtype(dtype).kind == "i":
+            return jnp.asarray(rng.integers(-127, 127, shape), dtype)
+        return jnp.asarray(rng.standard_normal(shape), dtype)
+
+    a = _mk((k, m) if trans_a else (m, k), plan.a_dtype)
+    b = _mk((n, k) if trans_b else (k, n), plan.b_dtype)
+    return a, b
+
+
+def measure_plan(
+    a: jax.Array,
+    b: jax.Array,
+    plan: GemmPlan,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    mode: str = "auto",
+    iters: int = 3,
+    warmup: int = 1,
+    hw: HardwareSpec = DEFAULT_HW,
+) -> Measurement:
+    """Time ``mpgemm_pallas`` under one forced plan (best-of-``iters``)."""
+    mode = _resolve_mode(mode)
+    modeled = _modeled_us(plan, hw)
+    if mode == "modeled":
+        return Measurement(plan=plan, mode=mode, wall_us=modeled,
+                           modeled_us=modeled)
+
+    def run():
+        return mpgemm_pallas(
+            a, b, trans_a=trans_a, trans_b=trans_b,
+            out_dtype=plan.out_dtype, plan=plan,
+            interpret=(mode == "interpret"),
+        )
+
+    for _ in range(warmup):
+        jax.block_until_ready(run())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return Measurement(plan=plan, mode=mode, wall_us=best * 1e6,
+                       modeled_us=modeled)
+
+
+def candidate_plans(
+    m: int,
+    n: int,
+    k: int,
+    a_dtype="float32",
+    b_dtype=None,
+    out_dtype=None,
+    *,
+    beta: float = 0.0,
+    hw: HardwareSpec = DEFAULT_HW,
+    radius: int = 1,
+    max_candidates: int = 24,
+    vmem_budget_frac: float = 0.75,
+) -> List[GemmPlan]:
+    """The bounded sweep lattice: analytic optimum ± ``radius`` ladder steps.
+
+    Candidates come from :func:`enumerate_block_lattice` (so they always
+    satisfy the kernel's alignment floors), are filtered by the VMEM budget
+    (paper eq (1)), deduplicated after clamping, and capped at
+    ``max_candidates`` nearest-to-seed points.  The analytic plan itself is
+    always candidate 0, which makes ``tune_gemm``'s speedup >= 1 by
+    construction.
+    """
+    seed_plan = plan_gemm(m, n, k, a_dtype, b_dtype, out_dtype,
+                          beta=beta, hw=hw)
+    bm_axis, bn_axis, bk_axis = enumerate_block_lattice(
+        m, n, k, a_dtype, b_dtype, hw=hw
+    )
+
+    def _window(axis: Sequence[int], center: int) -> List[int]:
+        if center in axis:
+            i = axis.index(center)
+        else:  # clamped seed; nearest lattice point
+            i = min(range(len(axis)), key=lambda j: abs(axis[j] - center))
+        lo, hi = max(0, i - radius), min(len(axis), i + radius + 1)
+        return list(axis[lo:hi])
+
+    combos = itertools.product(
+        _window(bm_axis, seed_plan.bm),
+        _window(bn_axis, seed_plan.bn),
+        _window(bk_axis, seed_plan.bk),
+    )
+    plans: List[GemmPlan] = [seed_plan]
+    seen = {(seed_plan.bm, seed_plan.bn, seed_plan.bk)}
+    budget = int(hw.vmem_bytes * vmem_budget_frac)
+    for bm, bn, bk in combos:
+        cand = plan_with_blocks(m, n, k, bm, bn, bk, a_dtype, b_dtype,
+                                out_dtype, beta=beta, hw=hw, notes="tuned")
+        blocks = (cand.bm, cand.bn, cand.bk)
+        if blocks in seen or cand.vmem_bytes > budget:
+            continue
+        seen.add(blocks)
+        plans.append(cand)
+    # Nearest-to-seed first keeps the sweep bounded AND centered.
+    anchor = (seed_plan.bm, seed_plan.bn, seed_plan.bk)
+    plans[1:] = sorted(
+        plans[1:],
+        key=lambda p: (abs(p.bm - anchor[0]) + abs(p.bn - anchor[1])
+                       + abs(p.bk - anchor[2])),
+    )
+    return plans[:max_candidates]
+
+
+def sweep(
+    m: int,
+    n: int,
+    k: int,
+    a_dtype="float32",
+    b_dtype=None,
+    out_dtype=None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    beta: float = 0.0,
+    mode: str = "auto",
+    radius: int = 1,
+    max_candidates: int = 24,
+    iters: int = 3,
+    warmup: int = 1,
+    hw: HardwareSpec = DEFAULT_HW,
+    seed: int = 0,
+) -> List[Measurement]:
+    """Measure every candidate plan for one GEMM instance.
+
+    Runnable on CPU (uses ``mode="modeled"`` resolution by default there)::
+
+        >>> from repro.tuning import sweep
+        >>> ms = sweep(256, 256, 512, "float32", mode="interpret",
+        ...            max_candidates=4, iters=1)
+        >>> sorted(ms, key=lambda m: m.wall_us)[0].blocks  # doctest: +SKIP
+        (256, 256, 512)
+    """
+    plans = candidate_plans(
+        m, n, k, a_dtype, b_dtype, out_dtype, beta=beta, hw=hw,
+        radius=radius, max_candidates=max_candidates,
+    )
+    resolved = _resolve_mode(mode)
+    if resolved == "modeled":
+        return [measure_plan(None, None, p, mode="modeled", hw=hw)
+                for p in plans]
+    a, b = _operands(m, n, k, plans[0], trans_a, trans_b, seed)
+    return [
+        measure_plan(a, b, p, trans_a=trans_a, trans_b=trans_b,
+                     mode=resolved, iters=iters, warmup=warmup, hw=hw)
+        for p in plans
+    ]
+
+
+def sweep_axis(
+    m: int,
+    n: int,
+    k: int,
+    axis: str,
+    a_dtype="float32",
+    *,
+    mode: str = "auto",
+    hw: HardwareSpec = DEFAULT_HW,
+    vmem_budget_frac: float = 0.75,
+    iters: int = 3,
+    warmup: int = 1,
+    seed: int = 0,
+) -> List[Measurement]:
+    """1-D characterization sweep: vary one block axis, pin the other two.
+
+    ``axis="bk"`` is the paper's load-width sweep (bk sets the contiguous
+    bytes per DMA row of A); ``axis="bm"``/``"bn"`` are the tile-count
+    sweeps (they set how many accumulator tiles the grid walks).
+    """
+    if axis not in ("bm", "bn", "bk"):
+        raise ValueError(f"axis must be bm|bn|bk, got {axis!r}")
+    seed_plan = plan_gemm(m, n, k, a_dtype, hw=hw)
+    axes = dict(zip(("bm", "bn", "bk"),
+                    enumerate_block_lattice(m, n, k, a_dtype, hw=hw)))
+    resolved = _resolve_mode(mode)
+    out = []
+    a = b = None
+    if resolved != "modeled":
+        a, b = _operands(m, n, k, seed_plan, False, False, seed)
+    budget = int(hw.vmem_bytes * vmem_budget_frac)
+    for v in axes[axis]:
+        blocks = {ax: (v if ax == axis else getattr(seed_plan, ax))
+                  for ax in ("bm", "bn", "bk")}
+        plan = plan_with_blocks(m, n, k, blocks["bm"], blocks["bn"],
+                                blocks["bk"], a_dtype, hw=hw, notes="sweep")
+        if plan.vmem_bytes > budget:
+            continue
+        if resolved == "modeled":
+            out.append(measure_plan(None, None, plan, mode="modeled", hw=hw))
+        else:
+            out.append(measure_plan(a, b, plan, mode=resolved, hw=hw,
+                                    iters=iters, warmup=warmup))
+    return out
+
+
+def tune_gemm(
+    m: int,
+    n: int,
+    k: int,
+    a_dtype="float32",
+    b_dtype=None,
+    out_dtype=None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    beta: float = 0.0,
+    mode: str = "auto",
+    radius: int = 1,
+    max_candidates: int = 24,
+    iters: int = 3,
+    warmup: int = 1,
+    hw: HardwareSpec = DEFAULT_HW,
+    cache: Optional[PlanCache] = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep, pick the measured winner, persist it to the plan cache.
+
+    ``cache=None`` uses the process-global cache, so the very next
+    ``mp_dot`` on this shape consumes the tuned plan — plans resolve at
+    trace time, so functions jit-compiled *before* tuning keep their old
+    executable until ``jax.clear_caches()`` (see docs/autotuning.md).
+    Pass an explicit :class:`PlanCache` for isolated runs.  ``save=True``
+    also flushes an on-disk cache.
+
+    .. warning:: the entry is stored under ``hw.name``, but the read path
+       (``mp_dot`` / ``mpgemm_pallas``) always keys with ``DEFAULT_HW`` —
+       plans tuned for a non-default :class:`HardwareSpec` are only served
+       where that spec IS the default (i.e. on the machine they describe).
+       Pass ``plan=`` explicitly to force one elsewhere.
+
+    Runnable on CPU::
+
+        >>> from repro.tuning import PlanCache, tune_gemm
+        >>> cache = PlanCache(None)            # in-memory
+        >>> r = tune_gemm(128, 128, 256, "float32", mode="interpret",
+        ...               max_candidates=3, iters=1, cache=cache)
+        >>> r.speedup >= 1.0 and len(cache) == 1
+        True
+    """
+    measurements = sweep(
+        m, n, k, a_dtype, b_dtype, out_dtype,
+        trans_a=trans_a, trans_b=trans_b, beta=beta, mode=mode,
+        radius=radius, max_candidates=max_candidates,
+        iters=iters, warmup=warmup, hw=hw, seed=seed,
+    )
+    analytic = measurements[0]     # candidate_plans puts the seed first
+    best = min(measurements, key=lambda mm: mm.wall_us)
+    key = make_key(m, n, k, a_dtype, b_dtype, out_dtype,
+                   trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw)
+    if cache is None:
+        cache = get_plan_cache()
+    if cache is not None:
+        cache.put(key, best.plan, meta={
+            "mode": best.mode,
+            "wall_us": best.wall_us,
+            "modeled_us": best.modeled_us,
+            "analytic_wall_us": analytic.wall_us,
+            "analytic_blocks": list(analytic.blocks),
+            "candidates": len(measurements),
+        })
+        if save:
+            cache.save()
+    return TuneResult(key=key, analytic=analytic, best=best,
+                      measurements=tuple(measurements))

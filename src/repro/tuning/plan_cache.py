@@ -1,0 +1,295 @@
+"""Persistent GEMM plan cache — the read side of the closed planning loop.
+
+The analytic planner (core/blocking.py) is open-loop: it predicts, it never
+measures.  This module stores plans that *have* been measured (by
+tuning/microbench.py) and serves them back to every GEMM in the framework:
+
+    mp_dot / mpgemm_pallas
+        └─ lookup_plan(...)      — hit  -> tuned GemmPlan (this module)
+                                 — miss -> plan_gemm(...) analytic fallback
+
+Keying.  A plan is valid for exactly one logical GEMM instance:
+``(m, n, k, a_dtype, b_dtype, out_dtype, trans_a, trans_b, beta!=0, hw)``.
+Transpose flags are part of the key because on-the-fly transposition changes
+the stored-layout access pattern (and therefore the measured optimum) even
+though the analytic model is transpose-blind.  The hardware name is part of
+the key so a cache tuned on one TPU generation is never misapplied to
+another.
+
+Persistence.  JSON on disk, written atomically (tmp + rename).  The on-disk
+schema is versioned; unknown versions are ignored rather than crashed on.
+Process-global behavior is controlled by ``REPRO_PLAN_CACHE``:
+
+    unset          — in-memory global cache (tune_gemm results are picked up
+                     by later matmuls in the same process; nothing persists)
+    <path>.json    — persistent cache at that path, loaded lazily
+    "off" / "0"    — lookups disabled entirely (pure analytic planning)
+
+See docs/autotuning.md for the end-to-end workflow.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.core.blocking import (
+    GemmPlan, _resolve_dtypes, plan_from_dict, plan_to_dict,
+)
+from repro.core.constants import DEFAULT_HW, HardwareSpec
+
+_SCHEMA_VERSION = 1
+
+_OFF_VALUES = ("off", "0", "none", "disabled")
+
+
+@contextlib.contextmanager
+def _file_lock(path: Path):
+    """Advisory cross-process lock guarding read-merge-rename on ``path``.
+
+    A sibling ``.lock`` file is flocked (never the data file itself — that
+    gets atomically replaced, which would orphan the lock).  On platforms
+    without fcntl the lock degrades to a no-op: saves stay atomic/torn-free,
+    merely losing the concurrent-merge guarantee.
+    """
+    try:
+        import fcntl
+    except ImportError:  # pragma: no cover - non-POSIX
+        yield
+        return
+    lock_path = path.with_name(path.name + ".lock")
+    with open(lock_path, "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
+
+
+def make_key(
+    m: int,
+    n: int,
+    k: int,
+    a_dtype,
+    b_dtype=None,
+    out_dtype=None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    beta: float = 0.0,
+    hw: HardwareSpec = DEFAULT_HW,
+) -> str:
+    """Canonical cache key for one logical GEMM instance.
+
+    Stable across processes and python versions (plain string, no hashing),
+    so on-disk caches remain valid as long as the schema version holds.
+    """
+    a_dtype, b_dtype, out_dtype, _ = _resolve_dtypes(a_dtype, b_dtype, out_dtype)
+    return (
+        f"m{m}n{n}k{k}"
+        f"|a={a_dtype}|b={b_dtype}|out={out_dtype}"
+        f"|ta={int(trans_a)}|tb={int(trans_b)}|beta={int(beta != 0.0)}"
+        f"|hw={hw.name}"
+    )
+
+
+class PlanCache:
+    """JSON-on-disk (or in-memory) map from GEMM key -> tuned :class:`GemmPlan`.
+
+    Thread-safe.  ``path=None`` keeps the cache purely in memory — useful as
+    the process-global default and in tests.
+
+    Example (runnable on CPU)::
+
+        >>> from repro.tuning import PlanCache, make_key
+        >>> from repro.core.blocking import plan_gemm
+        >>> cache = PlanCache("/tmp/plans.json")
+        >>> key = make_key(256, 256, 256, "float32")
+        >>> cache.put(key, plan_gemm(256, 256, 256, "float32"),
+        ...           meta={"wall_us": 12.3})
+        >>> cache.save()
+        >>> PlanCache("/tmp/plans.json").get(key).bm
+        256
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = Path(path) if path is not None else None
+        self._lock = threading.RLock()
+        self._entries: Dict[str, dict] = {}
+        self._loaded = False
+        self._purge_on_save = False
+
+    # -- persistence -------------------------------------------------------
+
+    def _disk_entries(self) -> Dict[str, dict]:
+        """Current on-disk entries; {} for missing/corrupt/foreign files."""
+        if self.path is None or not self.path.exists():
+            return {}
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return {}  # corrupt/unreadable cache == empty cache, never a crash
+        if not isinstance(raw, dict) or raw.get("version") != _SCHEMA_VERSION:
+            return {}
+        entries = raw.get("entries")
+        return dict(entries) if isinstance(entries, dict) else {}
+
+    def _ensure_loaded(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        self._entries = self._disk_entries()
+
+    def save(self) -> None:
+        """Atomically persist to ``self.path`` (no-op for in-memory caches).
+
+        Merges with entries other processes wrote since we loaded (ours win
+        on key collision), so concurrent tuners sharing one path lose
+        nothing — the atomic rename prevents torn files, the merge prevents
+        lost updates.
+        """
+        if self.path is None:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self._lock, _file_lock(self.path):
+            self._ensure_loaded()
+            if self._purge_on_save:
+                # clear() was called: this save is an intentional reset, so
+                # do NOT resurrect concurrent writers' entries from disk.
+                self._purge_on_save = False
+            else:
+                merged = dict(self._disk_entries())
+                merged.update(self._entries)
+                self._entries = merged
+            payload = json.dumps(
+                {"version": _SCHEMA_VERSION, "entries": self._entries},
+                indent=1, sort_keys=True,
+            )
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(payload)
+                os.replace(tmp, self.path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+
+    # -- map interface -----------------------------------------------------
+
+    def get(self, key: str) -> Optional[GemmPlan]:
+        with self._lock:
+            self._ensure_loaded()
+            entry = self._entries.get(key)
+            if entry is None:
+                return None
+            try:
+                return plan_from_dict(entry["plan"])
+            except (KeyError, TypeError):
+                return None
+
+    def get_meta(self, key: str) -> Optional[dict]:
+        """Measurement metadata stored alongside the plan (wall_us, mode, …)."""
+        with self._lock:
+            self._ensure_loaded()
+            entry = self._entries.get(key)
+            return dict(entry.get("meta", {})) if entry else None
+
+    def put(self, key: str, plan: GemmPlan, meta: Optional[dict] = None) -> None:
+        with self._lock:
+            self._ensure_loaded()
+            self._entries[key] = {"plan": plan_to_dict(plan), "meta": meta or {}}
+
+    def keys(self):
+        with self._lock:
+            self._ensure_loaded()
+            return list(self._entries)
+
+    def clear(self) -> None:
+        """Drop all entries; the next :meth:`save` rewrites the file from
+        scratch instead of merging disk state back in (cache invalidation)."""
+        with self._lock:
+            self._entries = {}
+            self._loaded = True
+            self._purge_on_save = True
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._ensure_loaded()
+            return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            self._ensure_loaded()
+            return key in self._entries
+
+
+# -- process-global cache ----------------------------------------------------
+
+_global_lock = threading.Lock()
+_global_cache: Optional[PlanCache] = None
+_global_configured = False
+
+
+def _env_cache() -> Optional[PlanCache]:
+    env = os.environ.get("REPRO_PLAN_CACHE", "").strip()
+    if env.lower() in _OFF_VALUES:
+        return None
+    if env:
+        return PlanCache(env)
+    return PlanCache(None)  # in-memory process-global default
+
+
+def get_plan_cache() -> Optional[PlanCache]:
+    """The process-global cache every ``mp_dot`` consults (None == disabled)."""
+    global _global_cache, _global_configured
+    with _global_lock:
+        if not _global_configured:
+            _global_cache = _env_cache()
+            _global_configured = True
+        return _global_cache
+
+
+def set_plan_cache(cache: Optional[PlanCache]) -> Optional[PlanCache]:
+    """Install ``cache`` as the process-global cache; returns the previous one.
+
+    ``None`` disables cached-plan lookup (pure analytic planning).
+    """
+    global _global_cache, _global_configured
+    with _global_lock:
+        prev = _global_cache if _global_configured else None
+        _global_cache = cache
+        _global_configured = True
+        return prev
+
+
+def lookup_plan(
+    m: int,
+    n: int,
+    k: int,
+    a_dtype,
+    b_dtype=None,
+    out_dtype=None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    beta: float = 0.0,
+    hw: HardwareSpec = DEFAULT_HW,
+) -> Optional[GemmPlan]:
+    """Tuned plan for this GEMM instance, or None (miss / cache disabled).
+
+    This is the single read path used by both ``core/gemm.py`` (the mp_dot
+    layer) and ``kernels/mpgemm.py`` (direct kernel callers).
+    """
+    cache = get_plan_cache()
+    if cache is None:
+        return None
+    return cache.get(make_key(
+        m, n, k, a_dtype, b_dtype, out_dtype,
+        trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw,
+    ))

@@ -1,0 +1,105 @@
+"""Autotuning sweep: candidate lattice sanity, tuned-vs-analytic numerical
+equivalence, and the acceptance-criterion flow (tune >= 3 shapes -> persisted
+cache -> consumed plans)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.blocking import plan_gemm, plan_with_blocks
+from repro.core.constants import DEFAULT_HW
+from repro.kernels.mpgemm import mpgemm_pallas
+from repro.kernels.ref import mpgemm_ref
+from repro.tuning import (
+    PlanCache, candidate_plans, lookup_plan, set_plan_cache, sweep_axis,
+    tune_gemm,
+)
+
+
+def test_candidate_lattice_is_bounded_and_seeded():
+    cands = candidate_plans(4096, 4096, 7168, "bfloat16", max_candidates=24)
+    seed = plan_gemm(4096, 4096, 7168, "bfloat16")
+    assert (cands[0].bm, cands[0].bn, cands[0].bk) == (seed.bm, seed.bn,
+                                                       seed.bk)
+    assert 1 < len(cands) <= 24
+    budget = DEFAULT_HW.vmem_bytes * 0.75
+    blocks = set()
+    for p in cands:
+        assert p.vmem_bytes <= budget          # paper eq (1) holds for all
+        assert p.bn % DEFAULT_HW.lane == 0     # alignment floors hold
+        assert p.bk % DEFAULT_HW.lane == 0
+        blocks.add((p.bm, p.bn, p.bk))
+    assert len(blocks) == len(cands)           # deduplicated
+
+
+@pytest.mark.parametrize("m,n,k", [(96, 144, 160), (64, 256, 300)])
+def test_tuned_plans_are_numerically_equivalent(rng, m, n, k):
+    """Any lattice point must compute the same GEMM (plans move BlockSpecs,
+    never math)."""
+    a = jnp.asarray(rng.standard_normal((m, k)), "float32")
+    b = jnp.asarray(rng.standard_normal((k, n)), "float32")
+    ref = np.asarray(mpgemm_ref(a, b))
+    for p in candidate_plans(m, n, k, "float32", max_candidates=4):
+        out = mpgemm_pallas(a, b, plan=p, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), ref, atol=1e-4,
+                                   rtol=1e-4)
+
+
+def test_sweep_axis_varies_one_axis_only():
+    ms = sweep_axis(512, 512, 2048, "bk", "bfloat16", mode="modeled")
+    assert len(ms) >= 2
+    seed = plan_gemm(512, 512, 2048, "bfloat16")
+    assert len({m.plan.bk for m in ms}) == len(ms)
+    for m in ms:
+        assert (m.plan.bm, m.plan.bn) == (seed.bm, seed.bn)
+
+
+def test_tune_gemm_interpret_measures_and_caches(tmp_path):
+    cache = PlanCache(tmp_path / "plans.json")
+    r = tune_gemm(64, 128, 256, "float32", mode="interpret",
+                  max_candidates=3, iters=1, cache=cache)
+    assert r.speedup >= 1.0
+    assert all(m.mode == "interpret" and m.wall_us > 0
+               for m in r.measurements)
+    assert len(cache) == 1
+    assert (tmp_path / "plans.json").exists()   # save=True flushed to disk
+
+
+def test_acceptance_flow_three_shapes(tmp_path, rng):
+    """ISSUE acceptance: tune_gemm over >= 3 workload shapes produces a
+    persisted cache, and mp_dot demonstrably consumes the plans."""
+    from repro.core import config as cfg
+    from repro.core.gemm import mp_dot
+
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    shapes = [(64, 256, 512), (128, 128, 256), (256, 512, 128)]
+    results = [tune_gemm(m, n, k, "float32", mode="modeled", cache=cache)
+               for (m, n, k) in shapes]
+    assert len(cache) == 3 and path.exists()
+
+    prev = set_plan_cache(PlanCache(path))      # fresh reload, like a new proc
+    try:
+        for (m, n, k), r in zip(shapes, results):
+            assert lookup_plan(m, n, k, "float32") == r.best.plan
+        m, n, k = shapes[0]
+        x = jnp.asarray(rng.standard_normal((m, k)), "float32")
+        w = jnp.asarray(rng.standard_normal((k, n)), "float32")
+        with cfg.gemm_backend("interpret"):
+            got = mp_dot(x, w, policy="fp32")
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(mpgemm_ref(x, w)),
+                                   atol=1e-5, rtol=1e-5)
+    finally:
+        set_plan_cache(prev)
+
+
+def test_report_covers_all_workloads(tmp_path):
+    from repro.tuning.report import characterization_report
+    cache = PlanCache(None)
+    rs = [tune_gemm(m, n, k, "bfloat16", mode="modeled", cache=cache)
+          for (m, n, k) in [(64, 2112, 7168), (4096, 256, 4096)]]
+    md = characterization_report(rs)
+    assert "| 64×2112×7168, bfloat16 |" in md
+    assert "| 4096×256×4096, bfloat16 |" in md
+    assert "speedup" in md and "geomean" in md

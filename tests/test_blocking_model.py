@@ -1,9 +1,10 @@
 """Property tests (hypothesis) for the analytic block planner — the paper's
 eq (1)-(3) analogue must respect capacity, alignment, and beat the naive
 fixed-tile baseline on modeled traffic."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.blocking import naive_plan, plan_gemm, vmem_working_set
 from repro.core.constants import DEFAULT_HW

@@ -1,7 +1,9 @@
 """Hypothesis property tests for the MPGEMM kernel itself: random shapes,
 dtypes, and transposes against the oracle, in interpret mode."""
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import numpy as np
 
 import jax.numpy as jnp

@@ -1,0 +1,172 @@
+"""Plan cache: key stability, disk round-trip, miss fallback, and the
+end-to-end guarantee that ``mp_dot`` consumes cached (tuned) plans."""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.kernels.mpgemm as mpgemm_mod
+from repro.core import config as cfg
+from repro.core.blocking import plan_gemm, plan_with_blocks
+from repro.core.gemm import mp_dot
+from repro.kernels.mpgemm import mpgemm_pallas
+from repro.kernels.ref import mpgemm_ref
+from repro.tuning import (
+    PlanCache, lookup_plan, make_key, set_plan_cache,
+)
+
+
+@pytest.fixture
+def isolated_cache(tmp_path):
+    """A fresh on-disk cache installed as the process-global one."""
+    cache = PlanCache(tmp_path / "plans.json")
+    prev = set_plan_cache(cache)
+    yield cache
+    set_plan_cache(prev)
+
+
+def test_key_stability_and_sensitivity():
+    key = make_key(64, 256, 128, "float32")
+    # The exact string IS the on-disk schema — changing it invalidates every
+    # persisted cache, so pin it.
+    assert key == ("m64n256k128|a=float32|b=float32|out=float32"
+                   "|ta=0|tb=0|beta=0|hw=tpu_v5e")
+    assert make_key(64, 256, 128, "float32") == key
+    # Every field the kernel's behavior depends on must move the key.
+    assert make_key(64, 256, 129, "float32") != key
+    assert make_key(64, 256, 128, "bfloat16") != key
+    assert make_key(64, 256, 128, "float32", trans_b=True) != key
+    assert make_key(64, 256, 128, "float32", beta=1.0) != key
+    # Dtype defaulting matches the planner's policy defaults.
+    assert make_key(64, 256, 128, "float32", "float32", "float32") == key
+
+
+def test_roundtrip_save_load(tmp_path):
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    plan = plan_gemm(256, 256, 512, "bfloat16")
+    key = make_key(256, 256, 512, "bfloat16")
+    cache.put(key, plan, meta={"wall_us": 3.5, "mode": "modeled"})
+    cache.save()
+
+    reloaded = PlanCache(path)
+    assert len(reloaded) == 1
+    assert reloaded.get(key) == plan          # full dataclass equality
+    assert reloaded.get_meta(key)["wall_us"] == 3.5
+    assert reloaded.get("missing") is None
+
+
+def test_corrupt_or_foreign_cache_reads_as_empty(tmp_path):
+    path = tmp_path / "plans.json"
+    for junk in ("{not json", json.dumps([1, 2]), json.dumps("x"),
+                 json.dumps({"version": 999, "entries": {"k": {}}}),
+                 json.dumps({"version": 1, "entries": "oops"})):
+        path.write_text(junk)
+        assert PlanCache(path).get("k") is None
+        assert len(PlanCache(path)) == 0
+
+
+def test_clear_then_save_purges_disk(tmp_path):
+    """clear() must invalidate the file, not get merge-resurrected."""
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    cache.put(make_key(64, 128, 128, "float32"),
+              plan_gemm(64, 128, 128, "float32"))
+    cache.save()
+    cache.clear()
+    cache.save()
+    assert len(PlanCache(path)) == 0
+
+
+def test_cache_miss_falls_back_to_analytic(isolated_cache, rng):
+    """Empty cache == seed behavior: the analytic planner runs the GEMM."""
+    a = jnp.asarray(rng.standard_normal((64, 128)), "float32")
+    b = jnp.asarray(rng.standard_normal((128, 256)), "float32")
+    assert lookup_plan(64, 256, 128, "float32") is None
+    out = mpgemm_pallas(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(mpgemm_ref(a, b)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mp_dot_consumes_cached_plan(isolated_cache, rng, monkeypatch):
+    """A cache hit must bypass the analytic planner entirely."""
+    m, k, n = 64, 128, 256
+    x = jnp.asarray(rng.standard_normal((m, k)), "float32")
+    w = jnp.asarray(rng.standard_normal((k, n)), "float32")
+    with cfg.gemm_backend("interpret"):
+        expected = mp_dot(x, w, policy="fp32")
+
+    tuned = plan_with_blocks(m, n, k, 32, 128, 128, "float32", notes="tuned")
+    analytic = plan_gemm(m, n, k, "float32")
+    assert (tuned.bm, tuned.bn, tuned.bk) != (analytic.bm, analytic.bn,
+                                              analytic.bk)
+    isolated_cache.put(make_key(m, n, k, "float32"), tuned)
+
+    def _fail(*a, **kw):
+        raise AssertionError("analytic planner called despite cache hit")
+
+    monkeypatch.setattr(mpgemm_mod, "plan_gemm", _fail)
+    with cfg.gemm_backend("interpret"):
+        got = mp_dot(x, w, policy="fp32")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_direct_kernel_call_consumes_cached_plan(isolated_cache, rng,
+                                                 monkeypatch):
+    m, k, n = 32, 128, 128
+    a = jnp.asarray(rng.standard_normal((m, k)), "float32")
+    b = jnp.asarray(rng.standard_normal((k, n)), "float32")
+    isolated_cache.put(
+        make_key(m, n, k, "float32"),
+        plan_with_blocks(m, n, k, 8, 128, 128, "float32", notes="tuned"),
+    )
+    monkeypatch.setattr(
+        mpgemm_mod, "plan_gemm",
+        lambda *a, **kw: (_ for _ in ()).throw(AssertionError("fallback ran")),
+    )
+    out = mpgemm_pallas(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(mpgemm_ref(a, b)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_concurrent_savers_merge_instead_of_clobbering(tmp_path):
+    """Two writers sharing one path must not lose each other's entries."""
+    path = tmp_path / "plans.json"
+    a, b = PlanCache(path), PlanCache(path)
+    key_a = make_key(64, 128, 128, "float32")
+    key_b = make_key(128, 128, 128, "float32")
+    a.put(key_a, plan_gemm(64, 128, 128, "float32"))
+    b.put(key_b, plan_gemm(128, 128, 128, "float32"))
+    a.save()
+    b.save()   # b loaded before a saved; must merge, not overwrite
+    reloaded = PlanCache(path)
+    assert key_a in reloaded and key_b in reloaded
+
+
+def test_disabled_cache_means_analytic(isolated_cache):
+    prev = set_plan_cache(None)
+    try:
+        assert lookup_plan(64, 64, 64, "float32") is None
+    finally:
+        set_plan_cache(prev)
+
+
+def test_persisted_cache_survives_process_reload(tmp_path, rng):
+    """Write with one PlanCache object, consume via a fresh one — the
+    cross-process story (same file, new process == new object)."""
+    path = tmp_path / "plans.json"
+    writer = PlanCache(path)
+    tuned = plan_with_blocks(64, 128, 128, 32, 128, 128, "float32",
+                             notes="tuned")
+    writer.put(make_key(64, 128, 128, "float32"), tuned)
+    writer.save()
+
+    prev = set_plan_cache(PlanCache(path))
+    try:
+        hit = lookup_plan(64, 128, 128, "float32")
+        assert hit is not None and hit.bm == 32 and "tuned" in hit.notes
+    finally:
+        set_plan_cache(prev)

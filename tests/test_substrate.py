@@ -2,10 +2,11 @@
 serving engine."""
 import os
 
-import hypothesis as hp
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 import jax
 import jax.numpy as jnp
