@@ -25,6 +25,21 @@ PAPER_WORKLOADS = [
     (22, 5120, 256, 5120), (23, 13824, 256, 5120), (24, 5120, 256, 13824),
 ]
 
+# MoE expert grouped-GEMM workloads: (name, G experts, M tokens/expert, N, K).
+# Shapes from the framework's own MoE configs (configs/mixtral_8x22b.py,
+# configs/granite_moe_1b_a400m.py) at a 4k-token training step with top-k
+# routing and capacity factor 1.25: M ≈ 1.25 * k * T / E.  These are the
+# paper's DeepSeek/LLaMA serving shapes in their grouped (expert-batched)
+# form — the workloads mp_dot_grouped exists for.
+MOE_GROUPED_WORKLOADS = [
+    ("mixtral-8x22b-up", 8, 1280, 16384, 6144),
+    ("mixtral-8x22b-down", 8, 1280, 6144, 16384),
+    ("granite-moe-up", 32, 1280, 512, 1024),
+    ("granite-moe-down", 32, 1280, 1024, 512),
+    ("deepseek-v2-lite-up", 64, 480, 1408, 2048),
+    ("deepseek-v2-lite-down", 64, 480, 2048, 1408),
+]
+
 
 def wall_time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
     for _ in range(warmup):

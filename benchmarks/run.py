@@ -19,6 +19,7 @@ def main() -> None:
     bench_loads.run()                      # paper Fig. 3
     bench_gemm_workloads.run("float32")    # paper Table III + Fig. 10/11
     bench_gemm_workloads.run("bfloat16", wall=False)   # Fig. 12 ladder
+    bench_gemm_workloads.run_grouped(wall=False)       # MoE expert shapes
     bench_irregular.run()                  # paper Fig. 13
     bench_mixed_precision.run()            # paper Fig. 14
     bench_breakdown.run()                  # paper Fig. 15

@@ -58,7 +58,14 @@ def _round_down(x: int, m: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class GemmPlan:
-    """A fully-specified blocking decision for one GEMM."""
+    """A fully-specified blocking decision for one (possibly grouped) GEMM.
+
+    ``g > 1`` marks a grouped/batched instance: G independent M x N x K
+    problems executed by one kernel launch with the group as the leading
+    grid axis.  ``grid`` stays the per-group (M/bm, N/bn, K/bk) triple (the
+    kernel prepends G); ``flops``/``hbm_bytes`` cover all G groups, so the
+    roofline and CMR terms price the whole launch.
+    """
 
     m: int
     n: int
@@ -74,18 +81,22 @@ class GemmPlan:
     grid: Tuple[int, int, int]
     vmem_bytes: int          # modeled VMEM working set
     hbm_bytes: int           # modeled HBM traffic for the whole GEMM
-    flops: int               # 2*M*N*K
+    flops: int               # 2*G*M*N*K
     cmr: float               # flops / hbm_bytes (the paper's eq (3) value)
     k_rem: int               # K % bk (0 -> no K-edge predication needed)
     notes: str = ""
+    g: int = 1               # group/batch count (1 == plain 2-D GEMM)
 
     @property
     def arithmetic_intensity(self) -> float:
         return self.cmr
 
     def describe(self) -> str:
+        shape = f"{self.m}x{self.n}x{self.k}"
+        if self.g != 1:
+            shape = f"{self.g}x" + shape
         return (
-            f"GemmPlan[{self.m}x{self.n}x{self.k} {self.a_dtype}->"
+            f"GemmPlan[{shape} {self.a_dtype}->"
             f"{self.out_dtype}] blocks=({self.bm},{self.bn},{self.bk}) "
             f"grid={self.grid} vmem={self.vmem_bytes/2**20:.2f}MiB "
             f"CMR={self.cmr:.1f} {self.notes}"
@@ -317,6 +328,57 @@ def plan_with_blocks(
         cmr=2 * m * n * k / max(1, traffic), k_rem=k_rem,
         notes=" ".join(auto_notes),
     )
+
+
+def grouped_plan_from_2d(plan: GemmPlan, g: int) -> GemmPlan:
+    """Lift a 2-D plan to a G-group batched one (group = leading grid axis).
+
+    Groups are independent problems streamed back-to-back, so there is no
+    cross-group reuse to model: per-group traffic and FLOPs simply scale by
+    G (CMR is invariant), and the VMEM working set is unchanged — each grid
+    step still stages one (bm, bk)/(bk, bn) input pair and one (bm, bn)
+    accumulator, now for whichever group the leading grid index names.
+    """
+    if g < 1:
+        raise ValueError(f"group count must be >= 1, got {g}")
+    if g == 1:
+        return plan
+    notes = " ".join(x for x in (plan.notes, f"grouped(g={g})") if x)
+    return dataclasses.replace(
+        plan, g=g, flops=plan.flops * g, hbm_bytes=plan.hbm_bytes * g,
+        notes=notes,
+    )
+
+
+def plan_grouped_gemm(
+    g: int,
+    m: int,
+    n: int,
+    k: int,
+    a_dtype="float32",
+    b_dtype=None,
+    out_dtype=None,
+    acc_dtype=None,
+    *,
+    beta: float = 0.0,
+    hw: HardwareSpec = DEFAULT_HW,
+    vmem_budget_frac: float = 0.75,
+    max_block: int = 2048,
+) -> GemmPlan:
+    """Block plan for a grouped GEMM: G independent M x N x K problems.
+
+    The per-group blocking solve is exactly the 2-D one — the group axis
+    adds grid steps, not working set — so the analytic optimum is the 2-D
+    optimum lifted by :func:`grouped_plan_from_2d`.  Consumed by
+    ``kernels/mpgemm.py::mpgemm_grouped_pallas`` (grid ``(G, M/bm, N/bn,
+    K/bk)``) and priced by the MoE-workload benchmarks.
+    """
+    base = plan_gemm(
+        m, n, k, a_dtype, b_dtype, out_dtype, acc_dtype,
+        beta=beta, hw=hw, vmem_budget_frac=vmem_budget_frac,
+        max_block=max_block,
+    )
+    return grouped_plan_from_2d(base, g)
 
 
 def plan_to_dict(plan: GemmPlan) -> dict:

@@ -1,6 +1,10 @@
-"""``mp_dot`` — the paper's technique as a first-class, differentiable op.
+"""``mp_dot`` / ``mp_dot_grouped`` — the paper's technique as first-class,
+differentiable ops.
 
-Every matmul in every model in this framework flows through here.  The op:
+Every matmul in every model in this framework flows through here — 2-D
+projections through :func:`mp_dot`, grouped/batched contractions (MoE expert
+GEMMs, per-stream LoRA blocks, generic batched matmuls) through
+:func:`mp_dot_grouped`.  Each op:
 
 * applies a :class:`PrecisionPolicy` (fp32 / bf16->f32 / dynamic int8->i32 —
   the paper's Section V multi-precision surface),
@@ -24,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import config as cfg
 from repro.core.policy import PrecisionPolicy, get_policy, quantize_per_tensor
-from repro.kernels.mpgemm import mpgemm_pallas
+from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
 
 
 def _dims(trans_a: bool, trans_b: bool):
@@ -51,64 +55,84 @@ def _cached_plan(x, w, trans_a: bool, trans_b: bool, out_dtype):
     )
 
 
-def _matmul_2d(
-    x, w, bias, policy: PrecisionPolicy, trans_a: bool, trans_b: bool, backend: str,
-    out_dtype=None, acc_dtype=None,
+def _matmul_impl(
+    x, w, bias, policy: PrecisionPolicy, trans_a: bool, trans_b: bool,
+    backend: str, out_dtype, acc_dtype, *, grouped: bool,
 ):
-    """One 2-D GEMM under a policy, on the selected backend.
+    """One GEMM (2-D or grouped) under a policy, on the selected backend.
 
-    ``acc_dtype`` overrides the accumulator/partial-sum dtype: backward
-    GEMMs pass bf16 so that TP partial-sum all-reduces move bf16 instead of
-    f32 (halves gradient/activation-grad wire bytes; standard practice).
+    The single home of the policy logic for both op shapes:
 
-    ``w`` may be a static-int8 {"q","scale"} dict (core/quantization.py):
-    the dequant rides the GEMM — int8 HBM reads, upcast at the compute unit."""
+    * ``w`` may be a static-int8 {"q","scale"} dict (core/quantization.py):
+      the dequant rides the GEMM — int8 HBM reads, upcast at the compute
+      unit.  Under a *dynamic*-quantized policy the dequant target is f32
+      (the policy's own compute dtype is int8 — dequantizing into it would
+      truncate the float weights to ~0); quantize_per_tensor re-quantizes.
+    * The compute-dtype down-cast is pinned shard-local BEFORE any
+      FSDP/EP all-gather: without the barrier GSPMD gathers the f32 master
+      weights and converts after, doubling gather wire bytes (measured on
+      mixtral train_4k — EXPERIMENTS.md §Perf).
+    * ``acc_dtype`` overrides the accumulator/partial-sum dtype on the XLA
+      backend: backward GEMMs pass bf16 so that TP/EP partial-sum
+      all-reduces move bf16 instead of f32 (halves gradient wire bytes).
+      Kernel backends accumulate per the plan's acc dtype instead (plans
+      own kernel numerics; f32/i32 VMEM scratch).
+    """
+    kernel = mpgemm_grouped_pallas if grouped else mpgemm_pallas
+    cached_plan = _cached_grouped_plan if grouped else _cached_plan
+    dims = _grouped_dims(trans_a, trans_b) if grouped else _dims(trans_a, trans_b)
+
+    def _bias_add(acc):
+        if bias is None:
+            return acc
+        b = (bias.reshape(bias.shape[0], 1, -1) if grouped
+             else bias.reshape(1, -1))
+        return acc + b.astype(acc.dtype)
+
     from repro.core.quantization import dequantize_tensor, is_quantized
     if is_quantized(w):
-        w = dequantize_tensor(w, jnp.dtype(policy.compute_dtype))
+        w = dequantize_tensor(
+            w, jnp.float32 if policy.quantized else jnp.dtype(policy.compute_dtype))
     out_dtype = out_dtype or policy.out_dtype
     if policy.quantized:
         xq, sx = quantize_per_tensor(x)
         wq, sw = quantize_per_tensor(w)
         scale = sx * sw
         if backend in ("pallas", "interpret"):
-            return mpgemm_pallas(
+            return kernel(
                 xq, wq, trans_a=trans_a, trans_b=trans_b, scale=scale,
                 bias=bias, out_dtype=out_dtype,
-                plan=_cached_plan(xq, wq, trans_a, trans_b, out_dtype),
+                plan=cached_plan(xq, wq, trans_a, trans_b, out_dtype),
                 interpret=(backend == "interpret"),
             )
-        acc = jax.lax.dot_general(
-            xq, wq, _dims(trans_a, trans_b), preferred_element_type=jnp.int32
-        )
-        y = acc.astype(jnp.float32) * scale
-        if bias is not None:
-            y = y + bias.reshape(1, -1).astype(y.dtype)
-        return y.astype(out_dtype)
+        acc = jax.lax.dot_general(xq, wq, dims,
+                                  preferred_element_type=jnp.int32)
+        return _bias_add(acc.astype(jnp.float32) * scale).astype(out_dtype)
 
     cd = jnp.dtype(policy.compute_dtype)
     xc = x.astype(cd)
     wc = w.astype(cd)
     if wc.dtype != w.dtype:
-        # Pin the down-cast to happen shard-local BEFORE any FSDP
-        # all-gather: without the barrier GSPMD gathers the f32 master
-        # weights and converts after, doubling gather wire bytes
-        # (measured on mixtral train_4k — EXPERIMENTS.md §Perf).
-        wc = jax.lax.optimization_barrier(wc)
+        wc = jax.lax.optimization_barrier(wc)  # see docstring
     if backend in ("pallas", "interpret"):
-        return mpgemm_pallas(
+        return kernel(
             xc, wc, trans_a=trans_a, trans_b=trans_b, bias=bias,
             out_dtype=out_dtype,
-            plan=_cached_plan(xc, wc, trans_a, trans_b, out_dtype),
+            plan=cached_plan(xc, wc, trans_a, trans_b, out_dtype),
             interpret=(backend == "interpret"),
         )
     acc = jax.lax.dot_general(
-        xc, wc, _dims(trans_a, trans_b),
+        xc, wc, dims,
         preferred_element_type=jnp.dtype(acc_dtype or policy.acc_dtype),
     )
-    if bias is not None:
-        acc = acc + bias.reshape(1, -1).astype(acc.dtype)
-    return acc.astype(out_dtype)
+    return _bias_add(acc).astype(out_dtype)
+
+
+def _matmul_2d(x, w, bias, policy, trans_a, trans_b, backend,
+               out_dtype=None, acc_dtype=None):
+    """One 2-D GEMM under a policy (see :func:`_matmul_impl`)."""
+    return _matmul_impl(x, w, bias, policy, trans_a, trans_b, backend,
+                        out_dtype, acc_dtype, grouped=False)
 
 
 # --- differentiable core -----------------------------------------------------
@@ -182,13 +206,191 @@ def mp_dot(
     return y2d.reshape(*lead, n)
 
 
-def mp_einsum(spec: str, *operands, policy="bf16") -> jax.Array:
-    """Policy-aware einsum for non-2D contractions (MoE experts, attention).
+# --- grouped / batched op ----------------------------------------------------
 
-    Runs on XLA with the policy's compute/accumulate dtypes; quantized
-    policies fall back to their bf16 sibling here (documented in DESIGN.md —
-    per-expert dynamic quantization would need per-slice scales).
+def _grouped_dims(trans_a: bool, trans_b: bool):
+    """dot_general dims for (G, ., .) x (G, ., .): group is the batch axis."""
+    ca = 1 if trans_a else 2
+    cb = 2 if trans_b else 1
+    return (((ca,), (cb,)), ((0,), (0,)))
+
+
+def _cached_grouped_plan(x, w, trans_a: bool, trans_b: bool, out_dtype):
+    """Tuned grouped plan from the global cache, or None (same contract as
+    :func:`_cached_plan`, keyed with the extra group dimension)."""
+    from repro.tuning.plan_cache import lookup_plan
+    g = x.shape[0]
+    m = x.shape[2] if trans_a else x.shape[1]
+    k = x.shape[1] if trans_a else x.shape[2]
+    n = w.shape[1] if trans_b else w.shape[2]
+    return lookup_plan(
+        m, n, k, x.dtype, w.dtype, out_dtype,
+        trans_a=trans_a, trans_b=trans_b, g=g,
+    )
+
+
+def _matmul_grouped(x, w, bias, policy, trans_a, trans_b, backend,
+                    out_dtype=None, acc_dtype=None):
+    """One grouped GEMM (G independent problems) under a policy.
+
+    Same policy logic as the 2-D op (see :func:`_matmul_impl`).  Dynamic
+    int8 uses one per-tensor scale pair across all groups (the fused
+    dequant stays a scalar epilogue multiply).  The barrier'd down-cast is
+    safe under differentiation: it only ever runs inside the custom-VJP
+    core, where JAX never needs a JVP rule for the barrier.  ``bias`` must
+    be (G, N) here — :func:`mp_dot_grouped` normalizes.
     """
+    return _matmul_impl(x, w, bias, policy, trans_a, trans_b, backend,
+                        out_dtype, acc_dtype, grouped=True)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _mp_dot_grouped_core(x3, w, bias, policy_name: str, trans_w: bool,
+                         backend: str, out_dtype: Optional[str]):
+    policy = get_policy(policy_name)
+    return _matmul_grouped(x3, w, bias, policy, False, trans_w, backend,
+                           out_dtype=out_dtype)
+
+
+def _mp_dot_grouped_fwd(x3, w, bias, policy_name, trans_w, backend, out_dtype):
+    y = _mp_dot_grouped_core(x3, w, bias, policy_name, trans_w, backend,
+                             out_dtype)
+    return y, (x3, w, bias)
+
+
+def _mp_dot_grouped_bwd(policy_name, trans_w, backend, out_dtype, res, dy):
+    x3, w, bias = res
+    policy = get_policy(policy_name)
+    # Backward runs in the non-quantized sibling precision (STE for int8);
+    # bf16 partial sums on the XLA backend so EP/TP gradient reductions move
+    # bf16 on the wire (kernel backends accumulate per the plan's acc dtype
+    # — see _matmul_impl).
+    bwd_policy = get_policy("fp32" if policy.name == "fp32" else "bf16")
+    bwd_acc = "float32" if policy.name == "fp32" else "bfloat16"
+    # Fused-transpose grouped GEMMs — the paper's on-the-fly transposition
+    # applied per expert: no transposed expert-weight copies materialize.
+    # dx[g] = dy[g] @ op(w[g])^T
+    dx = _matmul_grouped(
+        dy, w, None, bwd_policy, False, not trans_w, backend,
+        out_dtype=x3.dtype, acc_dtype=bwd_acc,
+    )
+    # dw[g]: (k,n) = x[g]^T @ dy[g] ; transposed storage: (n,k) = dy[g]^T @ x[g].
+    if trans_w:
+        dw = _matmul_grouped(
+            dy, x3, None, bwd_policy, True, False, backend,
+            out_dtype=w.dtype, acc_dtype=bwd_acc,
+        )
+    else:
+        dw = _matmul_grouped(
+            x3, dy, None, bwd_policy, True, False, backend,
+            out_dtype=w.dtype, acc_dtype=bwd_acc,
+        )
+    # f32 accumulation for the reduction, cast back to the primal's dtype
+    # (custom-VJP cotangents must match primal dtypes).
+    dbias = (jnp.sum(dy, axis=1, dtype=jnp.float32).astype(bias.dtype)
+             if bias is not None else None)
+    return dx, dw, dbias
+
+
+_mp_dot_grouped_core.defvjp(_mp_dot_grouped_fwd, _mp_dot_grouped_bwd)
+
+
+def mp_dot_grouped(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    policy="bf16",
+    trans_w: bool = False,
+    backend: Optional[str] = None,
+    group_sizes: Optional[jax.Array] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """y[g, m, n] = x[g, m, k] @ (w[g, n, k]ᵀ if trans_w else w[g, k, n]) + bias[g, n].
+
+    The grouped sibling of :func:`mp_dot`: G independent GEMMs — MoE expert
+    blocks, batched projections — in ONE kernel launch with the group as the
+    leading grid axis, under the same precision policies, plan cache (keyed
+    with the extra ``g`` dimension), and fused-transpose custom VJP.
+
+    ``group_sizes`` (shape (G,), int) marks ragged groups: rows ``>=
+    group_sizes[g]`` of each output group are forced to zero, so capacity-
+    padded expert buffers contribute neither output nor (via the masked
+    cotangent) gradient.  The mask sits outside the custom VJP, so autodiff
+    handles it natively.
+
+    ``out_dtype`` overrides the policy's output dtype — MoE keeps f32
+    activations between the expert GEMMs and the combine, matching the
+    accumulator precision.
+    """
+    if x.ndim != 3:
+        raise ValueError(f"mp_dot_grouped expects x of rank 3, got {x.shape}")
+    policy = get_policy(policy)
+    backend = backend or cfg.get_gemm_backend()
+    from repro.core.quantization import dequantize_tensor, is_quantized
+    if is_quantized(w):
+        # Dequantize static-int8 dicts BEFORE the custom-VJP core: the bwd
+        # rule contracts against w and must see an array primal (a dict
+        # residual has no dtype and no array cotangent).  XLA still fuses
+        # the dequant into the GEMM read; differentiation flows through the
+        # dequant natively, as the pre-grouped MoE path did.
+        w = dequantize_tensor(
+            w, jnp.float32 if policy.quantized else jnp.dtype(policy.compute_dtype))
+    if bias is not None and bias.ndim == 1:
+        # Normalize a shared (N,) bias to (G, N) BEFORE the custom-VJP core:
+        # outside it autodiff sum-reduces the (G, N) bias cotangent back to
+        # (N,); inside, backends would disagree on broadcasting.
+        bias = jnp.broadcast_to(bias[None, :], (x.shape[0], bias.shape[0]))
+    out_dtype_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
+    y = _mp_dot_grouped_core(x, w, bias, policy.name, trans_w, backend,
+                             out_dtype_s)
+    if group_sizes is not None:
+        sizes = jnp.asarray(group_sizes, jnp.int32).reshape(-1, 1, 1)
+        rows = jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+        y = jnp.where(rows < sizes, y, jnp.zeros_like(y))
+    return y
+
+
+def _as_grouped_matmul(spec: str, n_ops: int) -> Optional[bool]:
+    """Is ``spec`` a grouped matmul ``Xab,Xbc->Xac`` (any letters)?
+
+    Returns ``trans_w`` (False for ``Xab,Xbc->Xac``, True for
+    ``Xab,Xcb->Xac``) or None when the spec is not a grouped matmul.
+    """
+    if n_ops != 2:
+        return None
+    try:
+        ins, out = spec.replace(" ", "").split("->")
+        a, b = ins.split(",")
+    except ValueError:
+        return None
+    if not (len(a) == len(b) == len(out) == 3 and len(set(a)) == 3):
+        return None
+    if not (a[0] == b[0] == out[0] and out[1] == a[1]):
+        return None
+    if b[1] == a[2] and out[2] == b[2] and len({a[0], a[1], a[2], b[2]}) == 4:
+        return False           # Xab,Xbc->Xac
+    if b[2] == a[2] and out[2] == b[1] and len({a[0], a[1], a[2], b[1]}) == 4:
+        return True            # Xab,Xcb->Xac (stored-transposed rhs)
+    return None
+
+
+def mp_einsum(spec: str, *operands, policy="bf16") -> jax.Array:
+    """Policy-aware einsum for non-2D contractions (attention score/value).
+
+    Grouped-matmul specs (``gmk,gkn->gmn`` and the stored-transposed
+    ``gmk,gnk->gmn``, any letters) are routed through :func:`mp_dot_grouped`
+    — i.e. through the grouped MPGEMM kernel and plan cache — rather than a
+    raw einsum.  Anything else runs on XLA with the policy's
+    compute/accumulate dtypes; quantized policies fall back to their bf16
+    sibling there (per-slice dynamic quantization needs the grouped path).
+    """
+    trans_w = _as_grouped_matmul(spec, len(operands))
+    if trans_w is not None and all(
+        jnp.dtype(o.dtype).kind == "f" for o in operands
+    ):
+        return mp_dot_grouped(operands[0], operands[1], policy=policy,
+                              trans_w=trans_w)
     policy = get_policy(policy)
     if policy.quantized:
         policy = get_policy("bf16")

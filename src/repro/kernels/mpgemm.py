@@ -30,7 +30,7 @@ try:  # pltpu imports fine on CPU installs; guard anyway.
 except ImportError:  # pragma: no cover
     pltpu = None
 
-from repro.core.blocking import GemmPlan, plan_gemm
+from repro.core.blocking import GemmPlan, plan_gemm, plan_grouped_gemm
 
 _ACTIVATIONS = {
     None: lambda x: x,
@@ -119,7 +119,8 @@ def mpgemm_kernel(
         out_ref[...] = acc.astype(out_ref.dtype)
 
 
-def _compiler_params(interpret: bool):
+def _compiler_params(interpret: bool, grid_rank: int = 3):
+    """Grid semantics: every axis parallel except the K-innermost one."""
     if interpret or pltpu is None:
         return None
     cls = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -127,8 +128,9 @@ def _compiler_params(interpret: bool):
     )
     if cls is None:
         return None
+    semantics = ("parallel",) * (grid_rank - 1) + ("arbitrary",)
     try:
-        return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        return cls(dimension_semantics=semantics)
     except Exception:  # pragma: no cover
         return None
 
@@ -230,6 +232,177 @@ def mpgemm_pallas(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(*inputs)
+
+
+# --- grouped / batched variant -----------------------------------------------
+
+def mpgemm_grouped_kernel(
+    *refs,
+    nk: int,
+    k_rem: int,
+    trans_a: bool,
+    trans_b: bool,
+    acc_dtype,
+    alpha: float,
+    has_bias: bool,
+    activation: Optional[str],
+    has_scale: bool,
+):
+    """Grid = (G, M/bm, N/bn, K/bk), K innermost ('arbitrary').
+
+    Identical contract to :func:`mpgemm_kernel` per group — the leading
+    grid axis only selects which problem the (bm, bn) accumulator serves.
+    Block refs carry a size-1 group dim; the accumulator scratch does not
+    (it is recycled across groups because K is the only revisiting axis).
+    """
+    idx = 0
+    a_ref = refs[idx]; idx += 1
+    b_ref = refs[idx]; idx += 1
+    bias_ref = refs[idx] if has_bias else None
+    idx += 1 if has_bias else 0
+    scale_ref = refs[idx] if has_scale else None
+    idx += 1 if has_scale else 0
+    out_ref = refs[idx]; idx += 1
+    acc_ref = refs[idx]
+
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0]
+    b = b_ref[0]
+    if k_rem:
+        valid = jnp.where(k == nk - 1, k_rem, a.shape[0 if trans_a else 1])
+        a = _mask_contract(a, 0 if trans_a else 1, valid)
+        b = _mask_contract(b, 1 if trans_b else 0, valid)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, _dot_dims(trans_a, trans_b), preferred_element_type=acc_dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if has_scale:
+            acc = acc.astype(jnp.float32) * scale_ref[0]
+        if alpha != 1.0:
+            acc = acc * jnp.asarray(alpha, acc.dtype)
+        if has_bias:
+            acc = acc + bias_ref[0].astype(acc.dtype)
+        acc = _ACTIVATIONS[activation](acc)
+        out_ref[...] = acc.astype(out_ref.dtype)[None]
+
+
+def mpgemm_grouped_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    alpha: float = 1.0,
+    bias: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    plan: Optional[GemmPlan] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[g] = activation(alpha * op(a[g]) @ op(b[g]) * scale + bias[g]).
+
+    ``a``: (G, M, K) — or (G, K, M) under ``trans_a``; ``b``: (G, K, N) —
+    or (G, N, K) under ``trans_b``; ``bias``: (G, N) or (N,) broadcast to
+    every group; output (G, M, N).  The G expert/batch problems share one
+    kernel launch with the group as the leading (parallel) grid axis, so
+    small per-expert GEMMs amortize launch and pipeline ramp-up instead of
+    paying them G times — the grouped-GEMM-on-SME pattern (LOHO, Hello
+    SME!) in TPU form.  No beta/C term: no grouped caller accumulates into
+    an existing output (use the 2-D kernel for that).
+    """
+    if a.ndim != 3 or b.ndim != 3:
+        raise ValueError(f"grouped operands must be rank-3: {a.shape} x {b.shape}")
+    if a.shape[0] != b.shape[0]:
+        raise ValueError(f"group mismatch: {a.shape} x {b.shape}")
+    g = a.shape[0]
+    m = a.shape[2] if trans_a else a.shape[1]
+    ka = a.shape[1] if trans_a else a.shape[2]
+    n = b.shape[1] if trans_b else b.shape[2]
+    kb = b.shape[2] if trans_b else b.shape[1]
+    if ka != kb:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    k = ka
+    if plan is None:
+        from repro.tuning.plan_cache import lookup_plan
+        plan = lookup_plan(
+            m, n, k, a.dtype, b.dtype, out_dtype,
+            trans_a=trans_a, trans_b=trans_b, g=g,
+        )
+    if plan is None:
+        plan = plan_grouped_gemm(g, m, n, k, a.dtype, b.dtype,
+                                 out_dtype=out_dtype)
+    out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
+    acc_dtype = jnp.dtype(plan.acc_dtype)
+    bm, bn, bk = plan.bm, plan.bn, plan.bk
+    grid = (g, pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+
+    a_spec = (
+        pl.BlockSpec((1, bk, bm), lambda gg, i, j, kk: (gg, kk, i))
+        if trans_a
+        else pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk))
+    )
+    b_spec = (
+        pl.BlockSpec((1, bn, bk), lambda gg, i, j, kk: (gg, j, kk))
+        if trans_b
+        else pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j))
+    )
+    in_specs = [a_spec, b_spec]
+    inputs = [a, b]
+    if bias is not None:
+        bias3d = jnp.broadcast_to(
+            bias.reshape((1, -1) if bias.ndim == 1 else (g, -1))[:, None, :],
+            (g, 1, n),
+        )
+        in_specs.append(pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j)))
+        inputs.append(bias3d)
+    if scale is not None:
+        scale1d = jnp.asarray(scale, jnp.float32).reshape(1)
+        in_specs.append(pl.BlockSpec(
+            memory_space=pltpu.SMEM if (pltpu and not interpret) else None))
+        inputs.append(scale1d)
+
+    scratch = [pltpu.VMEM((bm, bn), acc_dtype)] if pltpu else [
+        pl.BlockSpec(memory_space=pl.ANY)
+    ]
+
+    kernel = functools.partial(
+        mpgemm_grouped_kernel,
+        nk=grid[3],
+        k_rem=plan.k_rem,
+        trans_a=trans_a,
+        trans_b=trans_b,
+        acc_dtype=acc_dtype,
+        alpha=float(alpha),
+        has_bias=bias is not None,
+        activation=activation,
+        has_scale=scale is not None,
+    )
+
+    kwargs = {}
+    params = _compiler_params(interpret, grid_rank=4)
+    if params is not None:
+        kwargs["compiler_params"] = params
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
         **kwargs,

@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import mp_dot
+from repro.core.gemm import mp_dot, mp_dot_grouped
 from repro.distributed import act
 from repro.models import attention as attn
 from repro.models.layers import (
@@ -259,19 +259,17 @@ def cross_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
 
 # =============================== MoE ===========================================
 
-def _expert_dot(ebuf, w):
-    """(e, n, d) x (e, d, f) -> (e, n, f), f32 accumulation.
+def _expert_dot(ebuf, w, policy):
+    """(e, n, d) x (e, d, f) -> (e, n, f) through the grouped MPGEMM op.
 
-    NOTE(perf-log, mixtral hillclimb): a custom-vjp variant with
-    bf16-accumulated backward contractions (so the dbuf/dW partial-sum
-    all-reduces move bf16) is the right TP optimization on real TPUs
-    (-1.35 TB/dev wire on mixtral train_4k, analytically), but XLA:CPU
-    normalizes every dot to f32 — the change is invisible in this
-    container's artifact and bf16-preferred batched dots do not even
-    execute on the CPU thunk, so it is documented rather than shipped.
-    See EXPERIMENTS.md §Perf."""
-    return jnp.einsum("end,edf->enf", ebuf, w,
-                      preferred_element_type=jnp.float32)
+    One kernel launch for all E experts (group = leading grid axis), under
+    the layer policy with f32 outputs (accumulator precision is kept
+    between the expert GEMMs and the combine).  The op's custom VJP runs
+    the backward contractions as fused-transpose grouped GEMMs with bf16
+    partial sums on the XLA backend, so the dbuf/dW EP/TP all-reduces move
+    bf16 on the wire (the mixtral-hillclimb optimization that einsum-based
+    dispatch could not express — see EXPERIMENTS.md §Perf)."""
+    return mp_dot_grouped(ebuf, w, policy=policy, out_dtype=jnp.float32)
 
 
 def init_moe(key, cfg):
@@ -293,7 +291,9 @@ def moe_mlp(params, x, cfg, policy, capacity_factor: float = 1.25):
 
     Groups = sequences (the batch dim), which is the data-sharded axis, so
     the argsort/scatter dispatch never crosses shards — no global sort
-    collectives.  The expert einsums contract (b, e, C, d) x (e, d, f); with
+    collectives.  The expert GEMMs run as grouped MPGEMM launches
+    (mp_dot_grouped: group = expert, K-innermost accumulator, fused-
+    transpose backward) contracting (e, b*C, d) x (e, d, f); with
     experts sharded over 'model' (EP) GSPMD inserts the all-to-all style
     resharding between the data-sharded buffer and model-sharded experts,
     exactly the EP communication pattern.  Gathers/scatters carry no fake
@@ -340,22 +340,16 @@ def moe_mlp(params, x, cfg, policy, capacity_factor: float = 1.25):
     buf, dest_tok = jax.vmap(route)(x, topi, topw)          # (b,e,C,d)
     buf = act.constrain(buf, "batch", None, None, None)
 
-    cd = jnp.float32 if policy == "fp32" else jnp.bfloat16
-
-    def _wcast(w):
-        from repro.core.quantization import dequantize_tensor, is_quantized
-        if is_quantized(w):
-            return dequantize_tensor(w, cd)
-        wc = w.astype(cd)
-        # shard-local down-cast before the EP/FSDP gathers (see core/gemm.py)
-        return jax.lax.optimization_barrier(wc) if wc.dtype != w.dtype else wc
-
-    # Fold b into the capacity dim: 3-D batched dots (e, b*C, d) x (e, d, f).
-    ebuf = buf.transpose(1, 0, 2, 3).reshape(e, b * cap, d).astype(cd)
-    h_gate = _expert_dot(ebuf, _wcast(params["w_gate"]))
-    h_up = _expert_dot(ebuf, _wcast(params["w_up"]))
-    h = (jax.nn.silu(h_gate) * h_up).astype(cd)
-    y = _expert_dot(h, _wcast(params["w_down"]))  # (e,n,f) x (e,f,d) -> (e,n,d)
+    # Fold b into the capacity dim: ONE grouped GEMM (e, b*C, d) x (e, d, f)
+    # per projection — group = expert — through mp_dot_grouped, which owns
+    # the policy cast, static-int8 dequant, and the shard-local down-cast
+    # barrier (inside its custom VJP, where no differentiation rule for the
+    # barrier is ever needed).
+    ebuf = buf.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
+    h_gate = _expert_dot(ebuf, params["w_gate"], policy)
+    h_up = _expert_dot(ebuf, params["w_up"], policy)
+    h = jax.nn.silu(h_gate) * h_up                          # f32 activations
+    y = _expert_dot(h, params["w_down"], policy)  # (e,n,f) x (e,f,d) -> (e,n,d)
     y = y.reshape(e, b, cap, d).transpose(1, 0, 2, 3)       # (b,e,C,d)
 
     def combine(y_g, dest_tok_g, tw_g):

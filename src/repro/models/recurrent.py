@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import mp_dot
+from repro.core.gemm import mp_dot, mp_dot_grouped
 from repro.models.layers import dense_init, rmsnorm
 
 CHUNK = 128
@@ -110,7 +110,12 @@ def rwkv_time_mix(params, x, prev_shift, state, cfg, policy):
     # data-dependent lerp: mix_i = mu_i + tanh(x A) B_i   (low-rank, per stream)
     lora = jnp.tanh(mp_dot(x, params["lora_a"], policy=policy))
     lora = lora.reshape(b, t, 5, -1).astype(jnp.float32)
-    dd = jnp.einsum("btfr,frd->btfd", lora, params["lora_b"])
+    # Grouped GEMM over the 5 mix streams: (5, b*t, r) x (5, r, d) in one
+    # MPGEMM launch (group = stream) instead of a 4-D einsum.
+    lora5 = lora.reshape(b * t, 5, -1).transpose(1, 0, 2)
+    dd = mp_dot_grouped(lora5, params["lora_b"], policy="fp32",
+                        out_dtype=jnp.float32)
+    dd = dd.transpose(1, 0, 2).reshape(b, t, 5, d)
     mix = jnp.clip(params["mu"][None, None] + dd, 0.0, 1.0)     # (B,T,5,d)
     xi = (x[:, :, None].astype(jnp.float32) * mix
           + xs[:, :, None].astype(jnp.float32) * (1 - mix)).astype(x.dtype)

@@ -45,11 +45,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import (
-    GemmPlan, enumerate_block_lattice, plan_gemm, plan_with_blocks,
-    vmem_working_set,
+    GemmPlan, enumerate_block_lattice, grouped_plan_from_2d, plan_gemm,
+    plan_with_blocks, vmem_working_set,
 )
 from repro.core.constants import DEFAULT_HW, HardwareSpec
-from repro.kernels.mpgemm import mpgemm_pallas
+from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
 from repro.tuning.plan_cache import PlanCache, get_plan_cache, make_key
 
 MODES = ("auto", "compiled", "interpret", "modeled")
@@ -107,17 +107,32 @@ def _modeled_us(plan: GemmPlan, hw: HardwareSpec) -> float:
 
 
 def _operands(m: int, n: int, k: int, plan: GemmPlan,
-              trans_a: bool, trans_b: bool, seed: int = 0):
+              trans_a: bool, trans_b: bool, seed: int = 0,
+              g: Optional[int] = None):
+    """Random operands for one (optionally grouped: ``g`` leading dim) GEMM."""
     rng = np.random.default_rng(seed)
+    lead = () if g is None else (g,)
 
     def _mk(shape, dtype):
         if jnp.dtype(dtype).kind == "i":
             return jnp.asarray(rng.integers(-127, 127, shape), dtype)
         return jnp.asarray(rng.standard_normal(shape), dtype)
 
-    a = _mk((k, m) if trans_a else (m, k), plan.a_dtype)
-    b = _mk((n, k) if trans_b else (k, n), plan.b_dtype)
+    a = _mk(lead + ((k, m) if trans_a else (m, k)), plan.a_dtype)
+    b = _mk(lead + ((n, k) if trans_b else (k, n)), plan.b_dtype)
     return a, b
+
+
+def _time_best(run, iters: int, warmup: int) -> float:
+    """Best-of-``iters`` wall microseconds for ``run()`` (post-warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(run())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def measure_plan(
@@ -146,14 +161,8 @@ def measure_plan(
             interpret=(mode == "interpret"),
         )
 
-    for _ in range(warmup):
-        jax.block_until_ready(run())
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(run())
-        best = min(best, time.perf_counter() - t0)
-    return Measurement(plan=plan, mode=mode, wall_us=best * 1e6,
+    return Measurement(plan=plan, mode=mode,
+                       wall_us=_time_best(run, iters, warmup),
                        modeled_us=modeled)
 
 
@@ -311,6 +320,34 @@ def sweep_axis(
     return out
 
 
+def _persist_best(key: str, measurements, cache: Optional[PlanCache],
+                  save: bool, extra_meta: Optional[dict] = None) -> TuneResult:
+    """Shared tune-result tail: pick the winner, write it to the cache.
+
+    ``measurements[0]`` must be the analytic seed (candidate_plans puts it
+    first), which makes ``TuneResult.speedup >= 1`` by construction.
+    """
+    analytic = measurements[0]
+    best = min(measurements, key=lambda mm: mm.wall_us)
+    if cache is None:
+        cache = get_plan_cache()
+    if cache is not None:
+        meta = {
+            "mode": best.mode,
+            "wall_us": best.wall_us,
+            "modeled_us": best.modeled_us,
+            "analytic_wall_us": analytic.wall_us,
+            "analytic_blocks": list(analytic.blocks),
+            "candidates": len(measurements),
+        }
+        meta.update(extra_meta or {})
+        cache.put(key, best.plan, meta=meta)
+        if save:
+            cache.save()
+    return TuneResult(key=key, analytic=analytic, best=best,
+                      measurements=tuple(measurements))
+
+
 def tune_gemm(
     m: int,
     n: int,
@@ -362,22 +399,108 @@ def tune_gemm(
         radius=radius, max_candidates=max_candidates,
         iters=iters, warmup=warmup, hw=hw, seed=seed,
     )
-    analytic = measurements[0]     # candidate_plans puts the seed first
-    best = min(measurements, key=lambda mm: mm.wall_us)
     key = make_key(m, n, k, a_dtype, b_dtype, out_dtype,
                    trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw)
-    if cache is None:
-        cache = get_plan_cache()
-    if cache is not None:
-        cache.put(key, best.plan, meta={
-            "mode": best.mode,
-            "wall_us": best.wall_us,
-            "modeled_us": best.modeled_us,
-            "analytic_wall_us": analytic.wall_us,
-            "analytic_blocks": list(analytic.blocks),
-            "candidates": len(measurements),
-        })
-        if save:
-            cache.save()
-    return TuneResult(key=key, analytic=analytic, best=best,
-                      measurements=tuple(measurements))
+    return _persist_best(key, measurements, cache, save)
+
+
+# --- grouped / batched instances ---------------------------------------------
+
+def measure_grouped_plan(
+    a: jax.Array,
+    b: jax.Array,
+    plan: GemmPlan,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    mode: str = "auto",
+    iters: int = 3,
+    warmup: int = 1,
+    hw: HardwareSpec = DEFAULT_HW,
+) -> Measurement:
+    """Time ``mpgemm_grouped_pallas`` under one forced plan.
+
+    ``plan.flops``/``plan.hbm_bytes`` already cover all G groups (see
+    :func:`~repro.core.blocking.grouped_plan_from_2d`), so the modeled
+    roofline time is launch-total, directly comparable to the wall clock.
+    """
+    mode = _resolve_mode(mode)
+    modeled = _modeled_us(plan, hw)
+    if mode == "modeled":
+        return Measurement(plan=plan, mode=mode, wall_us=modeled,
+                           modeled_us=modeled)
+
+    def run():
+        return mpgemm_grouped_pallas(
+            a, b, trans_a=trans_a, trans_b=trans_b,
+            out_dtype=plan.out_dtype, plan=plan,
+            interpret=(mode == "interpret"),
+        )
+
+    return Measurement(plan=plan, mode=mode,
+                       wall_us=_time_best(run, iters, warmup),
+                       modeled_us=modeled)
+
+
+def tune_grouped_gemm(
+    g: int,
+    m: int,
+    n: int,
+    k: int,
+    a_dtype="float32",
+    b_dtype=None,
+    out_dtype=None,
+    *,
+    trans_a: bool = False,
+    trans_b: bool = False,
+    mode: str = "auto",
+    radius: int = 1,
+    max_candidates: int = 24,
+    iters: int = 3,
+    warmup: int = 1,
+    hw: HardwareSpec = DEFAULT_HW,
+    cache: Optional[PlanCache] = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """:func:`tune_gemm` for a grouped instance (G x (M, N, K)).
+
+    Candidates are the 2-D lattice neighborhood lifted per-group (the group
+    axis adds grid steps, not working set, so the candidate space is the
+    same), measured through the grouped kernel, and persisted under the
+    grouped cache key (``g…`` prefix) that
+    ``mp_dot_grouped`` / ``mpgemm_grouped_pallas`` read back.
+
+    Runnable on CPU::
+
+        >>> from repro.tuning import PlanCache, tune_grouped_gemm
+        >>> cache = PlanCache(None)
+        >>> r = tune_grouped_gemm(4, 64, 64, 128, "float32", mode="modeled",
+        ...                       max_candidates=3, cache=cache)
+        >>> r.best.plan.g
+        4
+    """
+    plans = [
+        grouped_plan_from_2d(p, g)
+        for p in candidate_plans(
+            m, n, k, a_dtype, b_dtype, out_dtype, hw=hw,
+            radius=radius, max_candidates=max_candidates,
+        )
+    ]
+    resolved = _resolve_mode(mode)
+    if resolved == "modeled":
+        measurements = [
+            measure_grouped_plan(None, None, p, mode="modeled", hw=hw)
+            for p in plans
+        ]
+    else:
+        a, b = _operands(m, n, k, plans[0], trans_a, trans_b, seed, g=g)
+        measurements = [
+            measure_grouped_plan(a, b, p, trans_a=trans_a, trans_b=trans_b,
+                                 mode=resolved, iters=iters, warmup=warmup,
+                                 hw=hw)
+            for p in plans
+        ]
+    key = make_key(m, n, k, a_dtype, b_dtype, out_dtype,
+                   trans_a=trans_a, trans_b=trans_b, hw=hw, g=g)
+    return _persist_best(key, measurements, cache, save, extra_meta={"g": g})

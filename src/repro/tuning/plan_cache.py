@@ -82,15 +82,19 @@ def make_key(
     trans_b: bool = False,
     beta: float = 0.0,
     hw: HardwareSpec = DEFAULT_HW,
+    g: int = 1,
 ) -> str:
     """Canonical cache key for one logical GEMM instance.
 
     Stable across processes and python versions (plain string, no hashing),
     so on-disk caches remain valid as long as the schema version holds.
+    Grouped instances (``g > 1``) get a ``g…`` prefix; plain 2-D keys are
+    byte-identical to the pre-grouped schema, so existing caches stay warm.
     """
     a_dtype, b_dtype, out_dtype, _ = _resolve_dtypes(a_dtype, b_dtype, out_dtype)
+    group = f"g{g}|" if g != 1 else ""
     return (
-        f"m{m}n{n}k{k}"
+        f"{group}m{m}n{n}k{k}"
         f"|a={a_dtype}|b={b_dtype}|out={out_dtype}"
         f"|ta={int(trans_a)}|tb={int(trans_b)}|beta={int(beta != 0.0)}"
         f"|hw={hw.name}"
@@ -280,16 +284,18 @@ def lookup_plan(
     trans_b: bool = False,
     beta: float = 0.0,
     hw: HardwareSpec = DEFAULT_HW,
+    g: int = 1,
 ) -> Optional[GemmPlan]:
     """Tuned plan for this GEMM instance, or None (miss / cache disabled).
 
-    This is the single read path used by both ``core/gemm.py`` (the mp_dot
-    layer) and ``kernels/mpgemm.py`` (direct kernel callers).
+    This is the single read path used by both ``core/gemm.py`` (the
+    mp_dot / mp_dot_grouped layer) and ``kernels/mpgemm.py`` (direct kernel
+    callers).  ``g > 1`` selects the grouped-instance namespace.
     """
     cache = get_plan_cache()
     if cache is None:
         return None
     return cache.get(make_key(
         m, n, k, a_dtype, b_dtype, out_dtype,
-        trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw,
+        trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw, g=g,
     ))

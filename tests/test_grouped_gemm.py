@@ -1,0 +1,228 @@
+"""mp_dot_grouped / mpgemm_grouped_pallas: einsum equivalence across the
+precision policies, ragged groups via masking, fused-transpose VJP, and the
+grouped plan/cache plumbing."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import plan_gemm, plan_grouped_gemm
+from repro.core.gemm import mp_dot_grouped, mp_einsum
+from repro.kernels.mpgemm import mpgemm_grouped_pallas
+from repro.tuning import PlanCache, make_key, set_plan_cache, tune_grouped_gemm
+
+G, M, K, N = 4, 24, 40, 24
+
+
+@pytest.fixture
+def ops(rng):
+    x = jnp.asarray(rng.standard_normal((G, M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((G, K, N)), "float32")
+    return x, w
+
+
+def _ref(x, w):
+    return jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                      w.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("policy", ["fp32", "bf16", "int8"])
+def test_forward_matches_einsum_reference(ops, policy, backend):
+    x, w = ops
+    y = mp_dot_grouped(x, w, policy=policy, backend=backend)
+    ref = np.asarray(_ref(x, w))
+    got = np.asarray(y, np.float32)
+    if policy == "fp32":
+        np.testing.assert_allclose(got, ref, atol=1e-5)
+    elif policy == "bf16":
+        np.testing.assert_allclose(got, ref, atol=0.15)  # bf16 mantissa
+    else:  # int8 dynamic per-tensor: bounded relative error vs fp32
+        assert np.abs(got - ref).max() < 0.05 * np.abs(ref).max()
+
+
+@pytest.mark.parametrize("policy", ["fp32", "bf16", "int8"])
+def test_backends_agree(ops, policy):
+    x, w = ops
+    a = mp_dot_grouped(x, w, policy=policy, backend="xla")
+    b = mp_dot_grouped(x, w, policy=policy, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_trans_w_matches_einsum(ops):
+    x, w = ops
+    wt = jnp.swapaxes(w, 1, 2)  # stored (G, N, K)
+    y = mp_dot_grouped(x, wt, policy="fp32", trans_w=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(_ref(x, w)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["fp32", "bf16"])
+def test_vjp_matches_einsum(ops, policy):
+    x, w = ops
+
+    def f1(x, w):
+        return jnp.sum(mp_dot_grouped(x, w, policy=policy,
+                                      out_dtype=jnp.float32) ** 2)
+
+    def f2(x, w):
+        cd = jnp.float32 if policy == "fp32" else jnp.bfloat16
+        return jnp.sum(jnp.einsum(
+            "gmk,gkn->gmn", x.astype(cd), w.astype(cd),
+            preferred_element_type=jnp.float32) ** 2)
+
+    g1 = jax.grad(f1, (0, 1))(x, w)
+    g2 = jax.grad(f2, (0, 1))(x, w)
+    tol = 1e-4 if policy == "fp32" else 0.35  # bf16 bwd partial sums
+    scale = max(float(jnp.abs(g2[0]).max()), 1.0)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol * scale)
+
+
+def test_int8_vjp_is_ste_and_finite(ops):
+    """int8 backward runs in the bf16 sibling (straight-through estimator)."""
+    x, w = ops
+    g = jax.grad(lambda w: jnp.sum(
+        mp_dot_grouped(x, w, policy="int8") ** 2))(w)
+    assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.abs(g).sum()) > 0
+
+
+def test_ragged_groups_mask_output_and_grads(ops):
+    x, w = ops
+    sizes = jnp.asarray([M, 10, 0, 17], jnp.int32)
+    y = mp_dot_grouped(x, w, policy="fp32", group_sizes=sizes)
+    ref = np.asarray(_ref(x, w))
+    for gi, s in enumerate([M, 10, 0, 17]):
+        assert np.all(np.asarray(y[gi, s:]) == 0.0)
+        np.testing.assert_allclose(np.asarray(y[gi, :s]), ref[gi, :s],
+                                   atol=1e-5)
+    # masked rows contribute no gradient; group 2 (size 0) none at all
+    dx = jax.grad(lambda x: jnp.sum(mp_dot_grouped(
+        x, w, policy="fp32", group_sizes=sizes) ** 2))(x)
+    assert np.all(np.asarray(dx[2]) == 0.0)
+    assert np.all(np.asarray(dx[1, 10:]) == 0.0)
+    assert float(jnp.abs(dx[0]).sum()) > 0
+
+
+def test_bias_forward_and_grad(ops):
+    x, w = ops
+    bias = jnp.ones((G, N), jnp.float32)
+    y = mp_dot_grouped(x, w, bias, policy="fp32")
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(_ref(x, w)) + 1.0, atol=1e-5)
+    db = jax.grad(lambda b: jnp.sum(
+        mp_dot_grouped(x, w, b, policy="fp32")))(bias)
+    np.testing.assert_allclose(np.asarray(db), float(M), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_shared_1d_bias_all_backends_and_grad(ops, backend):
+    """A shared (N,) bias broadcasts to every group on both backends, and
+    its gradient sum-reduces back to (N,)."""
+    x, w = ops
+    bias = jnp.arange(N, dtype=jnp.float32)
+    y = mp_dot_grouped(x, w, bias, policy="fp32", backend=backend)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(_ref(x, w)) + np.arange(N),
+                               atol=1e-5)
+    db = jax.grad(lambda b: jnp.sum(mp_dot_grouped(
+        x, w, b, policy="fp32", backend=backend)))(bias)
+    assert db.shape == (N,)
+    np.testing.assert_allclose(np.asarray(db), float(G * M), atol=1e-4)
+
+
+def test_static_int8_weights_under_int8_policy(ops):
+    """Static {"q","scale"} expert weights must dequantize to float (not the
+    int8 policy's own compute dtype) before dynamic re-quantization."""
+    from repro.core.quantization import quantize_tensor
+    x, w = ops
+    wq = quantize_tensor(w * 0.01)   # small scale: int8 truncation would zero it
+    ref = np.asarray(_ref(x, w * 0.01))
+    y = np.asarray(mp_dot_grouped(x, wq, policy="int8"), np.float32)
+    assert np.abs(y).max() > 0.1 * np.abs(ref).max()   # not collapsed to ~0
+    assert np.abs(y - ref).max() < 0.1 * np.abs(ref).max()
+
+
+def test_grad_wrt_x_with_static_int8_weights(ops):
+    """grad through mp_dot_grouped must work when w is a static {"q","scale"}
+    dict (the bwd rule contracts against the dequantized array, not the
+    dict) — the serving-weights MoE configuration."""
+    from repro.core.quantization import quantize_tensor
+    x, w = ops
+    wq = quantize_tensor(w)
+    dx = jax.grad(lambda x: jnp.sum(
+        mp_dot_grouped(x, wq, policy="bf16") ** 2))(x)
+    assert dx.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(dx))) and float(jnp.abs(dx).sum()) > 0
+
+
+def test_non_f32_bias_grad_dtype(ops):
+    """dbias cotangent must match a non-f32 bias primal's dtype."""
+    x, w = ops
+    bias = jnp.ones((G, N), jnp.bfloat16)
+    db = jax.grad(lambda b: jnp.sum(mp_dot_grouped(
+        x, w, b, policy="bf16", out_dtype=jnp.float32)))(bias)
+    assert db.dtype == jnp.bfloat16 and db.shape == (G, N)
+
+
+def test_kernel_epilogue_fusion(rng):
+    a = jnp.asarray(rng.standard_normal((3, 16, 48)), "float32")
+    b = jnp.asarray(rng.standard_normal((3, 48, 24)), "float32")
+    bias = jnp.asarray(rng.standard_normal((3, 24)), "float32")
+    y = mpgemm_grouped_pallas(a, b, alpha=0.5, bias=bias, activation="relu",
+                              interpret=True)
+    ref = jax.nn.relu(0.5 * _ref(a, b) + bias[:, None, :])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+
+def test_grouped_plan_scaling_and_key_namespace():
+    p2 = plan_gemm(M, N, K, "float32")
+    pg = plan_grouped_gemm(G, M, N, K, "float32")
+    assert pg.g == G and (pg.bm, pg.bn, pg.bk) == (p2.bm, p2.bn, p2.bk)
+    assert pg.flops == G * p2.flops and pg.hbm_bytes == G * p2.hbm_bytes
+    assert pg.vmem_bytes == p2.vmem_bytes          # group adds no working set
+    assert abs(pg.cmr - p2.cmr) < 1e-9             # CMR is g-invariant
+    k2 = make_key(M, N, K, "float32")
+    kg = make_key(M, N, K, "float32", g=G)
+    assert kg != k2 and kg.startswith(f"g{G}|")
+    assert make_key(M, N, K, "float32", g=1) == k2  # 2-D schema unchanged
+
+
+def test_tuned_grouped_plan_is_consumed(ops):
+    """tune_grouped_gemm persists under the grouped key; mp_dot_grouped
+    picks the tuned plan up transparently with identical numerics."""
+    x, w = ops
+    cache = PlanCache(None)
+    res = tune_grouped_gemm(G, M, N, K, "float32", mode="modeled",
+                            max_candidates=4, cache=cache)
+    assert res.best.plan.g == G
+    assert res.key in cache and cache.get(res.key).g == G
+    baseline = mp_dot_grouped(x, w, policy="fp32", backend="interpret")
+    prev = set_plan_cache(cache)
+    try:
+        tuned = mp_dot_grouped(x, w, policy="fp32", backend="interpret")
+    finally:
+        set_plan_cache(prev)
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(baseline),
+                               atol=1e-6)
+
+
+def test_mp_einsum_routes_grouped_specs(ops):
+    x, w = ops
+    ref = np.asarray(_ref(x, w))
+    y = mp_einsum("end,edf->enf", x, w, policy="fp32")
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5)
+    wt = jnp.swapaxes(w, 1, 2)
+    y2 = mp_einsum("bij,bkj->bik", x, wt, policy="fp32")
+    np.testing.assert_allclose(np.asarray(y2), ref, atol=1e-5)
+    # non-grouped specs still take the einsum path (shape sanity only)
+    att = mp_einsum("bhqd,bhkd->bhqk",
+                    jnp.ones((2, 2, 4, 8)), jnp.ones((2, 2, 4, 8)),
+                    policy="fp32")
+    assert att.shape == (2, 2, 4, 4)
