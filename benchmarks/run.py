@@ -12,8 +12,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks import (
         bench_autotune, bench_breakdown, bench_gemm_workloads,
-        bench_irregular, bench_loads, bench_mixed_precision, bench_tiles,
-        roofline_report,
+        bench_irregular, bench_loads, bench_mixed_precision, bench_packing,
+        bench_tiles, roofline_report,
     )
     bench_tiles.run()                      # paper Fig. 2
     bench_loads.run()                      # paper Fig. 3
@@ -25,6 +25,10 @@ def main() -> None:
     bench_breakdown.run()                  # paper Fig. 15
     roofline_report.run()                  # beyond-paper: dry-run roofline
     bench_autotune.run()                   # beyond-paper: Sec. III closed loop
+    for policy in ("bf16", "int8"):        # beyond-paper: §IV-C AOT packing
+        bench_packing.run(policy)
+        bench_packing.run_grouped(policy)
+    bench_packing.run("bf16", trans_w=True)
 
 
 if __name__ == "__main__":

@@ -25,10 +25,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import config as cfg
 from repro.core.policy import PrecisionPolicy, get_policy, quantize_per_tensor
 from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
+from repro.packing.layout import PackedOperand, is_packed
 
 
 def _dims(trans_a: bool, trans_b: bool):
@@ -135,6 +137,156 @@ def _matmul_2d(x, w, bias, policy, trans_a, trans_b, backend,
                         out_dtype, acc_dtype, grouped=False)
 
 
+# --- packed-weight path ------------------------------------------------------
+
+def _matmul_packed_impl(x, wp: PackedOperand, bias, policy: PrecisionPolicy,
+                        backend: str, out_dtype, *, grouped: bool):
+    """One GEMM (2-D or grouped) against a pre-packed weight, under a policy.
+
+    Kernel backends read the payload directly — identity tile index maps,
+    transpose resolved at pack time, per-tile int8 dequant riding the
+    accumulation — so NO per-call operand prep (cast / dequant / strided
+    re-layout) is materialized; that is the whole point of packing.  The
+    XLA backend, which picks its own tiling and cannot consume the block
+    layout, unpacks once and reuses the dense-path policy logic, keeping
+    numerics aligned across backends.
+    """
+    from repro.packing.pack import unpack_operand
+    layout = wp.layout
+    kernel_backend = backend in ("pallas", "interpret")
+    if not kernel_backend or (policy.quantized and layout.dtype != "int8"):
+        # XLA fallback — or a float payload under the dynamic-int8 policy,
+        # whose per-tensor weight quantization needs a dense array.
+        w = unpack_operand(wp, backend=backend if kernel_backend else None)
+        return _matmul_impl(x, w, bias, policy, False, False, backend,
+                            out_dtype, None, grouped=grouped)
+    kernel = mpgemm_grouped_pallas if grouped else mpgemm_pallas
+    interp = backend == "interpret"
+    out_dtype = out_dtype or policy.out_dtype
+    if policy.quantized:
+        # Dynamic x-side quantization only: the weight side is already
+        # int8 with per-tile scales inside the payload.
+        xq, sx = quantize_per_tensor(x)
+        return kernel(xq, b_packed=wp, scale=sx, bias=bias,
+                      out_dtype=out_dtype, interpret=interp)
+    xc = x.astype(jnp.dtype(policy.compute_dtype))
+    if layout.dtype != "int8":
+        wp = wp.astype(policy.compute_dtype)  # no-op when packed right
+    return kernel(xc, b_packed=wp, bias=bias, out_dtype=out_dtype,
+                  interpret=interp)
+
+
+def _bwd_flavor(policy: PrecisionPolicy):
+    """(backward policy, backward partial-sum dtype) — see _mp_dot_bwd."""
+    bwd_policy = get_policy("fp32" if policy.name == "fp32" else "bf16")
+    bwd_acc = "float32" if policy.name == "fp32" else "bfloat16"
+    return bwd_policy, bwd_acc
+
+
+def _packed_weight_cotangent(wp: PackedOperand, dw_dense) -> PackedOperand:
+    """Cotangent pytree for a packed-weight primal.
+
+    Float payloads: pack/unpack is a LINEAR bijection onto the tile grid
+    (zero pads aside), so the payload cotangent is simply the packed dense
+    gradient — packed weights stay trainable.  int8 payloads (per-tile
+    quantized) have no usable tangent space: integer leaves get float0
+    zeros (JAX's unit cotangent for int primals), scales zeros — the
+    weight is frozen, the standard serving configuration.
+    """
+    import dataclasses
+
+    from repro.packing.pack import pack_reference
+    layout = wp.layout
+    if layout.per_tile_scales:
+        return PackedOperand(
+            np.zeros(wp.payload.shape, jax.dtypes.float0),
+            jnp.zeros_like(wp.scales), layout)
+    # dw_dense is in the LOGICAL (k, n) orientation (the bwd GEMMs resolve
+    # the transpose), so the cotangent pack must not re-apply the layout's
+    # recorded source transpose.
+    payload_ct, _ = pack_reference(
+        dw_dense, dataclasses.replace(layout, trans_w=False))
+    return PackedOperand(payload_ct, None, layout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _mp_dot_packed_core(x2d, wp, bias, policy_name: str, backend: str):
+    policy = get_policy(policy_name)
+    return _matmul_packed_impl(x2d, wp, bias, policy, backend, None,
+                               grouped=False)
+
+
+def _mp_dot_packed_fwd(x2d, wp, bias, policy_name, backend):
+    y = _mp_dot_packed_core(x2d, wp, bias, policy_name, backend)
+    return y, (x2d, wp, bias is not None)
+
+
+def _mp_dot_packed_bwd(policy_name, backend, res, dy):
+    """Same two fused-transpose backward GEMMs as :func:`_mp_dot_bwd` — the
+    only packing-specific step is recovering a dense weight once (the
+    payload's layout serves the FORWARD read pattern; backward contracts
+    over N, for which the dense on-the-fly-transpose kernel path already
+    exists) and re-packing the weight gradient."""
+    from repro.packing.pack import unpack_operand
+    x2d, wp, has_bias = res
+    policy = get_policy(policy_name)
+    bwd_policy, bwd_acc = _bwd_flavor(policy)
+    kb = backend if backend in ("pallas", "interpret") else None
+    w = unpack_operand(wp, backend=kb)      # dense (k, n), transpose resolved
+    dx = _matmul_2d(dy, w, None, bwd_policy, False, True, backend,
+                    out_dtype=x2d.dtype, acc_dtype=bwd_acc)
+    if wp.layout.per_tile_scales:
+        dw_dense = None
+    else:
+        dw_dense = _matmul_2d(x2d, dy, None, bwd_policy, True, False, backend,
+                              out_dtype=w.dtype, acc_dtype=bwd_acc)
+    dwp = _packed_weight_cotangent(wp, dw_dense)
+    dbias = jnp.sum(dy, axis=0, dtype=jnp.float32) if has_bias else None
+    return dx, dwp, dbias
+
+
+_mp_dot_packed_core.defvjp(_mp_dot_packed_fwd, _mp_dot_packed_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _mp_dot_grouped_packed_core(x3, wp, bias, policy_name: str, backend: str,
+                                out_dtype: Optional[str]):
+    policy = get_policy(policy_name)
+    return _matmul_packed_impl(x3, wp, bias, policy, backend, out_dtype,
+                               grouped=True)
+
+
+def _mp_dot_grouped_packed_fwd(x3, wp, bias, policy_name, backend, out_dtype):
+    y = _mp_dot_grouped_packed_core(x3, wp, bias, policy_name, backend,
+                                    out_dtype)
+    return y, (x3, wp, bias)
+
+
+def _mp_dot_grouped_packed_bwd(policy_name, backend, out_dtype, res, dy):
+    from repro.packing.pack import unpack_operand
+    x3, wp, bias = res
+    policy = get_policy(policy_name)
+    bwd_policy, bwd_acc = _bwd_flavor(policy)
+    kb = backend if backend in ("pallas", "interpret") else None
+    w = unpack_operand(wp, backend=kb)      # dense (g, k, n)
+    dx = _matmul_grouped(dy, w, None, bwd_policy, False, True, backend,
+                         out_dtype=x3.dtype, acc_dtype=bwd_acc)
+    if wp.layout.per_tile_scales:
+        dw_dense = None
+    else:
+        dw_dense = _matmul_grouped(x3, dy, None, bwd_policy, True, False,
+                                   backend, out_dtype=w.dtype,
+                                   acc_dtype=bwd_acc)
+    dwp = _packed_weight_cotangent(wp, dw_dense)
+    dbias = (jnp.sum(dy, axis=1, dtype=jnp.float32).astype(bias.dtype)
+             if bias is not None else None)
+    return dx, dwp, dbias
+
+
+_mp_dot_grouped_packed_core.defvjp(_mp_dot_grouped_packed_fwd,
+                                   _mp_dot_grouped_packed_bwd)
+
+
 # --- differentiable core -----------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -151,11 +303,9 @@ def _mp_dot_fwd(x2d, w, bias, policy_name, trans_w, backend):
 def _mp_dot_bwd(policy_name, trans_w, backend, res, dy):
     x2d, w, has_bias = res
     policy = get_policy(policy_name)
-    # Backward runs in the non-quantized sibling precision (STE for int8).
-    bwd_policy = get_policy("fp32" if policy.name == "fp32" else "bf16")
-    # bf16 partial sums so TP/FSDP gradient reductions move bf16 on the wire
-    # (no-op for the fp32 policy).
-    bwd_acc = "float32" if policy.name == "fp32" else "bfloat16"
+    # Non-quantized sibling precision (STE for int8), bf16 partial sums so
+    # TP/FSDP gradient reductions move bf16 on the wire (see _bwd_flavor).
+    bwd_policy, bwd_acc = _bwd_flavor(policy)
     # dx = dy @ op(w)^T : if w stored (k,n) -> dy(m,n) x w(k,n)^T == trans_b=True
     #                     if w stored (n,k) (trans_w) -> plain dy @ w.
     dx = _matmul_2d(
@@ -193,6 +343,12 @@ def mp_dot(
 
     ``trans_w=True`` is the on-the-fly-transposition path — used e.g. for
     tied-embedding logits (w stored (vocab, d_model)).
+
+    ``w`` may be a :class:`repro.packing.PackedOperand` (pre-packed at
+    parameter-load time): the forward then reads the tiled payload directly
+    — no per-call cast/dequant/transposition — and ``trans_w`` must match
+    the orientation recorded at pack time (the transpose is already
+    resolved inside the payload).
     """
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
@@ -200,6 +356,16 @@ def mp_dot(
     x2d = x.reshape(-1, x.shape[-1])
     if bias is not None:
         bias = bias.reshape(-1)
+    if is_packed(w):
+        if w.layout.g != 1:
+            raise ValueError("grouped PackedOperand: use mp_dot_grouped")
+        if trans_w != w.layout.trans_w:
+            raise ValueError(
+                f"trans_w={trans_w} but the operand was packed with "
+                f"trans_w={w.layout.trans_w} (transposition is resolved at "
+                f"pack time)")
+        y2d = _mp_dot_packed_core(x2d, w, bias, policy.name, backend)
+        return y2d.reshape(*lead, w.layout.n)
     y2d = _mp_dot_core(x2d, w, bias, policy.name, trans_w, backend)
     wshape = w["q"].shape if isinstance(w, dict) else w.shape
     n = wshape[0] if trans_w else wshape[-1]
@@ -261,12 +427,11 @@ def _mp_dot_grouped_fwd(x3, w, bias, policy_name, trans_w, backend, out_dtype):
 def _mp_dot_grouped_bwd(policy_name, trans_w, backend, out_dtype, res, dy):
     x3, w, bias = res
     policy = get_policy(policy_name)
-    # Backward runs in the non-quantized sibling precision (STE for int8);
-    # bf16 partial sums on the XLA backend so EP/TP gradient reductions move
-    # bf16 on the wire (kernel backends accumulate per the plan's acc dtype
-    # — see _matmul_impl).
-    bwd_policy = get_policy("fp32" if policy.name == "fp32" else "bf16")
-    bwd_acc = "float32" if policy.name == "fp32" else "bfloat16"
+    # Non-quantized sibling precision (STE for int8); bf16 partial sums on
+    # the XLA backend so EP/TP gradient reductions move bf16 on the wire
+    # (kernel backends accumulate per the plan's acc dtype — see
+    # _matmul_impl and _bwd_flavor).
+    bwd_policy, bwd_acc = _bwd_flavor(policy)
     # Fused-transpose grouped GEMMs — the paper's on-the-fly transposition
     # applied per expert: no transposed expert-weight copies materialize.
     # dx[g] = dy[g] @ op(w[g])^T
@@ -327,23 +492,38 @@ def mp_dot_grouped(
         raise ValueError(f"mp_dot_grouped expects x of rank 3, got {x.shape}")
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
-    from repro.core.quantization import dequantize_tensor, is_quantized
-    if is_quantized(w):
-        # Dequantize static-int8 dicts BEFORE the custom-VJP core: the bwd
-        # rule contracts against w and must see an array primal (a dict
-        # residual has no dtype and no array cotangent).  XLA still fuses
-        # the dequant into the GEMM read; differentiation flows through the
-        # dequant natively, as the pre-grouped MoE path did.
-        w = dequantize_tensor(
-            w, jnp.float32 if policy.quantized else jnp.dtype(policy.compute_dtype))
+    if is_packed(w):
+        if w.layout.g != x.shape[0]:
+            raise ValueError(
+                f"group mismatch: x has {x.shape[0]}, payload {w.layout.g}")
+        if trans_w != w.layout.trans_w:
+            raise ValueError(
+                f"trans_w={trans_w} but the operand was packed with "
+                f"trans_w={w.layout.trans_w}")
+    else:
+        from repro.core.quantization import dequantize_tensor, is_quantized
+        if is_quantized(w):
+            # Dequantize static-int8 dicts BEFORE the custom-VJP core: the
+            # bwd rule contracts against w and must see an array primal (a
+            # dict residual has no dtype and no array cotangent).  XLA
+            # still fuses the dequant into the GEMM read; differentiation
+            # flows through the dequant natively, as the pre-grouped MoE
+            # path did.
+            w = dequantize_tensor(
+                w, jnp.float32 if policy.quantized
+                else jnp.dtype(policy.compute_dtype))
     if bias is not None and bias.ndim == 1:
         # Normalize a shared (N,) bias to (G, N) BEFORE the custom-VJP core:
         # outside it autodiff sum-reduces the (G, N) bias cotangent back to
         # (N,); inside, backends would disagree on broadcasting.
         bias = jnp.broadcast_to(bias[None, :], (x.shape[0], bias.shape[0]))
     out_dtype_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
-    y = _mp_dot_grouped_core(x, w, bias, policy.name, trans_w, backend,
-                             out_dtype_s)
+    if is_packed(w):
+        y = _mp_dot_grouped_packed_core(x, w, bias, policy.name, backend,
+                                        out_dtype_s)
+    else:
+        y = _mp_dot_grouped_core(x, w, bias, policy.name, trans_w, backend,
+                                 out_dtype_s)
     if group_sizes is not None:
         sizes = jnp.asarray(group_sizes, jnp.int32).reshape(-1, 1, 1)
         rows = jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)

@@ -135,14 +135,18 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
         if not m:
             continue
         name, type_str, opcode, rest = m.groups()
-        # split operands at top paren level
+        # Split operands at top paren level.  jax >= 0.4.3x prints operand
+        # TYPES inline, e.g. ``dot(f32[128,128]{1,0} %x, ...)`` — both the
+        # shape brackets and the layout braces contain commas, so bracket
+        # and brace depth must nest like paren depth or every typed operand
+        # shears the list (and with it every positional billing rule).
         depth, buf, ops = 0, "", []
         for ch in rest:
-            if ch == "(":
+            if ch in "({[":
                 depth += 1
                 buf += ch
-            elif ch == ")":
-                if depth == 0:
+            elif ch in ")}]":
+                if ch == ")" and depth == 0:
                     break
                 depth -= 1
                 buf += ch

@@ -30,7 +30,11 @@ try:  # pltpu imports fine on CPU installs; guard anyway.
 except ImportError:  # pragma: no cover
     pltpu = None
 
-from repro.core.blocking import GemmPlan, plan_gemm, plan_grouped_gemm
+from repro.core.blocking import (
+    GemmPlan, grouped_plan_from_2d, plan_gemm, plan_grouped_gemm,
+    plan_with_blocks,
+)
+from repro.packing.layout import PackedOperand
 
 _ACTIVATIONS = {
     None: lambda x: x,
@@ -58,6 +62,30 @@ def _dot_dims(trans_a: bool, trans_b: bool):
     return (((ca,), (cb,)), ((), ()))
 
 
+def _accumulate(acc_ref, a, b, ts, trans_a: bool, trans_b: bool, acc_dtype):
+    """One K-step FMA into the resident accumulator.
+
+    ``ts`` is the packed payload's per-tile dequant scale (None on the
+    unpacked path).  With a per-tile scale the accumulator is f32 and the
+    scale is applied per K step — int8 x int8 contributions dot in int32
+    and scale on the way in; float x int8 tiles dequantize in VMEM before
+    the dot (int8 HBM reads, upcast at the compute unit)."""
+    if ts is None:
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, _dot_dims(trans_a, trans_b),
+            preferred_element_type=acc_dtype)
+    elif jnp.issubdtype(a.dtype, jnp.integer):
+        part = jax.lax.dot_general(
+            a, b, _dot_dims(trans_a, trans_b),
+            preferred_element_type=jnp.int32)
+        acc_ref[...] += part.astype(jnp.float32) * ts
+    else:
+        bf = (b.astype(jnp.float32) * ts).astype(a.dtype)
+        acc_ref[...] += jax.lax.dot_general(
+            a, bf, _dot_dims(trans_a, trans_b),
+            preferred_element_type=acc_dtype)
+
+
 def mpgemm_kernel(
     *refs,
     nk: int,
@@ -70,11 +98,15 @@ def mpgemm_kernel(
     has_bias: bool,
     activation: Optional[str],
     has_scale: bool,
+    packed_b: bool = False,
+    tile_scaled: bool = False,
 ):
     """Grid = (M/bm, N/bn, K/bk), K innermost ('arbitrary')."""
     idx = 0
     a_ref = refs[idx]; idx += 1
     b_ref = refs[idx]; idx += 1
+    ts_ref = refs[idx] if tile_scaled else None
+    idx += 1 if tile_scaled else 0
     c_ref = refs[idx] if beta != 0.0 else None
     idx += 1 if beta != 0.0 else 0
     bias_ref = refs[idx] if has_bias else None
@@ -91,17 +123,22 @@ def mpgemm_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     a = a_ref[...]
-    b = b_ref[...]
+    # Packed B: the payload block is a pre-transposed, zero-padded (bk, bn)
+    # tile behind a leading (1, 1) tile index — an identity index map, no
+    # strided DMA, no on-the-fly transposition.
+    b = b_ref[0, 0] if packed_b else b_ref[...]
     if k_rem:
         # Paper's predicate registers: mask the K tail so pipeline pad
-        # garbage (possibly NaN) never pollutes the accumulator.
+        # garbage (possibly NaN) never pollutes the accumulator.  Packed
+        # payload tiles were zero-padded at pack time, so only A needs the
+        # predicate on that path.
         valid = jnp.where(k == nk - 1, k_rem, a.shape[0 if trans_a else 1])
         a = _mask_contract(a, 0 if trans_a else 1, valid)
-        b = _mask_contract(b, 1 if trans_b else 0, valid)
+        if not packed_b:
+            b = _mask_contract(b, 1 if trans_b else 0, valid)
 
-    acc_ref[...] += jax.lax.dot_general(
-        a, b, _dot_dims(trans_a, trans_b), preferred_element_type=acc_dtype
-    )
+    ts = ts_ref[0, 0] if tile_scaled else None
+    _accumulate(acc_ref, a, b, ts, trans_a, trans_b, acc_dtype)
 
     @pl.when(k == nk - 1)
     def _epilogue():
@@ -135,11 +172,43 @@ def _compiler_params(interpret: bool, grid_rank: int = 3):
         return None
 
 
+def _packed_plan(m: int, k: int, n: int, layout, a_dtype, out_dtype,
+                 trans_a: bool, beta: float, g: int = 1) -> GemmPlan:
+    """Resolve a plan for a packed-B GEMM: tuned (packed-layout namespace)
+    if its blocks agree with the payload layout, else the analytic solve
+    with (bn, bk) pinned to the layout — the payload's tiling IS the block
+    decision, only bm stays free.  Per-tile-scaled payloads force an f32
+    accumulator (scales vary per K step, so int32 accumulation across
+    blocks is no longer exact)."""
+    from repro.tuning.plan_cache import lookup_plan
+    acc = "float32" if layout.per_tile_scales else None
+    plan = lookup_plan(
+        m, n, k, a_dtype, layout.dtype, out_dtype,
+        trans_a=trans_a, trans_b=False, beta=beta, g=g, layout=layout.tag,
+    )
+    if plan is not None and (plan.bn, plan.bk) != (layout.bn, layout.bk):
+        plan = None  # tuned entry from a different payload tiling
+    if plan is None:
+        base = plan_gemm(m, n, k, a_dtype, layout.dtype,
+                         out_dtype=out_dtype, acc_dtype=acc, beta=beta)
+        plan = plan_with_blocks(
+            m, n, k, base.bm, layout.bn, layout.bk, a_dtype, layout.dtype,
+            out_dtype, acc, beta=beta, notes="packed-b",
+        )
+        if g != 1:
+            plan = grouped_plan_from_2d(plan, g)
+    if layout.per_tile_scales and plan.acc_dtype != "float32":
+        import dataclasses
+        plan = dataclasses.replace(plan, acc_dtype="float32")
+    return plan
+
+
 def mpgemm_pallas(
     a: jax.Array,
-    b: jax.Array,
+    b: Optional[jax.Array] = None,
     c: Optional[jax.Array] = None,
     *,
+    b_packed: Optional[PackedOperand] = None,
     trans_a: bool = False,
     trans_b: bool = False,
     alpha: float = 1.0,
@@ -151,14 +220,39 @@ def mpgemm_pallas(
     plan: Optional[GemmPlan] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """out = activation(alpha * op(a) @ op(b) * scale + bias) + beta * c."""
+    """out = activation(alpha * op(a) @ op(b) * scale + bias) + beta * c.
+
+    ``b_packed`` replaces ``b`` with a pre-packed operand (repro.packing):
+    the kernel reads the (bk, bn)-tiled payload through identity index
+    maps — no strided DMA, no on-the-fly transposition (it was resolved at
+    pack time), and for int8 payloads the per-tile dequant rides the
+    accumulation.  Mutually exclusive with ``b``/``trans_b``.
+    """
+    if (b is None) == (b_packed is None):
+        raise ValueError("exactly one of b / b_packed is required")
+    layout = b_packed.layout if b_packed is not None else None
+    if layout is not None and layout.g != 1:
+        raise ValueError("grouped payload: use mpgemm_grouped_pallas")
     m = a.shape[1] if trans_a else a.shape[0]
     ka = a.shape[0] if trans_a else a.shape[1]
-    n = b.shape[0] if trans_b else b.shape[1]
-    kb = b.shape[1] if trans_b else b.shape[0]
+    if layout is not None:
+        n, kb = layout.n, layout.k
+        trans_b = False  # resolved at pack time
+    else:
+        n = b.shape[0] if trans_b else b.shape[1]
+        kb = b.shape[1] if trans_b else b.shape[0]
     if ka != kb:
-        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+        bshape = layout.payload_shape if layout is not None else b.shape
+        raise ValueError(f"contraction mismatch: {a.shape} x {bshape}")
     k = ka
+    if plan is not None and layout is not None and (
+            (plan.bn, plan.bk) != (layout.bn, layout.bk)):
+        raise ValueError(
+            f"plan blocks ({plan.bn}, {plan.bk}) incompatible with packed "
+            f"layout ({layout.bn}, {layout.bk})")
+    if plan is None and layout is not None:
+        plan = _packed_plan(m, k, n, layout, a.dtype, out_dtype,
+                            trans_a, beta)
     if plan is None:
         # Closed-loop planning: a tuned plan from the persistent cache wins
         # over the analytic model (repro.tuning populates it; lazy import
@@ -174,6 +268,11 @@ def mpgemm_pallas(
         )
     out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
     acc_dtype = jnp.dtype(plan.acc_dtype)
+    if layout is not None and layout.per_tile_scales:
+        # Per-tile scales accumulate scaled f32 partials — coerce even for
+        # an explicitly supplied plan (mirrors _packed_plan; an int32
+        # accumulator would reject the scaled stores deep inside Pallas).
+        acc_dtype = jnp.dtype(jnp.float32)
     bm, bn, bk = plan.bm, plan.bn, plan.bk
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
 
@@ -182,13 +281,23 @@ def mpgemm_pallas(
         if trans_a
         else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
     )
-    b_spec = (
-        pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
-        if trans_b
-        else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
-    )
+    if layout is not None:
+        # Identity tile read: grid step (i, j, kk) fetches payload tile
+        # (kk, j) — one contiguous DMA, the payoff of ahead-of-time packing.
+        b_spec = pl.BlockSpec((1, 1, bk, bn), lambda i, j, kk: (kk, j, 0, 0))
+        inputs = [a, b_packed.payload]
+    else:
+        b_spec = (
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+            if trans_b
+            else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        )
+        inputs = [a, b]
     in_specs = [a_spec, b_spec]
-    inputs = [a, b]
+    tile_scaled = layout is not None and layout.per_tile_scales
+    if tile_scaled:
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)))
+        inputs.append(b_packed.scales)
     if beta != 0.0:
         if c is None:
             raise ValueError("beta != 0 requires c")
@@ -219,6 +328,8 @@ def mpgemm_pallas(
         has_bias=bias is not None,
         activation=activation,
         has_scale=scale is not None,
+        packed_b=layout is not None,
+        tile_scaled=tile_scaled,
     )
 
     kwargs = {}
@@ -251,6 +362,8 @@ def mpgemm_grouped_kernel(
     has_bias: bool,
     activation: Optional[str],
     has_scale: bool,
+    packed_b: bool = False,
+    tile_scaled: bool = False,
 ):
     """Grid = (G, M/bm, N/bn, K/bk), K innermost ('arbitrary').
 
@@ -262,6 +375,8 @@ def mpgemm_grouped_kernel(
     idx = 0
     a_ref = refs[idx]; idx += 1
     b_ref = refs[idx]; idx += 1
+    ts_ref = refs[idx] if tile_scaled else None
+    idx += 1 if tile_scaled else 0
     bias_ref = refs[idx] if has_bias else None
     idx += 1 if has_bias else 0
     scale_ref = refs[idx] if has_scale else None
@@ -276,15 +391,15 @@ def mpgemm_grouped_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     a = a_ref[0]
-    b = b_ref[0]
+    b = b_ref[0, 0, 0] if packed_b else b_ref[0]
     if k_rem:
         valid = jnp.where(k == nk - 1, k_rem, a.shape[0 if trans_a else 1])
         a = _mask_contract(a, 0 if trans_a else 1, valid)
-        b = _mask_contract(b, 1 if trans_b else 0, valid)
+        if not packed_b:
+            b = _mask_contract(b, 1 if trans_b else 0, valid)
 
-    acc_ref[...] += jax.lax.dot_general(
-        a, b, _dot_dims(trans_a, trans_b), preferred_element_type=acc_dtype
-    )
+    ts = ts_ref[0, 0, 0] if tile_scaled else None
+    _accumulate(acc_ref, a, b, ts, trans_a, trans_b, acc_dtype)
 
     @pl.when(k == nk - 1)
     def _epilogue():
@@ -301,8 +416,9 @@ def mpgemm_grouped_kernel(
 
 def mpgemm_grouped_pallas(
     a: jax.Array,
-    b: jax.Array,
+    b: Optional[jax.Array] = None,
     *,
+    b_packed: Optional[PackedOperand] = None,
     trans_a: bool = False,
     trans_b: bool = False,
     alpha: float = 1.0,
@@ -323,19 +439,43 @@ def mpgemm_grouped_pallas(
     paying them G times — the grouped-GEMM-on-SME pattern (LOHO, Hello
     SME!) in TPU form.  No beta/C term: no grouped caller accumulates into
     an existing output (use the 2-D kernel for that).
+
+    ``b_packed`` replaces ``b`` with a grouped packed operand (payload
+    ``(G, nkb, nnb, bk, bn)``): identity tile reads per group, transpose
+    resolved at pack time, per-tile int8 dequant riding the accumulation —
+    the pre-packed-expert-weights serving configuration.
     """
-    if a.ndim != 3 or b.ndim != 3:
-        raise ValueError(f"grouped operands must be rank-3: {a.shape} x {b.shape}")
-    if a.shape[0] != b.shape[0]:
-        raise ValueError(f"group mismatch: {a.shape} x {b.shape}")
+    if (b is None) == (b_packed is None):
+        raise ValueError("exactly one of b / b_packed is required")
+    layout = b_packed.layout if b_packed is not None else None
+    if layout is not None and layout.g == 1:
+        raise ValueError("2-D payload: use mpgemm_pallas")
+    if a.ndim != 3 or (b is not None and b.ndim != 3):
+        raise ValueError(f"grouped operands must be rank-3: got a={a.shape}")
     g = a.shape[0]
+    if layout is not None and layout.g != g:
+        raise ValueError(f"group mismatch: a has {g}, payload {layout.g}")
+    if b is not None and b.shape[0] != g:
+        raise ValueError(f"group mismatch: {a.shape} x {b.shape}")
     m = a.shape[2] if trans_a else a.shape[1]
     ka = a.shape[1] if trans_a else a.shape[2]
-    n = b.shape[1] if trans_b else b.shape[2]
-    kb = b.shape[2] if trans_b else b.shape[1]
+    if layout is not None:
+        n, kb = layout.n, layout.k
+        trans_b = False  # resolved at pack time
+    else:
+        n = b.shape[1] if trans_b else b.shape[2]
+        kb = b.shape[2] if trans_b else b.shape[1]
     if ka != kb:
-        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+        raise ValueError(f"contraction mismatch: a={a.shape}, k_b={kb}")
     k = ka
+    if plan is not None and layout is not None and (
+            (plan.bn, plan.bk) != (layout.bn, layout.bk)):
+        raise ValueError(
+            f"plan blocks ({plan.bn}, {plan.bk}) incompatible with packed "
+            f"layout ({layout.bn}, {layout.bk})")
+    if plan is None and layout is not None:
+        plan = _packed_plan(m, k, n, layout, a.dtype, out_dtype,
+                            trans_a, 0.0, g=g)
     if plan is None:
         from repro.tuning.plan_cache import lookup_plan
         plan = lookup_plan(
@@ -347,6 +487,11 @@ def mpgemm_grouped_pallas(
                                  out_dtype=out_dtype)
     out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
     acc_dtype = jnp.dtype(plan.acc_dtype)
+    if layout is not None and layout.per_tile_scales:
+        # Per-tile scales accumulate scaled f32 partials — coerce even for
+        # an explicitly supplied plan (mirrors _packed_plan; an int32
+        # accumulator would reject the scaled stores deep inside Pallas).
+        acc_dtype = jnp.dtype(jnp.float32)
     bm, bn, bk = plan.bm, plan.bn, plan.bk
     grid = (g, pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
 
@@ -355,13 +500,23 @@ def mpgemm_grouped_pallas(
         if trans_a
         else pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk))
     )
-    b_spec = (
-        pl.BlockSpec((1, bn, bk), lambda gg, i, j, kk: (gg, j, kk))
-        if trans_b
-        else pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j))
-    )
+    if layout is not None:
+        b_spec = pl.BlockSpec((1, 1, 1, bk, bn),
+                              lambda gg, i, j, kk: (gg, kk, j, 0, 0))
+        inputs = [a, b_packed.payload]
+    else:
+        b_spec = (
+            pl.BlockSpec((1, bn, bk), lambda gg, i, j, kk: (gg, j, kk))
+            if trans_b
+            else pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j))
+        )
+        inputs = [a, b]
     in_specs = [a_spec, b_spec]
-    inputs = [a, b]
+    tile_scaled = layout is not None and layout.per_tile_scales
+    if tile_scaled:
+        in_specs.append(pl.BlockSpec((1, 1, 1),
+                                     lambda gg, i, j, kk: (gg, kk, j)))
+        inputs.append(b_packed.scales)
     if bias is not None:
         bias3d = jnp.broadcast_to(
             bias.reshape((1, -1) if bias.ndim == 1 else (g, -1))[:, None, :],
@@ -390,6 +545,8 @@ def mpgemm_grouped_pallas(
         has_bias=bias is not None,
         activation=activation,
         has_scale=scale is not None,
+        packed_b=layout is not None,
+        tile_scaled=tile_scaled,
     )
 
     kwargs = {}

@@ -26,11 +26,21 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--pack", action="store_true",
+                    help="pack static weights into kernel-native tile "
+                         "layouts at load time (repro.packing; cache via "
+                         "REPRO_PACK_CACHE)")
     args = ap.parse_args()
 
     cfg = cb.get(args.arch, smoke=args.smoke)
     model = build_model(cfg, policy=args.policy, remat=False)
     params = model.init(jax.random.PRNGKey(0))
+    if args.pack:
+        from repro.packing import pack_params, packed_param_bytes
+        params = pack_params(params, policy=args.policy,
+                             m_hint=args.batch * 32)
+        print(f"[serve] packed static weights: "
+              f"{packed_param_bytes(params)/2**20:.1f} MiB payload")
     eng = ServeEngine(model, params, batch_size=args.batch,
                       max_len=args.max_len)
     rng = np.random.default_rng(0)

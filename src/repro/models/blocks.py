@@ -268,7 +268,12 @@ def _expert_dot(ebuf, w, policy):
     the backward contractions as fused-transpose grouped GEMMs with bf16
     partial sums on the XLA backend, so the dbuf/dW EP/TP all-reduces move
     bf16 on the wire (the mixtral-hillclimb optimization that einsum-based
-    dispatch could not express — see EXPERIMENTS.md §Perf)."""
+    dispatch could not express — see EXPERIMENTS.md §Perf).
+
+    ``w`` may be a grouped :class:`repro.packing.PackedOperand` — expert
+    weights packed once at load time (``pack_params``): mp_dot_grouped
+    then reads the pre-tiled per-expert payload with identity index maps
+    instead of re-laying the experts out on every launch."""
     return mp_dot_grouped(ebuf, w, policy=policy, out_dtype=jnp.float32)
 
 

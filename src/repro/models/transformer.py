@@ -17,11 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.gemm import mp_dot
 from repro.distributed import act
 from repro.models import blocks as B
 from repro.models import recurrent as R
-from repro.models.layers import embed_init, rope_frequencies
+from repro.models.layers import (
+    embed_init, logits_from_hidden, rope_frequencies,
+)
 from repro.models.losses import chunked_softmax_xent
 
 INIT = {
@@ -306,7 +307,7 @@ class LM:
         x = self._final_hidden(params, x[:, -1:])
         head, tied = self._head(params)
         logits = self._mask_logits(
-            mp_dot(x, head, policy=self.policy, trans_w=tied))
+            logits_from_hidden(x, head, tied=tied, policy=self.policy))
         return logits[:, 0], caches
 
     def _mask_logits(self, logits):
@@ -348,7 +349,7 @@ class LM:
         x = self._final_hidden(params, x)
         head, tied = self._head(params)
         logits = self._mask_logits(
-            mp_dot(x, head, policy=self.policy, trans_w=tied))
+            logits_from_hidden(x, head, tied=tied, policy=self.policy))
         return logits[:, 0], {"stack": new_stack, "tail": new_tail}
 
 

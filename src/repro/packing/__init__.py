@@ -1,0 +1,40 @@
+"""Packed-operand subsystem — ahead-of-time tile packing (paper §IV-C).
+
+The layer between planning and execution: weights that never change are
+reorganized ONCE into the kernel-native (bk, bn) tile layout the block
+planner chose, so the GEMM inner loop stops paying per-call layout costs
+(strided DMA, on-the-fly transposition, compute-dtype casts, dequant
+materialization).
+
+    core/blocking.py (plan)                 repro.tuning (tuned plan)
+            └──────────────┬───────────────────────┘
+                           ▼
+    repro.packing: pack_operand / pack_params      <- THIS SUBSYSTEM
+            │  PackedOperand (payload + per-tile scales + PackedLayout)
+            │  PackedWeightCache (REPRO_PACK_CACHE, pack once per
+            │                     checkpoint x plan)
+            ▼
+    mp_dot / mp_dot_grouped (x, PackedOperand)
+            ▼
+    kernels/mpgemm.py  mpgemm_pallas(b_packed=...)  — identity tile reads
+
+Public API: :func:`pack_operand`, :func:`unpack_operand`,
+:func:`pack_params`, :class:`PackedOperand`, :class:`PackedLayout`,
+:class:`PackedWeightCache`, :func:`get_pack_cache`, :func:`set_pack_cache`,
+:func:`make_weight_key`, :func:`is_packed`.
+See docs/packing.md for layout diagrams and the when-does-it-pay analysis.
+"""
+from repro.packing.cache import (
+    PackedWeightCache, get_pack_cache, make_weight_key, set_pack_cache,
+    weight_digest,
+)
+from repro.packing.layout import PackedLayout, PackedOperand, is_packed
+from repro.packing.pack import pack_operand, pack_reference, unpack_operand
+from repro.packing.params import pack_params, packed_param_bytes
+
+__all__ = [
+    "PackedLayout", "PackedOperand", "PackedWeightCache",
+    "get_pack_cache", "is_packed", "make_weight_key", "pack_operand",
+    "pack_params", "pack_reference", "packed_param_bytes", "set_pack_cache",
+    "unpack_operand", "weight_digest",
+]

@@ -1,0 +1,281 @@
+"""File-backed packed-weight cache — pack once, serve forever.
+
+Packing a large serving checkpoint is a one-time cost, but it is paid at
+every process start unless the packed payloads persist.  This module
+mirrors ``tuning/plan_cache.py``'s design one level up the data ladder:
+
+* **Keying** follows the plan cache's canonical-string discipline: a key
+  names one packed artifact exactly —
+
+      ``<weight name>|<PackedLayout.tag>|k{K}n{N}[g{G}]|src=<dtype>|sha=<digest>``
+
+  The layout tag carries (bk, bn, payload dtype), so a *plan change*
+  (retuning, hardware change) changes the key and transparently invalidates
+  the cached payload — the cache can never serve tiles packed for a
+  different block decision.  The content digest does the same for a weight
+  update (new checkpoint -> new digest -> repack).
+
+* **Persistence** is a directory: ``index.json`` (versioned, atomically
+  replaced under the plan cache's advisory file lock) maps keys to
+  ``.npz`` payload files written tmp-then-rename, so concurrent packers
+  sharing a cache dir lose nothing and never read torn files.
+
+* **Process-global behavior** is controlled by ``REPRO_PACK_CACHE``:
+  unset — in-memory cache (packs are reused within the process);
+  ``<dir>`` — persistent cache at that directory; ``off``/``0`` — disabled
+  (every ``get_or_pack`` repacks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.packing.layout import PackedLayout, PackedOperand
+
+_SCHEMA_VERSION = 1
+
+_OFF_VALUES = ("off", "0", "none", "disabled")
+
+
+def _file_lock(path: Path):
+    """The plan cache's advisory cross-process lock, shared lazily —
+    importing repro.tuning at module level would close an import cycle
+    (tuning -> kernels -> packing.layout -> this module)."""
+    from repro.tuning.plan_cache import _file_lock as impl
+    return impl(path)
+
+
+def weight_digest(w) -> str:
+    """Content fingerprint of a weight: sha256 over bytes + shape + dtype."""
+    arr = np.asarray(w)
+    h = hashlib.sha256()
+    h.update(str(arr.shape).encode())
+    h.update(str(arr.dtype).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def make_weight_key(name: str, w, layout: PackedLayout) -> str:
+    """Canonical cache key for one packed weight (see module docstring)."""
+    group = f"g{layout.g}|" if layout.g != 1 else ""
+    return (f"{name}|{layout.tag}|{group}k{layout.k}n{layout.n}"
+            f"|src={layout.orig_dtype}|sha={weight_digest(w)[:16]}")
+
+
+def _layout_to_dict(layout: PackedLayout) -> dict:
+    return dataclasses.asdict(layout)
+
+
+def _layout_from_dict(d: dict) -> PackedLayout:
+    return PackedLayout(**d)
+
+
+class PackedWeightCache:
+    """Directory-backed (or in-memory) map key -> :class:`PackedOperand`.
+
+    Thread-safe.  ``path=None`` keeps packed payloads purely in memory —
+    the process-global default, and what tests use.
+
+    Example (runnable on CPU)::
+
+        >>> import jax.numpy as jnp
+        >>> from repro.packing import PackedWeightCache, pack_operand
+        >>> cache = PackedWeightCache("/tmp/packed")
+        >>> w = jnp.ones((64, 32))
+        >>> p = cache.get_or_pack("mlp/w_up", w, (16, 16))
+        >>> cache.get_or_pack("mlp/w_up", w, (16, 16)) is not None  # hit
+        True
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = Path(path) if path is not None else None
+        self._lock = threading.RLock()
+        self._mem: Dict[str, PackedOperand] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # -- index persistence ---------------------------------------------------
+
+    def _index_path(self) -> Path:
+        return self.path / "index.json"
+
+    def _read_index(self) -> Dict[str, dict]:
+        if self.path is None or not self._index_path().exists():
+            return {}
+        try:
+            raw = json.loads(self._index_path().read_text())
+        except (OSError, json.JSONDecodeError):
+            return {}
+        if not isinstance(raw, dict) or raw.get("version") != _SCHEMA_VERSION:
+            return {}
+        entries = raw.get("entries")
+        return dict(entries) if isinstance(entries, dict) else {}
+
+    def _write_index(self, entries: Dict[str, dict]) -> None:
+        payload = json.dumps({"version": _SCHEMA_VERSION, "entries": entries},
+                             indent=1, sort_keys=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            os.replace(tmp, self._index_path())
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- map interface -------------------------------------------------------
+
+    def get(self, key: str) -> Optional[PackedOperand]:
+        with self._lock:
+            if key in self._mem:
+                return self._mem[key]
+            if self.path is None:
+                return None
+            entry = self._read_index().get(key)
+            if entry is None:
+                return None
+            try:
+                data = np.load(self.path / entry["file"])
+                layout = _layout_from_dict(entry["layout"])
+                payload = jnp.asarray(data["payload"])
+                scales = (jnp.asarray(data["scales"])
+                          if "scales" in data.files else None)
+            except (OSError, KeyError, TypeError, ValueError):
+                return None  # corrupt entry == miss, never a crash
+            packed = PackedOperand(payload, scales, layout)
+            self._mem[key] = packed
+            return packed
+
+    def put(self, key: str, packed: PackedOperand) -> None:
+        with self._lock:
+            self._mem[key] = packed
+            if self.path is None:
+                return
+            self.path.mkdir(parents=True, exist_ok=True)
+            fname = hashlib.sha256(key.encode()).hexdigest()[:24] + ".npz"
+            arrays = {"payload": np.asarray(packed.payload)}
+            if packed.scales is not None:
+                arrays["scales"] = np.asarray(packed.scales)
+            fd, tmp = tempfile.mkstemp(dir=str(self.path), suffix=".npz.tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    np.savez(f, **arrays)
+                os.replace(tmp, self.path / fname)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+            with _file_lock(self._index_path()):
+                entries = self._read_index()  # merge concurrent writers
+                entries[key] = {"file": fname,
+                                "layout": _layout_to_dict(packed.layout)}
+                self._write_index(entries)
+
+    def keys(self):
+        with self._lock:
+            disk = set(self._read_index()) if self.path is not None else set()
+            return sorted(disk | set(self._mem))
+
+    def clear(self) -> None:
+        """Drop every entry (memory and, for a dir cache, the index — npz
+        payload files are unlinked too: packed payloads can be GBs)."""
+        with self._lock:
+            self._mem = {}
+            if self.path is None or not self.path.exists():
+                return
+            with _file_lock(self._index_path()):
+                for entry in self._read_index().values():
+                    f = self.path / entry.get("file", "")
+                    if f.suffix == ".npz" and f.exists():
+                        f.unlink()
+                self._write_index({})
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            if key in self._mem:
+                return True
+            return self.path is not None and key in self._read_index()
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+    # -- the convenience every caller wants ----------------------------------
+
+    def get_or_pack(self, name: str, w, plan_or_blocks, *,
+                    trans_w: bool = False, dtype=None,
+                    backend: Optional[str] = None,
+                    pack_fn: Optional[Callable] = None,
+                    lead_axes: int = 0) -> PackedOperand:
+        """Return the cached packed form of ``w`` under ``name``, packing
+        (and caching) on miss.  Key = name + layout + content digest, so a
+        plan change or weight update is an automatic miss (invalidation).
+        ``pack_fn`` overrides the packer and ``lead_axes`` marks leading
+        stack axes the packer vmaps over (scanned layer stacks), excluded
+        from the per-slice layout but included in the digest."""
+        from repro.packing.pack import _blocks_of, _layout_for, pack_operand
+        bk, bn = _blocks_of(plan_or_blocks)
+        core = w
+        for _ in range(lead_axes):
+            core = core[0]
+        layout = _layout_for(core, bk, bn, trans_w=trans_w, dtype=dtype,
+                             grouped=(core.ndim == 3))
+        key = make_weight_key(name, w, layout)
+        hit = self.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        packer = pack_fn or pack_operand
+        packed = packer(w, (bk, bn), trans_w=trans_w, dtype=dtype,
+                        backend=backend)
+        self.put(key, packed)
+        return packed
+
+
+# -- process-global cache -----------------------------------------------------
+
+_global_lock = threading.Lock()
+_global_cache: Optional[PackedWeightCache] = None
+_global_configured = False
+
+
+def _env_cache() -> Optional[PackedWeightCache]:
+    env = os.environ.get("REPRO_PACK_CACHE", "").strip()
+    if env.lower() in _OFF_VALUES:
+        return None
+    if env:
+        return PackedWeightCache(env)
+    return PackedWeightCache(None)  # in-memory process-global default
+
+
+def get_pack_cache() -> Optional[PackedWeightCache]:
+    """The process-global packed-weight cache (None == disabled)."""
+    global _global_cache, _global_configured
+    with _global_lock:
+        if not _global_configured:
+            _global_cache = _env_cache()
+            _global_configured = True
+        return _global_cache
+
+
+def set_pack_cache(cache: Optional[PackedWeightCache]):
+    """Install ``cache`` as the process-global cache; returns the previous.
+
+    ``None`` disables caching (every pack_params call repacks).
+    """
+    global _global_cache, _global_configured
+    with _global_lock:
+        prev = _global_cache if _global_configured else None
+        _global_cache = cache
+        _global_configured = True
+        return prev

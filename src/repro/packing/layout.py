@@ -1,0 +1,170 @@
+"""Packed-operand layout metadata and the :class:`PackedOperand` pytree.
+
+The paper's third pillar — "efficient data packing with on-the-fly
+transposition" — packs operand blocks into micro-kernel-native layouts
+*once*, so the GEMM inner loop reads contiguous, transpose-resolved tiles.
+This module defines the TPU form of that layout:
+
+    logical weight  w[k, n]   (or w[n, k] under ``trans_w``)
+        │  pack (repro.packing.pack): tile, pad edges with ZEROS,
+        │  resolve the transpose, optionally per-tile int8 quantize
+        ▼
+    payload[nkb, nnb, bk, bn]          (grouped: [g, nkb, nnb, bk, bn])
+    scales [nkb, nnb] f32 (int8 only)  (grouped: [g, nkb, nnb])
+
+Every (bk, bn) tile is **contiguous in HBM** and sits exactly where the
+kernel's (kk, j) grid step needs it, so the pack-aware MPGEMM path
+(``kernels/mpgemm.py::mpgemm_pallas(b_packed=...)``) reads it with an
+*identity* BlockSpec index map — no strided DMA, no on-the-fly
+transposition, no per-call dequant/cast materialization.
+
+:class:`PackedLayout` is the static (hashable) description; it travels as
+pytree aux data, so :class:`PackedOperand` can sit inside model parameter
+trees, be sliced by ``lax.scan`` over stacked layers (the payload simply
+carries a leading layer axis), and cross jit boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static description of one packed operand (pytree aux data).
+
+    ``k``/``n`` are the LOGICAL GEMM dims (contraction x output columns) —
+    the transpose of a ``trans_w`` source is already resolved, so consumers
+    never see the storage orientation.  ``dtype`` is the payload dtype
+    (``int8`` implies per-tile scales); ``orig_dtype`` is the source
+    array's dtype (the unpack target for float payloads).  ``g`` > 1 marks
+    a grouped operand (MoE experts / batched weights).
+    """
+
+    k: int
+    n: int
+    bk: int
+    bn: int
+    dtype: str
+    orig_dtype: str
+    trans_w: bool = False
+    g: int = 1
+
+    @property
+    def nkb(self) -> int:
+        return _cdiv(self.k, self.bk)
+
+    @property
+    def nnb(self) -> int:
+        return _cdiv(self.n, self.bn)
+
+    @property
+    def per_tile_scales(self) -> bool:
+        return self.dtype == "int8"
+
+    @property
+    def payload_shape(self) -> Tuple[int, ...]:
+        base = (self.nkb, self.nnb, self.bk, self.bn)
+        return (self.g,) + base if self.g != 1 else base
+
+    @property
+    def scales_shape(self) -> Optional[Tuple[int, ...]]:
+        if not self.per_tile_scales:
+            return None
+        base = (self.nkb, self.nnb)
+        return (self.g,) + base if self.g != 1 else base
+
+    @property
+    def tag(self) -> str:
+        """Plan-cache layout tag (tuning/plan_cache.py::make_key(layout=)).
+
+        Identifies the packed-B access pattern so packed and unpacked
+        tunings never collide: the packed kernel's B-side DMA behavior
+        depends only on (bk, bn, payload dtype), never on the resolved-away
+        source transpose.
+        """
+        return f"packB{self.bk}x{self.bn}{self.dtype}"
+
+    def describe(self) -> str:
+        shape = f"{self.k}x{self.n}"
+        if self.g != 1:
+            shape = f"{self.g}x{shape}"
+        t = "ᵀ" if self.trans_w else ""
+        return (f"PackedLayout[{shape}{t} {self.orig_dtype}->{self.dtype} "
+                f"tiles=({self.bk},{self.bn})x({self.nkb},{self.nnb})]")
+
+
+class PackedOperand:
+    """A pre-packed GEMM operand: payload + optional per-tile scales + layout.
+
+    Registered as a pytree (payload/scales are children, layout is aux), so
+    it flows through jit, scan (stacked layers: payload gets an extra
+    leading axis that scan slices away), and optimizer/param trees.  The
+    consuming ops (``mp_dot`` / ``mp_dot_grouped`` / ``mpgemm_pallas``)
+    dispatch on the type.
+    """
+
+    __slots__ = ("payload", "scales", "layout")
+
+    def __init__(self, payload, scales, layout: PackedLayout):
+        self.payload = payload
+        self.scales = scales
+        self.layout = layout
+
+    # -- conveniences --------------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """The LOGICAL (transpose-resolved) operand shape: (k, n) / (g, k, n)."""
+        base = (self.layout.k, self.layout.n)
+        return (self.layout.g,) + base if self.layout.g != 1 else base
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.layout.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        total = self.payload.size * self.payload.dtype.itemsize
+        if self.scales is not None:
+            total += self.scales.size * self.scales.dtype.itemsize
+        return total
+
+    def astype(self, dtype) -> "PackedOperand":
+        """Payload cast for float payloads (no-op when dtypes already match).
+
+        Packing with the policy's compute dtype avoids this; the cast exists
+        so a mismatched payload stays *correct* (it costs one materialized
+        copy per call — exactly what packing is meant to avoid).
+        """
+        dtype = jnp.dtype(dtype)
+        if self.layout.per_tile_scales or self.payload.dtype == dtype:
+            return self
+        layout = dataclasses.replace(self.layout, dtype=str(dtype))
+        return PackedOperand(self.payload.astype(dtype), None, layout)
+
+    def __repr__(self) -> str:
+        return self.layout.describe().replace("PackedLayout", "PackedOperand")
+
+
+def _flatten(p: PackedOperand):
+    return (p.payload, p.scales), p.layout
+
+
+def _unflatten(layout: PackedLayout, children) -> PackedOperand:
+    payload, scales = children
+    return PackedOperand(payload, scales, layout)
+
+
+jax.tree_util.register_pytree_node(PackedOperand, _flatten, _unflatten)
+
+
+def is_packed(w) -> bool:
+    return isinstance(w, PackedOperand)

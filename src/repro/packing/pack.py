@@ -1,0 +1,294 @@
+"""Pack / unpack kernels: ahead-of-time tile packing with on-the-fly
+transposition (the paper's §IV-C packing pass, run ONCE instead of per call).
+
+``pack_operand`` reorders a weight into the plan's (bk, bn)-tiled block
+layout described by :class:`repro.packing.layout.PackedLayout`:
+
+* edge tiles are ZERO-padded (so the GEMM's K-tail needs no B-side
+  predication and M/N-edge garbage cannot leak through the masked store),
+* a ``trans_w`` source (stored (n, k)) is transposed DURING the pack —
+  the paper's on-the-fly transposition, paid once,
+* ``dtype="int8"`` quantizes each (bk, bn) tile symmetrically with its own
+  f32 scale (per-tile, finer than ``core/quantization.py``'s per-tensor
+  scheme) so the dequant rides the GEMM per tile.
+
+Two implementations with identical semantics:
+
+* a Pallas kernel (grid = tile grid, one tile per step) — the production
+  path, used on the ``pallas``/``interpret`` backends;
+* a pure-jnp reference (pad + reshape + transpose) — used on the ``xla``
+  backend and under ``vmap`` (stacked-layer packing in ``params.py``).
+
+``unpack_operand`` is the exact inverse (modulo int8 rounding) and is what
+non-kernel backends and the backward pass use to recover a dense operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import config as cfg
+from repro.core.blocking import GemmPlan
+from repro.packing.layout import PackedLayout, PackedOperand
+
+
+def _blocks_of(plan_or_blocks) -> Tuple[int, int]:
+    if isinstance(plan_or_blocks, GemmPlan):
+        return plan_or_blocks.bk, plan_or_blocks.bn
+    bk, bn = plan_or_blocks
+    return int(bk), int(bn)
+
+
+def _layout_for(w, bk: int, bn: int, *, trans_w: bool, dtype,
+                grouped: bool) -> PackedLayout:
+    shape = w.shape[1:] if grouped else w.shape
+    if len(shape) != 2:
+        raise ValueError(f"pack_operand expects a 2-D (or grouped 3-D) "
+                         f"operand, got {w.shape}")
+    k, n = (shape[1], shape[0]) if trans_w else shape
+    # Clamp blocks to the problem extent (mirrors plan_with_blocks): a tiny
+    # operand packs as a single exact-fit tile instead of a mostly-pad one.
+    return PackedLayout(
+        k=k, n=n, bk=min(bk, k), bn=min(bn, n),
+        dtype=str(jnp.dtype(dtype or w.dtype)),
+        orig_dtype=str(jnp.dtype(w.dtype)), trans_w=trans_w,
+        g=w.shape[0] if grouped else 1,
+    )
+
+
+def _strip_group(layout: PackedLayout) -> PackedLayout:
+    return dataclasses.replace(layout, g=1)
+
+
+# --- pure-jnp reference (xla backend, vmap-able) ------------------------------
+
+def _pack_dense_ref(w2d, layout: PackedLayout):
+    """(k, n) / (n, k) source -> zero-padded (nkb, nnb, bk, bn) tiles."""
+    if layout.trans_w:
+        w2d = w2d.T
+    k, n, bk, bn = layout.k, layout.n, layout.bk, layout.bn
+    wp = jnp.pad(w2d, ((0, layout.nkb * bk - k), (0, layout.nnb * bn - n)))
+    return wp.reshape(layout.nkb, bk, layout.nnb, bn).transpose(0, 2, 1, 3)
+
+
+def _quantize_tiles_ref(tiles):
+    """Per-tile symmetric int8: (..., bk, bn) -> (int8 tiles, f32 scales)."""
+    t32 = tiles.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(t32), axis=(-2, -1))
+    scales = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t32 / scales[..., None, None]), -127, 127)
+    return q.astype(jnp.int8), scales.astype(jnp.float32)
+
+
+def pack_reference(w, layout: PackedLayout):
+    """The jnp pack: (payload, scales|None).  Also the payload-cotangent
+    map used by the packed ops' VJP (linear for float payloads)."""
+    if layout.g != 1:
+        tiles = jax.vmap(
+            lambda x: _pack_dense_ref(x, _strip_group(layout)))(w)
+    else:
+        tiles = _pack_dense_ref(w, layout)
+    if layout.per_tile_scales:
+        return _quantize_tiles_ref(tiles)
+    return tiles.astype(jnp.dtype(layout.dtype)), None
+
+
+def _unpack_tiles_ref(tiles, layout: PackedLayout):
+    full = tiles.transpose(0, 2, 1, 3).reshape(
+        layout.nkb * layout.bk, layout.nnb * layout.bn)
+    return full[: layout.k, : layout.n]
+
+
+def unpack_reference(payload, scales, layout: PackedLayout, dtype):
+    tiles = payload
+    if scales is not None:
+        tiles = tiles.astype(jnp.float32) * scales[..., None, None]
+    if layout.g != 1:
+        inner = _strip_group(layout)
+        return jax.vmap(
+            lambda t: _unpack_tiles_ref(t, inner))(tiles).astype(dtype)
+    return _unpack_tiles_ref(tiles, layout).astype(dtype)
+
+
+# --- Pallas kernels -----------------------------------------------------------
+
+def _masked_tile(src_ref, i, j, layout: PackedLayout):
+    """Read one source tile at tile-grid (i, j), transpose-resolved, with
+    out-of-bounds lanes zeroed: edge tiles of a non-multiple operand read
+    pipeline pad garbage (possibly NaN) which must never reach the payload
+    — zero pads are what let the GEMM skip B-side K-edge predication."""
+    tile = src_ref[...].reshape(src_ref.shape[-2:])
+    if layout.trans_w:
+        tile = tile.T                      # (bn, bk) storage -> (bk, bn)
+    rows = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    valid_r = layout.k - i * layout.bk
+    valid_c = layout.n - j * layout.bn
+    return jnp.where((rows < valid_r) & (cols < valid_c), tile,
+                     jnp.zeros_like(tile))
+
+
+def _tile_ids(grouped: bool):
+    return ((pl.program_id(1), pl.program_id(2)) if grouped
+            else (pl.program_id(0), pl.program_id(1)))
+
+
+def _pack_kernel(src_ref, out_ref, *, layout: PackedLayout, grouped: bool):
+    tile = _masked_tile(src_ref, *_tile_ids(grouped), layout)
+    out_ref[...] = tile.astype(out_ref.dtype).reshape(out_ref.shape)
+
+
+def _pack_quant_kernel(src_ref, out_ref, scale_ref, *, layout: PackedLayout,
+                       grouped: bool):
+    tile = _masked_tile(src_ref, *_tile_ids(grouped), layout)
+    tile = tile.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(tile))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(tile / scale), -127, 127)
+    out_ref[...] = q.astype(jnp.int8).reshape(out_ref.shape)
+    scale_ref[...] = jnp.full(scale_ref.shape, scale, jnp.float32)
+
+
+def _unpack_kernel(payload_ref, out_ref, *, dtype):
+    out_ref[...] = payload_ref[...].reshape(out_ref.shape).astype(dtype)
+
+
+def _unpack_quant_kernel(payload_ref, scale_ref, out_ref, *, dtype):
+    tile = payload_ref[...].astype(jnp.float32).reshape(out_ref.shape)
+    out_ref[...] = (tile * scale_ref[0].reshape(-1)[0]).astype(dtype)
+
+
+def _src_spec(layout: PackedLayout, grouped: bool):
+    bk, bn = layout.bk, layout.bn
+    if layout.trans_w:
+        block, imap = (bn, bk), lambda i, j: (j, i)
+    else:
+        block, imap = (bk, bn), lambda i, j: (i, j)
+    if grouped:
+        return pl.BlockSpec((1,) + block,
+                            lambda g, i, j: (g,) + imap(i, j))
+    return pl.BlockSpec(block, imap)
+
+
+def _payload_spec(layout: PackedLayout, grouped: bool):
+    if grouped:
+        return pl.BlockSpec((1, 1, 1, layout.bk, layout.bn),
+                            lambda g, i, j: (g, i, j, 0, 0))
+    return pl.BlockSpec((1, 1, layout.bk, layout.bn),
+                        lambda i, j: (i, j, 0, 0))
+
+
+def _scales_spec(grouped: bool):
+    if grouped:
+        return pl.BlockSpec((1, 1, 1), lambda g, i, j: (g, i, j))
+    return pl.BlockSpec((1, 1), lambda i, j: (i, j))
+
+
+def _pack_pallas(w, layout: PackedLayout, *, interpret: bool):
+    grouped = layout.g != 1
+    grid = ((layout.g,) if grouped else ()) + (layout.nkb, layout.nnb)
+    src_spec = _src_spec(layout, grouped)
+    payload_spec = _payload_spec(layout, grouped)
+    if not layout.per_tile_scales:
+        kernel = functools.partial(_pack_kernel, layout=layout,
+                                   grouped=grouped)
+        payload = pl.pallas_call(
+            kernel, grid=grid, in_specs=[src_spec], out_specs=payload_spec,
+            out_shape=jax.ShapeDtypeStruct(layout.payload_shape,
+                                           jnp.dtype(layout.dtype)),
+            interpret=interpret,
+        )(w)
+        return payload, None
+    kernel = functools.partial(_pack_quant_kernel, layout=layout,
+                               grouped=grouped)
+    payload, scales = pl.pallas_call(
+        kernel, grid=grid, in_specs=[src_spec],
+        out_specs=[payload_spec, _scales_spec(grouped)],
+        out_shape=[
+            jax.ShapeDtypeStruct(layout.payload_shape, jnp.int8),
+            jax.ShapeDtypeStruct(layout.scales_shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(w)
+    return payload, scales
+
+
+def _unpack_pallas(p: PackedOperand, dtype, *, interpret: bool):
+    layout = p.layout
+    grouped = layout.g != 1
+    grid = ((layout.g,) if grouped else ()) + (layout.nkb, layout.nnb)
+    out_spec = pl.BlockSpec(
+        ((1,) if grouped else ()) + (layout.bk, layout.bn),
+        (lambda g, i, j: (g, i, j)) if grouped else (lambda i, j: (i, j)))
+    out_shape = jax.ShapeDtypeStruct(
+        ((layout.g,) if grouped else ()) + (layout.k, layout.n),
+        jnp.dtype(dtype))
+    if p.scales is None:
+        kernel = functools.partial(_unpack_kernel, dtype=jnp.dtype(dtype))
+        return pl.pallas_call(
+            kernel, grid=grid, in_specs=[_payload_spec(layout, grouped)],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(p.payload)
+    kernel = functools.partial(_unpack_quant_kernel, dtype=jnp.dtype(dtype))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[_payload_spec(layout, grouped), _scales_spec(grouped)],
+        out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+    )(p.payload, p.scales)
+
+
+# --- public API ---------------------------------------------------------------
+
+def _resolve_method(backend: Optional[str]) -> str:
+    backend = backend or cfg.get_gemm_backend()
+    return backend if backend in ("pallas", "interpret", "xla") else "xla"
+
+
+def pack_operand(
+    w,
+    plan_or_blocks: Union[GemmPlan, Tuple[int, int]],
+    *,
+    trans_w: bool = False,
+    dtype=None,
+    backend: Optional[str] = None,
+) -> PackedOperand:
+    """Pack a (k, n) / (n, k) weight — or a grouped (g, ., .) stack — into
+    the (bk, bn)-tiled block layout of ``plan_or_blocks``.
+
+    ``dtype`` selects the payload: a float dtype stores cast tiles;
+    ``"int8"`` stores per-tile symmetrically-quantized tiles plus f32
+    scales.  Defaults to the source dtype.  The result is a
+    :class:`PackedOperand` consumable by ``mp_dot(x, packed)`` /
+    ``mpgemm_pallas(a, b_packed=packed)``.
+    """
+    bk, bn = _blocks_of(plan_or_blocks)
+    grouped = w.ndim == 3
+    layout = _layout_for(w, bk, bn, trans_w=trans_w, dtype=dtype,
+                         grouped=grouped)
+    method = _resolve_method(backend)
+    if method == "xla":
+        payload, scales = pack_reference(w, layout)
+    else:
+        payload, scales = _pack_pallas(w, layout,
+                                       interpret=(method == "interpret"))
+    return PackedOperand(payload, scales, layout)
+
+
+def unpack_operand(p: PackedOperand, *, dtype=None,
+                   backend: Optional[str] = None):
+    """Inverse of :func:`pack_operand`: dense (k, n) (grouped: (g, k, n)),
+    transpose already resolved.  int8 payloads dequantize per tile; float
+    payloads round-trip exactly.  ``dtype`` defaults to the payload dtype
+    (int8: the source dtype recorded at pack time)."""
+    layout = p.layout
+    if dtype is None:
+        dtype = layout.orig_dtype if layout.per_tile_scales else layout.dtype
+    method = _resolve_method(backend)
+    if method == "xla":
+        return unpack_reference(p.payload, p.scales, layout, dtype)
+    return _unpack_pallas(p, dtype, interpret=(method == "interpret"))

@@ -1,0 +1,143 @@
+"""Pack model parameter trees at load time — the serving-side entry point.
+
+``pack_params`` walks a parameter pytree (the same walk discipline as
+``core/quantization.py::quantize_params``) and replaces every eligible GEMM
+weight with its :class:`PackedOperand` form, chosen to match the serving
+policy:
+
+    policy fp32 / bf16 / bf16_serve  ->  float payload in the policy's
+                                         compute dtype (the per-call
+                                         down-cast disappears)
+    policy int8                      ->  int8 payload + per-tile scales
+                                         (finer than quantize_params'
+                                         per-tensor scheme; the dequant
+                                         rides the GEMM per tile)
+
+Eligibility reuses ``quantization.QUANT_LEAVES`` (2-D+ GEMM operands;
+embeddings and router/norm/gate leaves stay dense).  Three structural
+cases, disambiguated by where the leaf sits:
+
+* plain 2-D weight (tail layers, the untied head)      -> 2-D pack
+* scanned-stack leaf (leading layer axis under "stack"/"encoder")
+      -> per-layer vmapped pack; the payload keeps the leading layer axis
+         and ``lax.scan`` slices it away, so every in-scan ``mp_dot`` sees
+         an ordinary 2-D PackedOperand
+* MoE expert weight (trailing 3-D (E, d, f))           -> grouped pack
+  (stacked MoE combines both: leading layer axis + grouped payload)
+
+Every pack goes through the process-global :class:`PackedWeightCache`
+(``REPRO_PACK_CACHE``), so repeated serve starts reuse packed payloads.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import plan_gemm
+from repro.core.policy import get_policy
+from repro.core.quantization import QUANT_LEAVES
+from repro.packing.cache import PackedWeightCache, get_pack_cache
+from repro.packing.layout import PackedOperand
+from repro.packing.pack import pack_operand
+
+# Leaves that are grouped (expert-batched) when their trailing rank is 3.
+MOE_GROUPED_LEAVES = frozenset({"w_gate", "w_up", "w_down"})
+
+# Parameter-tree roots whose leaves carry a leading scanned-layer axis.
+STACKED_PREFIXES = ("stack", "encoder")
+
+
+def _payload_dtype(policy) -> str:
+    return "int8" if policy.quantized else str(jnp.dtype(policy.compute_dtype))
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", "")))
+
+
+def _is_stacked(path) -> bool:
+    first = path[0] if path else None
+    return str(getattr(first, "key", "")) in STACKED_PREFIXES
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", "?"))) for p in path)
+
+
+def pack_params(
+    params,
+    *,
+    policy="bf16",
+    m_hint: int = 256,
+    backend: Optional[str] = None,
+    cache: Optional[PackedWeightCache] = None,
+    leaves: Optional[Sequence[str]] = None,
+):
+    """Replace eligible GEMM weights in ``params`` with packed operands.
+
+    ``m_hint`` seeds the block planner's M dimension (the activation-side
+    extent packing cannot know ahead of time — bn/bk, the axes the payload
+    layout pins, are driven by (N, K, dtype), so the hint only nudges bm
+    which stays free at call time anyway).  Run this on the UNQUANTIZED
+    checkpoint: under the int8 policy the pack itself performs (per-tile)
+    quantization, strictly finer than ``quantize_params``.
+    """
+    policy = get_policy(policy)
+    dtype = _payload_dtype(policy)
+    a_dtype = "int8" if policy.quantized else policy.compute_dtype
+    eligible = frozenset(leaves) if leaves is not None else QUANT_LEAVES
+    cache = cache if cache is not None else get_pack_cache()
+
+    def _blocks(k: int, n: int):
+        plan = plan_gemm(m_hint, n, k, a_dtype, dtype)
+        return plan.bk, plan.bn
+
+    def _pack_leaf(path, leaf):
+        name = _leaf_name(path)
+        if (name not in eligible or not hasattr(leaf, "ndim")
+                or isinstance(leaf, PackedOperand)):
+            return leaf
+        if jnp.dtype(leaf.dtype).kind != "f":
+            return leaf
+        stacked = _is_stacked(path)
+        eff_ndim = leaf.ndim - (1 if stacked else 0)
+        if eff_ndim == 2:
+            grouped = False
+        elif eff_ndim == 3 and name in MOE_GROUPED_LEAVES:
+            grouped = True
+        else:
+            return leaf
+        k, n = leaf.shape[-2], leaf.shape[-1]
+        blocks = _blocks(k, n)
+        if stacked:
+            # vmap over the scanned layer axis; the reference (jnp) packer
+            # is the vmap-safe implementation.
+            pack_fn = jax.vmap(
+                lambda w: pack_operand(w, blocks, dtype=dtype, backend="xla"))
+            packer = lambda w, b, **kw: pack_fn(w)  # noqa: E731
+            lead = 1
+        else:
+            packer, lead = None, 0
+        if cache is None:
+            if stacked:
+                return pack_fn(leaf)
+            return pack_operand(leaf, blocks, dtype=dtype, backend=backend)
+        return cache.get_or_pack(
+            _path_str(path), leaf, blocks, dtype=dtype, backend=backend,
+            pack_fn=packer, lead_axes=lead)
+
+    return jax.tree_util.tree_map_with_path(_pack_leaf, params)
+
+
+def packed_param_bytes(params) -> int:
+    """Total bytes of packed payloads in a tree (serving-footprint report)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedOperand)):
+        if isinstance(leaf, PackedOperand):
+            total += leaf.nbytes
+    return total

@@ -83,6 +83,7 @@ def make_key(
     beta: float = 0.0,
     hw: HardwareSpec = DEFAULT_HW,
     g: int = 1,
+    layout: str = "",
 ) -> str:
     """Canonical cache key for one logical GEMM instance.
 
@@ -90,14 +91,21 @@ def make_key(
     so on-disk caches remain valid as long as the schema version holds.
     Grouped instances (``g > 1``) get a ``g…`` prefix; plain 2-D keys are
     byte-identical to the pre-grouped schema, so existing caches stay warm.
+
+    ``layout`` tags a non-default operand layout (``repro.packing``'s
+    ``PackedLayout.tag``): the packed-B kernel has a different measured
+    optimum than the strided on-the-fly path, so packed and unpacked
+    tunings must never collide.  Appended as a suffix only when set, so
+    default (unpacked) keys stay byte-identical to the existing schema.
     """
     a_dtype, b_dtype, out_dtype, _ = _resolve_dtypes(a_dtype, b_dtype, out_dtype)
     group = f"g{g}|" if g != 1 else ""
+    lay = f"|lay={layout}" if layout else ""
     return (
         f"{group}m{m}n{n}k{k}"
         f"|a={a_dtype}|b={b_dtype}|out={out_dtype}"
         f"|ta={int(trans_a)}|tb={int(trans_b)}|beta={int(beta != 0.0)}"
-        f"|hw={hw.name}"
+        f"|hw={hw.name}{lay}"
     )
 
 
@@ -285,12 +293,14 @@ def lookup_plan(
     beta: float = 0.0,
     hw: HardwareSpec = DEFAULT_HW,
     g: int = 1,
+    layout: str = "",
 ) -> Optional[GemmPlan]:
     """Tuned plan for this GEMM instance, or None (miss / cache disabled).
 
     This is the single read path used by both ``core/gemm.py`` (the
     mp_dot / mp_dot_grouped layer) and ``kernels/mpgemm.py`` (direct kernel
-    callers).  ``g > 1`` selects the grouped-instance namespace.
+    callers).  ``g > 1`` selects the grouped-instance namespace; ``layout``
+    the packed-operand namespace (see :func:`make_key`).
     """
     cache = get_plan_cache()
     if cache is None:
@@ -298,4 +308,5 @@ def lookup_plan(
     return cache.get(make_key(
         m, n, k, a_dtype, b_dtype, out_dtype,
         trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw, g=g,
+        layout=layout,
     ))

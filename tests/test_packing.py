@@ -1,0 +1,364 @@
+"""Packed-operand subsystem: pack/unpack round-trips, packed-vs-unpacked
+numerical equivalence through mp_dot/mp_dot_grouped (fwd + bwd, all
+policies), the grouped packed path, the packed-weight cache, the plan-key
+layout namespace, and the pack_params tree walker."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import plan_gemm
+from repro.core.gemm import mp_dot, mp_dot_grouped
+from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
+from repro.packing import (
+    PackedOperand, PackedWeightCache, is_packed, make_weight_key,
+    pack_operand, pack_params, unpack_operand,
+)
+from repro.tuning import make_key
+
+G, M, K, N = 4, 24, 40, 24
+BLOCKS = (16, 8)
+
+
+@pytest.fixture
+def ops(rng):
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    return x, w
+
+
+@pytest.fixture
+def gops(rng):
+    x = jnp.asarray(rng.standard_normal((G, M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((G, K, N)), "float32")
+    return x, w
+
+
+# --- pack -> unpack round trips ----------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("trans_w", [False, True])
+@pytest.mark.parametrize("kn", [(K, N), (33, 17), (8, 8), (129, 7)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_roundtrip(rng, kn, trans_w, dtype, backend):
+    k, n = kn
+    src = jnp.asarray(rng.standard_normal((n, k) if trans_w else (k, n)),
+                      "float32")
+    p = pack_operand(src, BLOCKS, trans_w=trans_w, dtype=dtype,
+                     backend=backend)
+    u = unpack_operand(p, backend=backend)
+    ref = np.asarray(src).T if trans_w else np.asarray(src)
+    assert u.shape == (k, n)
+    err = np.abs(np.asarray(u, np.float32) - ref).max()
+    scale = max(1.0, np.abs(ref).max())
+    tol = {"float32": 1e-7, "bfloat16": 0.01, "int8": 0.02}[dtype]
+    assert err <= tol * scale
+    # payload edge pads are exactly zero (the no-B-predication contract)
+    tiles = np.asarray(p.payload, np.float32)
+    if k % p.layout.bk:
+        assert np.all(tiles[-1, :, k % p.layout.bk:, :] == 0)
+    if n % p.layout.bn:
+        assert np.all(tiles[:, -1, :, n % p.layout.bn:] == 0)
+
+
+def test_pallas_and_reference_pack_agree(rng):
+    w = jnp.asarray(rng.standard_normal((33, 17)), "float32")
+    for dtype in ("float32", "int8"):
+        a = pack_operand(w, BLOCKS, dtype=dtype, backend="xla")
+        b = pack_operand(w, BLOCKS, dtype=dtype, backend="interpret")
+        assert np.array_equal(np.asarray(a.payload), np.asarray(b.payload))
+        if dtype == "int8":
+            np.testing.assert_allclose(np.asarray(a.scales),
+                                       np.asarray(b.scales), rtol=1e-6)
+
+
+def test_grouped_roundtrip(rng):
+    w = jnp.asarray(rng.standard_normal((G, 33, 17)), "float32")
+    for backend in ("xla", "interpret"):
+        p = pack_operand(w, BLOCKS, dtype="int8", backend=backend)
+        assert p.layout.g == G and p.payload.shape[0] == G
+        u = unpack_operand(p, backend=backend)
+        assert u.shape == w.shape
+        err = np.abs(np.asarray(u) - np.asarray(w)).max()
+        assert err < 0.02 * np.abs(np.asarray(w)).max()
+
+
+# --- packed vs unpacked through mp_dot (fwd + bwd) ---------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("policy,pdt", [("fp32", "float32"),
+                                        ("bf16", "bfloat16"),
+                                        ("int8", "int8")])
+def test_mp_dot_packed_matches_unpacked(ops, policy, pdt, backend):
+    x, w = ops
+    p = pack_operand(w, plan_gemm(M, N, K, "float32"), dtype=pdt,
+                     backend="interpret")
+    y0 = np.asarray(mp_dot(x, w, policy=policy, backend=backend), np.float32)
+    y1 = np.asarray(mp_dot(x, p, policy=policy, backend=backend), np.float32)
+    ref = np.asarray(x) @ np.asarray(w)
+    # Same policy tolerances as test_grouped_gemm vs the fp32 reference...
+    if policy == "fp32":
+        np.testing.assert_allclose(y1, ref, atol=1e-5)
+    elif policy == "bf16":
+        np.testing.assert_allclose(y1, ref, atol=0.15)
+    else:
+        assert np.abs(y1 - ref).max() < 0.05 * np.abs(ref).max()
+    # ...and packed tracks unpacked at least as tightly (per-tile scales
+    # can only refine the per-tensor ones).
+    assert np.abs(y1 - y0).max() <= max(1e-5, 0.05 * np.abs(ref).max())
+
+
+def test_mp_dot_packed_trans_w(ops):
+    x, w = ops
+    wt = jnp.asarray(np.asarray(w).T)          # stored (N, K)
+    p = pack_operand(wt, BLOCKS, trans_w=True, backend="interpret")
+    y = mp_dot(x, p, policy="fp32", trans_w=True, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x) @ np.asarray(w), atol=1e-5)
+    with pytest.raises(ValueError, match="trans_w"):
+        mp_dot(x, p, policy="fp32", trans_w=False, backend="interpret")
+
+
+@pytest.mark.parametrize("trans_w", [False, True])
+@pytest.mark.parametrize("policy", ["fp32", "bf16"])
+def test_mp_dot_packed_vjp_matches_unpacked(ops, policy, trans_w):
+    x, w = ops
+    pdt = "float32" if policy == "fp32" else "bfloat16"
+    src = jnp.asarray(np.asarray(w).T) if trans_w else w  # storage form
+    p = pack_operand(src, BLOCKS, trans_w=trans_w, dtype=pdt,
+                     backend="interpret")
+    wc = w.astype(pdt)                          # dense twin of the payload
+
+    def f_packed(x, p):
+        return jnp.sum(mp_dot(x, p, policy=policy, trans_w=trans_w,
+                              backend="interpret")
+                       .astype(jnp.float32) ** 2)
+
+    def f_dense(x, w):
+        return jnp.sum(mp_dot(x, w, policy=policy, backend="interpret")
+                       .astype(jnp.float32) ** 2)
+
+    dx1, dp = jax.grad(f_packed, (0, 1))(x, p)
+    dx0, dw0 = jax.grad(f_dense, (0, 1))(x, wc)
+    tol = 1e-5 if policy == "fp32" else 0.35
+    scale = max(1.0, float(jnp.abs(dx0).max()))
+    np.testing.assert_allclose(np.asarray(dx1), np.asarray(dx0),
+                               atol=tol * scale)
+    # The packed-weight cotangent unpacks to the dense (k, n) weight
+    # gradient — in the LOGICAL orientation even for trans_w payloads
+    # (the cotangent pack must not re-apply the resolved transpose).
+    dw1 = unpack_operand(dp, backend="interpret")
+    scale = max(1.0, float(jnp.abs(dw0).max()))
+    np.testing.assert_allclose(np.asarray(dw1, np.float32),
+                               np.asarray(dw0, np.float32),
+                               atol=tol * scale)
+
+
+def test_mp_dot_packed_int8_vjp_is_ste_and_frozen(ops):
+    """int8 payloads: dx flows (STE through the bf16 sibling), the weight
+    cotangent is symbolically zero (frozen serving weights)."""
+    x, w = ops
+    p = pack_operand(w, BLOCKS, dtype="int8", backend="interpret")
+    dx = jax.grad(lambda x: jnp.sum(
+        mp_dot(x, p, policy="int8", backend="interpret") ** 2))(x)
+    assert bool(jnp.all(jnp.isfinite(dx))) and float(jnp.abs(dx).sum()) > 0
+    _, dp = jax.grad(lambda x, p: jnp.sum(
+        mp_dot(x, p, policy="int8", backend="interpret") ** 2),
+        (0, 1), allow_int=True)(x, p)
+    assert dp.payload.dtype == jax.dtypes.float0
+    assert float(jnp.abs(dp.scales).sum()) == 0.0
+
+
+def test_mp_dot_packed_with_bias(ops):
+    x, w = ops
+    bias = jnp.arange(N, dtype=jnp.float32)
+    p = pack_operand(w, BLOCKS, backend="interpret")
+    y = mp_dot(x, p, bias, policy="fp32", backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x) @ np.asarray(w) + np.arange(N),
+        atol=1e-5)
+    db = jax.grad(lambda b: jnp.sum(
+        mp_dot(x, p, b, policy="fp32", backend="interpret")))(bias)
+    np.testing.assert_allclose(np.asarray(db), float(M), atol=1e-5)
+
+
+# --- grouped packed path -----------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("policy,pdt", [("fp32", "float32"),
+                                        ("bf16", "bfloat16"),
+                                        ("int8", "int8")])
+def test_grouped_packed_matches_unpacked(gops, policy, pdt, backend):
+    x, w = gops
+    p = pack_operand(w, BLOCKS, dtype=pdt, backend="interpret")
+    y0 = np.asarray(mp_dot_grouped(x, w, policy=policy, backend=backend),
+                    np.float32)
+    y1 = np.asarray(mp_dot_grouped(x, p, policy=policy, backend=backend),
+                    np.float32)
+    ref = np.einsum("gmk,gkn->gmn", np.asarray(x), np.asarray(w))
+    if policy == "fp32":
+        np.testing.assert_allclose(y1, ref, atol=1e-5)
+    elif policy == "bf16":
+        np.testing.assert_allclose(y1, ref, atol=0.15)
+    else:
+        assert np.abs(y1 - ref).max() < 0.05 * np.abs(ref).max()
+    assert np.abs(y1 - y0).max() <= max(1e-5, 0.05 * np.abs(ref).max())
+
+
+def test_grouped_packed_vjp_and_group_sizes(gops):
+    x, w = gops
+    p = pack_operand(w, BLOCKS, backend="interpret")
+    sizes = jnp.asarray([M, 10, 0, 17], jnp.int32)
+    y = mp_dot_grouped(x, p, policy="fp32", backend="interpret",
+                       group_sizes=sizes)
+    ref = np.einsum("gmk,gkn->gmn", np.asarray(x), np.asarray(w))
+    for gi, s in enumerate([M, 10, 0, 17]):
+        assert np.all(np.asarray(y[gi, s:]) == 0.0)
+        np.testing.assert_allclose(np.asarray(y[gi, :s]), ref[gi, :s],
+                                   atol=1e-5)
+    dx = jax.grad(lambda x: jnp.sum(mp_dot_grouped(
+        x, p, policy="fp32", backend="interpret",
+        group_sizes=sizes) ** 2))(x)
+    assert np.all(np.asarray(dx[2]) == 0.0)
+    assert float(jnp.abs(dx[0]).sum()) > 0
+
+
+def test_kernel_rejects_mismatched_plan_and_group(gops):
+    x, w = gops
+    p2 = pack_operand(w[0], BLOCKS, backend="interpret")
+    pg = pack_operand(w, BLOCKS, backend="interpret")
+    with pytest.raises(ValueError, match="grouped"):
+        mpgemm_pallas(x[0], b_packed=pg, interpret=True)
+    with pytest.raises(ValueError, match="2-D"):
+        mpgemm_grouped_pallas(x, b_packed=p2, interpret=True)
+    bad_plan = plan_gemm(M, N, K, "float32")
+    if (bad_plan.bn, bad_plan.bk) != (p2.layout.bn, p2.layout.bk):
+        with pytest.raises(ValueError, match="incompatible"):
+            mpgemm_pallas(x[0], b_packed=p2, plan=bad_plan, interpret=True)
+    with pytest.raises(ValueError, match="exactly one"):
+        mpgemm_pallas(x[0], w[0], b_packed=p2, interpret=True)
+
+
+def test_explicit_plan_with_tile_scaled_payload_coerces_acc(rng):
+    """An explicitly supplied plan carrying an int32 accumulator must not
+    reach the kernel with a tile-scaled payload (scaled partials are f32):
+    the kernel coerces, matching _packed_plan's derivation."""
+    from repro.core.blocking import plan_with_blocks
+    from repro.core.policy import quantize_per_tensor
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    p = pack_operand(w, BLOCKS, dtype="int8", backend="interpret")
+    xq, sx = quantize_per_tensor(x)
+    plan = plan_with_blocks(M, N, K, 16, p.layout.bn, p.layout.bk,
+                            "int8", "int8", "float32", "int32")
+    y = mpgemm_pallas(xq, b_packed=p, scale=sx, out_dtype="float32",
+                      plan=plan, interpret=True)
+    ref = np.asarray(x) @ np.asarray(w)
+    assert np.abs(np.asarray(y) - ref).max() < 0.05 * np.abs(ref).max()
+
+
+# --- plan-cache layout namespace (make_key satellite) ------------------------
+
+def test_make_key_layout_tag_is_namespaced_and_byte_stable():
+    base = make_key(M, N, K, "float32")
+    assert base == make_key(M, N, K, "float32", layout="")  # byte-stable
+    p = pack_operand(jnp.ones((K, N)), BLOCKS, backend="xla")
+    tagged = make_key(M, N, K, "float32", layout=p.layout.tag)
+    assert tagged != base and tagged.startswith(base)
+    other = dataclasses.replace(p.layout, bn=2 * p.layout.bn)
+    assert make_key(M, N, K, "float32", layout=other.tag) != tagged
+
+
+# --- packed-weight cache -----------------------------------------------------
+
+def test_cache_hit_and_invalidation_on_plan_change(rng, tmp_path):
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    cache = PackedWeightCache(tmp_path / "packed")
+    p1 = cache.get_or_pack("layer0/w_up", w, BLOCKS, backend="xla")
+    assert (cache.hits, cache.misses) == (0, 1)
+    p2 = cache.get_or_pack("layer0/w_up", w, BLOCKS, backend="xla")
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert np.array_equal(np.asarray(p1.payload), np.asarray(p2.payload))
+    # plan change -> different layout tag -> miss (repack, not stale tiles)
+    cache.get_or_pack("layer0/w_up", w, (8, 8), backend="xla")
+    assert cache.misses == 2
+    # weight update -> digest change -> miss
+    cache.get_or_pack("layer0/w_up", w * 2.0, BLOCKS, backend="xla")
+    assert cache.misses == 3
+    assert len(cache) == 3
+
+
+def test_cache_persists_across_instances(rng, tmp_path):
+    w = jnp.asarray(rng.standard_normal((33, 17)), "float32")
+    path = tmp_path / "packed"
+    PackedWeightCache(path).get_or_pack("head", w, BLOCKS, dtype="int8",
+                                        backend="xla")
+    fresh = PackedWeightCache(path)           # new process stand-in
+    p = fresh.get_or_pack("head", w, BLOCKS, dtype="int8", backend="xla")
+    assert (fresh.hits, fresh.misses) == (1, 0)
+    u = unpack_operand(p, backend="xla")
+    assert np.abs(np.asarray(u) - np.asarray(w)).max() < 0.02 * float(
+        jnp.abs(w).max())
+    key = make_weight_key("head", w, p.layout)
+    assert key in fresh
+    fresh.clear()
+    assert len(fresh) == 0 and key not in PackedWeightCache(path)
+
+
+# --- pack_params tree walker -------------------------------------------------
+
+def test_pack_params_walks_dense_moe_and_stacked(rng):
+    params = {
+        "embed": jnp.asarray(rng.standard_normal((64, 16)), "float32"),
+        "tail": [{
+            "mlp": {"w_up": jnp.asarray(rng.standard_normal((16, 32)),
+                                        "float32"),
+                    "router": jnp.asarray(rng.standard_normal((16, 4)),
+                                          "float32")},
+            "moe": {"w_gate": jnp.asarray(rng.standard_normal((4, 16, 32)),
+                                          "float32")},
+        }],
+        "stack": [{
+            "attn": {"wq": jnp.asarray(rng.standard_normal((3, 16, 16)),
+                                       "float32")},
+            "moe": {"w_down": jnp.asarray(
+                rng.standard_normal((3, 4, 32, 16)), "float32")},
+        }],
+    }
+    packed = pack_params(params, policy="bf16", m_hint=16, cache=None)
+    assert not is_packed(packed["embed"])                 # gather source
+    assert not is_packed(packed["tail"][0]["mlp"]["router"])
+    p_up = packed["tail"][0]["mlp"]["w_up"]
+    assert is_packed(p_up) and p_up.layout.g == 1
+    p_moe = packed["tail"][0]["moe"]["w_gate"]
+    assert is_packed(p_moe) and p_moe.layout.g == 4       # grouped experts
+    p_stack = packed["stack"][0]["attn"]["wq"]
+    assert is_packed(p_stack) and p_stack.layout.g == 1
+    assert p_stack.payload.shape[0] == 3                  # leading layer axis
+    p_stack_moe = packed["stack"][0]["moe"]["w_down"]
+    assert is_packed(p_stack_moe) and p_stack_moe.layout.g == 4
+    assert p_stack_moe.payload.shape[:2] == (3, 4)
+
+    # scan slicing the stacked payload yields per-layer packed operands
+    # whose mp_dot output matches the dense per-layer GEMM
+    x = jnp.asarray(rng.standard_normal((5, 16)), "float32")
+
+    def body(carry, wq_l):
+        return carry + mp_dot(x, wq_l, policy="bf16",
+                              backend="interpret"), None
+    y_packed, _ = jax.lax.scan(body, jnp.zeros((5, 16)), p_stack)
+    y_dense, _ = jax.lax.scan(body, jnp.zeros((5, 16)),
+                              params["stack"][0]["attn"]["wq"])
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_dense),
+                               atol=1e-3)
+
+
+def test_pack_params_int8_policy_quantizes_per_tile(rng):
+    w = jnp.asarray(rng.standard_normal((16, 32)), "float32")
+    packed = pack_params({"tail": [{"w_up": w}]}, policy="int8",
+                         m_hint=16, cache=None)
+    p = packed["tail"][0]["w_up"]
+    assert is_packed(p) and p.layout.dtype == "int8" and p.scales is not None
