@@ -11,9 +11,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks import (
-        bench_autotune, bench_breakdown, bench_gemm_workloads,
-        bench_irregular, bench_loads, bench_mixed_precision, bench_packing,
-        bench_tiles, roofline_report,
+        bench_autotune, bench_breakdown, bench_epilogue,
+        bench_gemm_workloads, bench_irregular, bench_loads,
+        bench_mixed_precision, bench_packing, bench_tiles, roofline_report,
     )
     bench_tiles.run()                      # paper Fig. 2
     bench_loads.run()                      # paper Fig. 3
@@ -29,6 +29,9 @@ def main() -> None:
         bench_packing.run(policy)
         bench_packing.run_grouped(policy)
     bench_packing.run("bf16", trans_w=True)
+    bench_epilogue.run()                   # beyond-paper: fused epilogues
+    bench_epilogue.run_trace_gate()
+    bench_epilogue.run_wall_sanity()
 
 
 if __name__ == "__main__":

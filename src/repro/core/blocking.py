@@ -169,11 +169,14 @@ def enumerate_block_lattice(
 def modeled_traffic_bytes(
     m: int, n: int, k: int, bm: int, bn: int,
     a_bytes: int, b_bytes: int, c_bytes: int, beta: float = 0.0,
+    extra_mn_inputs: int = 0,
 ) -> int:
     """HBM traffic for a K-innermost revisiting grid (C resident in VMEM).
 
     A is re-read once per column-block of C; B once per row-block of C; C is
-    written once (and read once iff beta != 0).
+    written once (and read once iff beta != 0).  ``extra_mn_inputs`` counts
+    additional (M, N)-shaped epilogue operands (gated-activation / residual
+    fusions — core/gemm_spec.py), each read exactly once.
     """
     n_col_blocks = math.ceil(n / bn)
     n_row_blocks = math.ceil(m / bm)
@@ -181,21 +184,23 @@ def modeled_traffic_bytes(
     return (
         m * k * a_bytes * n_col_blocks
         + k * n * b_bytes * n_row_blocks
-        + m * n * c_bytes * c_factor
+        + m * n * c_bytes * (c_factor + extra_mn_inputs)
     )
 
 
 def vmem_working_set(
     bm: int, bn: int, bk: int,
     a_bytes: int, b_bytes: int, out_bytes: int, acc_bytes: int = 4,
-    beta: float = 0.0,
+    beta: float = 0.0, extra_mn_inputs: int = 0,
 ) -> int:
     """Paper eq (1), VMEM form.
 
     The paper reserves space for the *next* iteration's Bc and the C block on
     top of the current blocks (LRU anti-eviction).  The TPU analogue is the
     Pallas pipeline's double buffering of the streamed inputs, plus the
-    resident accumulator and the output staging block.
+    resident accumulator and the output staging block.  Each extra
+    (M, N)-shaped epilogue operand (gated/residual fusions) streams one more
+    double-buffered (bm, bn) block.
     """
     dbuf = 2  # double-buffered HBM->VMEM pipeline
     ws = dbuf * (bm * bk * a_bytes + bk * bn * b_bytes)
@@ -203,6 +208,7 @@ def vmem_working_set(
     ws += bm * bn * out_bytes          # output staging
     if beta:
         ws += dbuf * bm * bn * out_bytes   # streamed C input blocks
+    ws += extra_mn_inputs * dbuf * bm * bn * out_bytes  # epilogue operands
     return ws
 
 
@@ -216,6 +222,7 @@ def plan_gemm(
     acc_dtype=None,
     *,
     beta: float = 0.0,
+    extra_mn_inputs: int = 0,
     hw: HardwareSpec = DEFAULT_HW,
     vmem_budget_frac: float = 0.75,
     max_block: int = 2048,
@@ -251,10 +258,12 @@ def plan_gemm(
     for bm in bm_cands:
         for bn in bn_cands:
             for bk in bk_cands:
-                ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta)
+                ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta,
+                                      extra_mn_inputs)
                 if ws > budget:
                     continue
-                traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta)
+                traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob,
+                                                beta, extra_mn_inputs)
                 flops = 2 * m * n * k
                 cmr = flops / max(1, traffic)
                 # Secondary objectives: fewer grid steps, squarer C block.
@@ -271,7 +280,7 @@ def plan_gemm(
         bm, bn, bk = best[1][:3]
     return plan_with_blocks(
         m, n, k, bm, bn, bk, a_dtype, b_dtype, out_dtype, acc_dtype,
-        beta=beta, hw=hw,
+        beta=beta, extra_mn_inputs=extra_mn_inputs, hw=hw,
     )
 
 
@@ -288,6 +297,7 @@ def plan_with_blocks(
     acc_dtype=None,
     *,
     beta: float = 0.0,
+    extra_mn_inputs: int = 0,
     hw: HardwareSpec = DEFAULT_HW,
     notes: str = "",
 ) -> GemmPlan:
@@ -311,8 +321,10 @@ def plan_with_blocks(
     bm = min(bm, _round_up(m, sub_a))
     bn = min(bn, _round_up(n, hw.lane))
     bk = min(bk, _round_up(k, bk_align))
-    ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta)
-    traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta)
+    ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta,
+                          extra_mn_inputs)
+    traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta,
+                                    extra_mn_inputs)
     grid = (math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk))
     auto_notes = [notes] if notes else []
     if m % bm or n % bn:

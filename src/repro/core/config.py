@@ -47,3 +47,32 @@ def gemm_backend(name: str):
         yield
     finally:
         _state.backend = prev
+
+
+# --- fused-epilogue toggle ---------------------------------------------------
+
+def fused_epilogues() -> bool:
+    """Should model layers fuse gated-activation / residual epilogues?
+
+    Default ON (the registry epilogues ride the GEMM's accumulator store —
+    core/gemm_spec.py).  ``REPRO_FUSED_EPILOGUE=0`` or the
+    :func:`fused_epilogue` context disable it, which the fused-vs-unfused
+    benchmark (benchmarks/bench_epilogue.py) uses for its A/B.  Read at
+    trace time, so functions jitted under one setting keep it.
+    """
+    val = getattr(_state, "fused_epilogue", None)
+    if val is not None:
+        return val
+    return os.environ.get("REPRO_FUSED_EPILOGUE", "1").lower() not in (
+        "0", "false", "off")
+
+
+@contextlib.contextmanager
+def fused_epilogue(enabled: bool):
+    """Context manager: force epilogue fusion on/off for traces inside."""
+    prev = getattr(_state, "fused_epilogue", None)
+    _state.fused_epilogue = bool(enabled)
+    try:
+        yield
+    finally:
+        _state.fused_epilogue = prev

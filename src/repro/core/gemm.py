@@ -1,25 +1,34 @@
 """``mp_dot`` / ``mp_dot_grouped`` — the paper's technique as first-class,
-differentiable ops.
+differentiable ops over ONE spec-driven core.
 
 Every matmul in every model in this framework flows through here — 2-D
 projections through :func:`mp_dot`, grouped/batched contractions (MoE expert
 GEMMs, per-stream LoRA blocks, generic batched matmuls) through
-:func:`mp_dot_grouped`.  Each op:
+:func:`mp_dot_grouped`.  Both are thin adapters over a single
+``jax.custom_vjp`` core that dispatches on a static
+:class:`~repro.core.gemm_spec.GemmSpec` (2-D vs grouped, dense vs packed B,
+transposition) plus an :class:`~repro.core.gemm_spec.EpilogueSpec`
+(activation, gated-activation and residual-add fusions from the epilogue
+registry).  The core:
 
 * applies a :class:`PrecisionPolicy` (fp32 / bf16->f32 / dynamic int8->i32 —
   the paper's Section V multi-precision surface),
-* consults the tuned-plan cache (repro.tuning) so empirically characterized
-  block shapes transparently replace the analytic planner's on a hit,
-* dispatches to the Pallas MPGEMM kernel (TPU / interpret) or to an XLA
-  ``dot_general`` with identical precision semantics (CPU dry-run; XLA
-  picks its own tiling, so plans only affect the kernel backends),
-* implements its own VJP whose backward GEMMs use the **fused-transpose**
-  kernel variants (dx = dy · Wᵀ, dW = Xᵀ · dy) — the training-time payoff of
+* dispatches to the spec-driven Pallas MPGEMM launch (TPU / interpret) —
+  which consults the tuned-plan cache, keyed with the epilogue tag — or to
+  an XLA ``dot_general`` with identical precision AND epilogue semantics
+  (CPU dry-run; XLA picks its own tiling, so plans only affect the kernel
+  backends),
+* implements ONE VJP whose backward GEMMs use the **fused-transpose**
+  kernel variants (dx = dz · Wᵀ, dW = Xᵀ · dz) — the training-time payoff of
   the paper's on-the-fly transposition: no transposed weight copies are ever
-  materialized.
+  materialized.  Epilogue fusions differentiate through the registry's
+  backward rules (packed-int8 weights stay frozen via float0 cotangents;
+  float payloads repack their dense cotangent; grouped backward keeps the
+  fused-transpose grouped contractions).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -28,156 +37,127 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import config as cfg
+from repro.core.gemm_spec import (
+    EpilogueSpec, GemmSpec, apply_epilogue, epilogue_bwd, epilogue_needs_pre,
+    resolve_epilogue,
+)
 from repro.core.policy import PrecisionPolicy, get_policy, quantize_per_tensor
-from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
+from repro.kernels.mpgemm import mpgemm_pallas_spec
 from repro.packing.layout import PackedOperand, is_packed
 
+_LINEAR = EpilogueSpec()
 
-def _dims(trans_a: bool, trans_b: bool):
-    ca = 0 if trans_a else 1
-    cb = 1 if trans_b else 0
+
+def _dims(spec: GemmSpec):
+    """dot_general dims for the XLA backend (grouped: group = batch axis)."""
+    if spec.grouped:
+        ca = 1 if spec.trans_a else 2
+        cb = 2 if spec.trans_b else 1
+        return (((ca,), (cb,)), ((0,), (0,)))
+    ca = 0 if spec.trans_a else 1
+    cb = 1 if spec.trans_b else 0
     return (((ca,), (cb,)), ((), ()))
 
 
-def _cached_plan(x, w, trans_a: bool, trans_b: bool, out_dtype):
-    """Tuned plan for this GEMM instance from the global plan cache, or None.
-
-    Resolved at trace time (shapes are static under jit), so a cache hit
-    changes only the BlockSpecs baked into the lowered kernel — numerics are
-    plan-independent.  Miss -> None -> mpgemm_pallas falls back to the
-    analytic planner.  Lazy import: core must not hard-depend on tuning.
-    """
-    from repro.tuning.plan_cache import lookup_plan
-    m = x.shape[1] if trans_a else x.shape[0]
-    k = x.shape[0] if trans_a else x.shape[1]
-    n = w.shape[0] if trans_b else w.shape[1]
-    return lookup_plan(
-        m, n, k, x.dtype, w.dtype, out_dtype,
-        trans_a=trans_a, trans_b=trans_b,
-    )
+def _xla_epilogue(epilogue, acc, bias, scale, extras, grouped):
+    """The kernel's fused epilogue, re-played on a full XLA accumulator —
+    same ``apply_epilogue`` implementation, so backends cannot drift."""
+    if bias is not None:
+        bias = (bias.reshape(bias.shape[0], 1, -1) if grouped
+                else bias.reshape(1, -1))
+    return apply_epilogue(epilogue, acc, bias=bias, scale=scale,
+                          extras=extras)
 
 
-def _matmul_impl(
-    x, w, bias, policy: PrecisionPolicy, trans_a: bool, trans_b: bool,
-    backend: str, out_dtype, acc_dtype, *, grouped: bool,
-):
-    """One GEMM (2-D or grouped) under a policy, on the selected backend.
+def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
+                policy: PrecisionPolicy, backend: str, acc_dtype=None):
+    """One GEMM under a policy on the selected backend — THE dispatch point.
 
-    The single home of the policy logic for both op shapes:
+    The single home of the policy logic for every spec combination
+    (2-D/grouped × dense/packed × every registered epilogue):
 
-    * ``w`` may be a static-int8 {"q","scale"} dict (core/quantization.py):
-      the dequant rides the GEMM — int8 HBM reads, upcast at the compute
-      unit.  Under a *dynamic*-quantized policy the dequant target is f32
-      (the policy's own compute dtype is int8 — dequantizing into it would
-      truncate the float weights to ~0); quantize_per_tensor re-quantizes.
+    * Packed ``w`` (:class:`PackedOperand`): kernel backends read the
+      payload directly — identity tile index maps, transpose resolved at
+      pack time, per-tile int8 dequant riding the accumulation — so NO
+      per-call operand prep (cast / dequant / strided re-layout) is
+      materialized.  The XLA backend, which picks its own tiling, unpacks
+      once and reuses the dense-path policy logic below.
+    * ``w`` is a dense array or a :class:`PackedOperand` — NEVER a
+      static-int8 {"q","scale"} dict: the differentiable wrappers
+      dequantize dicts BEFORE the custom-VJP core (:func:`_dequant_static`)
+      so dict primals never need dict cotangents, and XLA still fuses that
+      dequant into the consuming GEMM read.
     * The compute-dtype down-cast is pinned shard-local BEFORE any
       FSDP/EP all-gather: without the barrier GSPMD gathers the f32 master
       weights and converts after, doubling gather wire bytes (measured on
-      mixtral train_4k — EXPERIMENTS.md §Perf).
+      mixtral train_4k — EXPERIMENTS.md §Perf).  Safe under
+      differentiation: it only ever runs inside the custom-VJP core, where
+      JAX never needs a JVP rule for the barrier.
     * ``acc_dtype`` overrides the accumulator/partial-sum dtype on the XLA
       backend: backward GEMMs pass bf16 so that TP/EP partial-sum
       all-reduces move bf16 instead of f32 (halves gradient wire bytes).
       Kernel backends accumulate per the plan's acc dtype instead (plans
       own kernel numerics; f32/i32 VMEM scratch).
     """
-    kernel = mpgemm_grouped_pallas if grouped else mpgemm_pallas
-    cached_plan = _cached_grouped_plan if grouped else _cached_plan
-    dims = _grouped_dims(trans_a, trans_b) if grouped else _dims(trans_a, trans_b)
+    grouped = spec.grouped
+    out_dtype = spec.out_dtype or policy.out_dtype
+    kernel_backend = backend in ("pallas", "interpret")
+    interp = backend == "interpret"
 
-    def _bias_add(acc):
-        if bias is None:
-            return acc
-        b = (bias.reshape(bias.shape[0], 1, -1) if grouped
-             else bias.reshape(1, -1))
-        return acc + b.astype(acc.dtype)
+    def _kernel(a, b, wp, scale):
+        return mpgemm_pallas_spec(
+            a, b, b_packed=wp, bias=bias, scale=scale, extras=extras,
+            spec=spec, epilogue=epilogue, out_dtype=out_dtype,
+            interpret=interp)
 
-    from repro.core.quantization import dequantize_tensor, is_quantized
-    if is_quantized(w):
-        w = dequantize_tensor(
-            w, jnp.float32 if policy.quantized else jnp.dtype(policy.compute_dtype))
-    out_dtype = out_dtype or policy.out_dtype
+    if is_packed(w):
+        layout = w.layout
+        if kernel_backend and not (policy.quantized
+                                   and layout.dtype != "int8"):
+            if policy.quantized:
+                # Dynamic x-side quantization only: the weight side is
+                # already int8 with per-tile scales inside the payload.
+                xq, sx = quantize_per_tensor(x)
+                return _kernel(xq, None, w, sx)
+            xc = x.astype(jnp.dtype(policy.compute_dtype))
+            if layout.dtype != "int8":
+                w = w.astype(policy.compute_dtype)  # no-op when packed right
+            return _kernel(xc, None, w, None)
+        # XLA fallback — or a float payload under the dynamic-int8 policy,
+        # whose per-tensor weight quantization needs a dense array.
+        from repro.packing.pack import unpack_operand
+        w = unpack_operand(w, backend=backend if kernel_backend else None)
+        spec = dataclasses.replace(spec, packed=False, tile_scaled=False,
+                                   trans_b=False)
+
     if policy.quantized:
         xq, sx = quantize_per_tensor(x)
         wq, sw = quantize_per_tensor(w)
         scale = sx * sw
-        if backend in ("pallas", "interpret"):
-            return kernel(
-                xq, wq, trans_a=trans_a, trans_b=trans_b, scale=scale,
-                bias=bias, out_dtype=out_dtype,
-                plan=cached_plan(xq, wq, trans_a, trans_b, out_dtype),
-                interpret=(backend == "interpret"),
-            )
-        acc = jax.lax.dot_general(xq, wq, dims,
+        if kernel_backend:
+            return _kernel(xq, wq, None, scale)
+        acc = jax.lax.dot_general(xq, wq, _dims(spec),
                                   preferred_element_type=jnp.int32)
-        return _bias_add(acc.astype(jnp.float32) * scale).astype(out_dtype)
+        return _xla_epilogue(epilogue, acc, bias, scale, extras,
+                             grouped).astype(out_dtype)
 
     cd = jnp.dtype(policy.compute_dtype)
     xc = x.astype(cd)
     wc = w.astype(cd)
     if wc.dtype != w.dtype:
         wc = jax.lax.optimization_barrier(wc)  # see docstring
-    if backend in ("pallas", "interpret"):
-        return kernel(
-            xc, wc, trans_a=trans_a, trans_b=trans_b, bias=bias,
-            out_dtype=out_dtype,
-            plan=cached_plan(xc, wc, trans_a, trans_b, out_dtype),
-            interpret=(backend == "interpret"),
-        )
+    if kernel_backend:
+        return _kernel(xc, wc, None, None)
     acc = jax.lax.dot_general(
-        xc, wc, dims,
+        xc, wc, _dims(spec),
         preferred_element_type=jnp.dtype(acc_dtype or policy.acc_dtype),
     )
-    return _bias_add(acc).astype(out_dtype)
-
-
-def _matmul_2d(x, w, bias, policy, trans_a, trans_b, backend,
-               out_dtype=None, acc_dtype=None):
-    """One 2-D GEMM under a policy (see :func:`_matmul_impl`)."""
-    return _matmul_impl(x, w, bias, policy, trans_a, trans_b, backend,
-                        out_dtype, acc_dtype, grouped=False)
-
-
-# --- packed-weight path ------------------------------------------------------
-
-def _matmul_packed_impl(x, wp: PackedOperand, bias, policy: PrecisionPolicy,
-                        backend: str, out_dtype, *, grouped: bool):
-    """One GEMM (2-D or grouped) against a pre-packed weight, under a policy.
-
-    Kernel backends read the payload directly — identity tile index maps,
-    transpose resolved at pack time, per-tile int8 dequant riding the
-    accumulation — so NO per-call operand prep (cast / dequant / strided
-    re-layout) is materialized; that is the whole point of packing.  The
-    XLA backend, which picks its own tiling and cannot consume the block
-    layout, unpacks once and reuses the dense-path policy logic, keeping
-    numerics aligned across backends.
-    """
-    from repro.packing.pack import unpack_operand
-    layout = wp.layout
-    kernel_backend = backend in ("pallas", "interpret")
-    if not kernel_backend or (policy.quantized and layout.dtype != "int8"):
-        # XLA fallback — or a float payload under the dynamic-int8 policy,
-        # whose per-tensor weight quantization needs a dense array.
-        w = unpack_operand(wp, backend=backend if kernel_backend else None)
-        return _matmul_impl(x, w, bias, policy, False, False, backend,
-                            out_dtype, None, grouped=grouped)
-    kernel = mpgemm_grouped_pallas if grouped else mpgemm_pallas
-    interp = backend == "interpret"
-    out_dtype = out_dtype or policy.out_dtype
-    if policy.quantized:
-        # Dynamic x-side quantization only: the weight side is already
-        # int8 with per-tile scales inside the payload.
-        xq, sx = quantize_per_tensor(x)
-        return kernel(xq, b_packed=wp, scale=sx, bias=bias,
-                      out_dtype=out_dtype, interpret=interp)
-    xc = x.astype(jnp.dtype(policy.compute_dtype))
-    if layout.dtype != "int8":
-        wp = wp.astype(policy.compute_dtype)  # no-op when packed right
-    return kernel(xc, b_packed=wp, bias=bias, out_dtype=out_dtype,
-                  interpret=interp)
+    return _xla_epilogue(epilogue, acc, bias, None, extras,
+                         grouped).astype(out_dtype)
 
 
 def _bwd_flavor(policy: PrecisionPolicy):
-    """(backward policy, backward partial-sum dtype) — see _mp_dot_bwd."""
+    """(backward policy, backward partial-sum dtype) — see :func:`_gemm_bwd`."""
     bwd_policy = get_policy("fp32" if policy.name == "fp32" else "bf16")
     bwd_acc = "float32" if policy.name == "fp32" else "bfloat16"
     return bwd_policy, bwd_acc
@@ -193,8 +173,6 @@ def _packed_weight_cotangent(wp: PackedOperand, dw_dense) -> PackedOperand:
     zeros (JAX's unit cotangent for int primals), scales zeros — the
     weight is frozen, the standard serving configuration.
     """
-    import dataclasses
-
     from repro.packing.pack import pack_reference
     layout = wp.layout
     if layout.per_tile_scales:
@@ -209,125 +187,143 @@ def _packed_weight_cotangent(wp: PackedOperand, dw_dense) -> PackedOperand:
     return PackedOperand(payload_ct, None, layout)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _mp_dot_packed_core(x2d, wp, bias, policy_name: str, backend: str):
-    policy = get_policy(policy_name)
-    return _matmul_packed_impl(x2d, wp, bias, policy, backend, None,
-                               grouped=False)
+# --- the one differentiable core ---------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _gemm_core(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
+               policy_name: str, backend: str):
+    """THE custom-VJP core: every mp_dot / mp_dot_grouped call lands here.
+
+    ``spec``/``epilogue`` are static (hashable) and carry the full dispatch
+    decision; ``w`` is a dense array or a :class:`PackedOperand` pytree
+    (never a {"q","scale"} dict — the wrappers dequantize those first so
+    dict primals never need dict cotangents); ``extras`` is the tuple of
+    epilogue fusion operands in registry order.
+    """
+    return _apply_gemm(x, w, bias, extras, spec, epilogue,
+                       get_policy(policy_name), backend)
 
 
-def _mp_dot_packed_fwd(x2d, wp, bias, policy_name, backend):
-    y = _mp_dot_packed_core(x2d, wp, bias, policy_name, backend)
-    return y, (x2d, wp, bias is not None)
+def _gemm_fwd(x, w, bias, extras, spec, epilogue, policy_name, backend):
+    y = _gemm_core(x, w, bias, extras, spec, epilogue, policy_name, backend)
+    return y, (x, w, bias, extras)
 
 
-def _mp_dot_packed_bwd(policy_name, backend, res, dy):
-    """Same two fused-transpose backward GEMMs as :func:`_mp_dot_bwd` — the
-    only packing-specific step is recovering a dense weight once (the
-    payload's layout serves the FORWARD read pattern; backward contracts
-    over N, for which the dense on-the-fly-transpose kernel path already
-    exists) and re-packing the weight gradient."""
-    from repro.packing.pack import unpack_operand
-    x2d, wp, has_bias = res
-    policy = get_policy(policy_name)
-    bwd_policy, bwd_acc = _bwd_flavor(policy)
-    kb = backend if backend in ("pallas", "interpret") else None
-    w = unpack_operand(wp, backend=kb)      # dense (k, n), transpose resolved
-    dx = _matmul_2d(dy, w, None, bwd_policy, False, True, backend,
-                    out_dtype=x2d.dtype, acc_dtype=bwd_acc)
-    if wp.layout.per_tile_scales:
-        dw_dense = None
-    else:
-        dw_dense = _matmul_2d(x2d, dy, None, bwd_policy, True, False, backend,
-                              out_dtype=w.dtype, acc_dtype=bwd_acc)
-    dwp = _packed_weight_cotangent(wp, dw_dense)
-    dbias = jnp.sum(dy, axis=0, dtype=jnp.float32) if has_bias else None
-    return dx, dwp, dbias
+def _gemm_bwd(spec: GemmSpec, epilogue: EpilogueSpec, policy_name, backend,
+              res, dy):
+    """One backward rule for every spec: fused-transpose GEMMs + registry
+    epilogue backward.
 
-
-_mp_dot_packed_core.defvjp(_mp_dot_packed_fwd, _mp_dot_packed_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _mp_dot_grouped_packed_core(x3, wp, bias, policy_name: str, backend: str,
-                                out_dtype: Optional[str]):
-    policy = get_policy(policy_name)
-    return _matmul_packed_impl(x3, wp, bias, policy, backend, out_dtype,
-                               grouped=True)
-
-
-def _mp_dot_grouped_packed_fwd(x3, wp, bias, policy_name, backend, out_dtype):
-    y = _mp_dot_grouped_packed_core(x3, wp, bias, policy_name, backend,
-                                    out_dtype)
-    return y, (x3, wp, bias)
-
-
-def _mp_dot_grouped_packed_bwd(policy_name, backend, out_dtype, res, dy):
-    from repro.packing.pack import unpack_operand
-    x3, wp, bias = res
+    Non-quantized sibling precision (STE for int8), bf16 partial sums so
+    TP/FSDP/EP gradient reductions move bf16 on the wire (see
+    :func:`_bwd_flavor`).  Packed weights: the payload's layout serves the
+    FORWARD read pattern; backward contracts over N, for which the dense
+    on-the-fly-transpose kernel path already exists — so the weight is
+    unpacked once and the gradient re-packed (int8 payloads stay frozen via
+    float0).  Fused epilogues recompute the pre-tail value z only when the
+    registry entry's backward needs it (one extra GEMM — standard
+    rematerialization; the fused forward never materializes z).
+    """
+    x, w, bias, extras = res
     policy = get_policy(policy_name)
     bwd_policy, bwd_acc = _bwd_flavor(policy)
-    kb = backend if backend in ("pallas", "interpret") else None
-    w = unpack_operand(wp, backend=kb)      # dense (g, k, n)
-    dx = _matmul_grouped(dy, w, None, bwd_policy, False, True, backend,
-                         out_dtype=x3.dtype, acc_dtype=bwd_acc)
-    if wp.layout.per_tile_scales:
-        dw_dense = None
+    grouped = spec.grouped
+
+    packed = is_packed(w)
+    if packed:
+        from repro.packing.pack import unpack_operand
+        kb = backend if backend in ("pallas", "interpret") else None
+        w_dense = unpack_operand(w, backend=kb)  # (k,n)/(g,k,n), trans resolved
+        w_trans = False
     else:
-        dw_dense = _matmul_grouped(x3, dy, None, bwd_policy, True, False,
-                                   backend, out_dtype=w.dtype,
-                                   acc_dtype=bwd_acc)
-    dwp = _packed_weight_cotangent(wp, dw_dense)
-    dbias = (jnp.sum(dy, axis=1, dtype=jnp.float32).astype(bias.dtype)
-             if bias is not None else None)
-    return dx, dwp, dbias
+        w_dense = w
+        w_trans = spec.trans_b
 
+    z = None
+    if epilogue_needs_pre(epilogue):
+        zspec = dataclasses.replace(
+            spec, packed=False, tile_scaled=False, trans_b=w_trans,
+            ragged=False, out_dtype="float32")
+        z = _apply_gemm(x, w_dense, bias, (), zspec,
+                        EpilogueSpec(alpha=epilogue.alpha), bwd_policy,
+                        backend)
+    dz, dextras = epilogue_bwd(epilogue, z, extras, dy.astype(jnp.float32))
 
-_mp_dot_grouped_packed_core.defvjp(_mp_dot_grouped_packed_fwd,
-                                   _mp_dot_grouped_packed_bwd)
+    # Chain through the epilogue's alpha pre-scale (z = alpha·acc + bias, so
+    # dacc = alpha·dz); bias adds AFTER alpha, so dbias below stays unscaled.
+    # The dynamic-int8 dequant scale is deliberately NOT chained (STE: the
+    # backward runs in the non-quantized sibling policy).
+    dzg = dz * jnp.asarray(epilogue.alpha, dz.dtype) \
+        if epilogue.alpha != 1.0 else dz
 
+    # dx = dzg @ op(w)^T : if w stored (k,n) -> dzg(m,n) x w(k,n)^T == trans_b=True
+    #                      if w stored (n,k) (trans_w) -> plain dzg @ w.
+    dx_spec = dataclasses.replace(
+        spec, packed=False, tile_scaled=False, trans_a=False,
+        trans_b=not w_trans, ragged=False, out_dtype=str(x.dtype))
+    dx = _apply_gemm(dzg, w_dense, None, (), dx_spec, _LINEAR, bwd_policy,
+                     backend, acc_dtype=bwd_acc)
 
-# --- differentiable core -----------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _mp_dot_core(x2d, w, bias, policy_name: str, trans_w: bool, backend: str):
-    policy = get_policy(policy_name)
-    return _matmul_2d(x2d, w, bias, policy, False, trans_w, backend)
-
-
-def _mp_dot_fwd(x2d, w, bias, policy_name, trans_w, backend):
-    y = _mp_dot_core(x2d, w, bias, policy_name, trans_w, backend)
-    return y, (x2d, w, bias is not None)
-
-
-def _mp_dot_bwd(policy_name, trans_w, backend, res, dy):
-    x2d, w, has_bias = res
-    policy = get_policy(policy_name)
-    # Non-quantized sibling precision (STE for int8), bf16 partial sums so
-    # TP/FSDP gradient reductions move bf16 on the wire (see _bwd_flavor).
-    bwd_policy, bwd_acc = _bwd_flavor(policy)
-    # dx = dy @ op(w)^T : if w stored (k,n) -> dy(m,n) x w(k,n)^T == trans_b=True
-    #                     if w stored (n,k) (trans_w) -> plain dy @ w.
-    dx = _matmul_2d(
-        dy, w, None, bwd_policy, False, not trans_w, backend,
-        out_dtype=x2d.dtype, acc_dtype=bwd_acc,
-    )
-    # dw: (k,n) = x^T @ dy ; transposed storage: (n,k) = dy^T @ x.
-    if trans_w:
-        dw = _matmul_2d(
-            dy, x2d, None, bwd_policy, True, False, backend,
-            out_dtype=w.dtype, acc_dtype=bwd_acc,
-        )
+    # dw: (k,n) = x^T @ dzg ; transposed storage: (n,k) = dzg^T @ x.
+    if packed and w.layout.per_tile_scales:
+        dw_dense = None  # int8 payload: no tangent space, frozen weight
     else:
-        dw = _matmul_2d(
-            x2d, dy, None, bwd_policy, True, False, backend,
-            out_dtype=w.dtype, acc_dtype=bwd_acc,
-        )
-    dbias = jnp.sum(dy, axis=0, dtype=jnp.float32) if has_bias else None
-    return dx, dw, dbias
+        dw_spec = dataclasses.replace(
+            spec, packed=False, tile_scaled=False, trans_a=True,
+            trans_b=False, ragged=False, out_dtype=str(w_dense.dtype))
+        dw_dense = (_apply_gemm(dzg, x, None, (), dw_spec, _LINEAR,
+                                bwd_policy, backend, acc_dtype=bwd_acc)
+                    if w_trans else
+                    _apply_gemm(x, dzg, None, (), dw_spec, _LINEAR,
+                                bwd_policy, backend, acc_dtype=bwd_acc))
+    dw = _packed_weight_cotangent(w, dw_dense) if packed else dw_dense
+
+    # f32 accumulation for the reduction, cast back to the primal's dtype
+    # (custom-VJP cotangents must match primal dtypes).
+    dbias = None
+    if bias is not None:
+        dbias = jnp.sum(dz, axis=1 if grouped else 0,
+                        dtype=jnp.float32).astype(bias.dtype)
+    return dx, dw, dbias, dextras
 
 
-_mp_dot_core.defvjp(_mp_dot_fwd, _mp_dot_bwd)
+_gemm_core.defvjp(_gemm_fwd, _gemm_bwd)
+
+
+# --- op-level spec assembly ---------------------------------------------------
+
+def _build_epilogue(epilogue, activation, gate, residual, epilogue_operands):
+    """Resolve the op-level EpilogueSpec + ordered extras tuple.
+
+    Convenience kwargs (``activation``/``gate``/``residual``) infer the
+    registry kind; an explicit ``epilogue`` spec wins, with
+    ``epilogue_operands`` naming any custom entry's streamed operands.
+    The shared registry-driven resolution lives in core/gemm_spec.py.
+    """
+    named = {"gate": gate, "residual": residual}
+    if epilogue_operands:
+        named.update(epilogue_operands)
+    epilogue, extras = resolve_epilogue(named, epilogue=epilogue,
+                                        activation=activation)
+    if epilogue.beta != 0.0:
+        raise ValueError(
+            "beta·C accumulation is a kernel-level epilogue "
+            "(mpgemm_pallas); mp_dot has no C operand")
+    return epilogue, extras
+
+
+def _dequant_static(w, policy):
+    """Dequantize a static-int8 {"q","scale"} dict BEFORE the custom-VJP
+    core: the bwd rule contracts against w and must see an array primal (a
+    dict residual has no dtype and no array cotangent).  XLA still fuses
+    the dequant into the GEMM read; differentiation flows through the
+    dequant natively."""
+    from repro.core.quantization import dequantize_tensor, is_quantized
+    if not is_quantized(w):
+        return w
+    return dequantize_tensor(
+        w, jnp.float32 if policy.quantized
+        else jnp.dtype(policy.compute_dtype))
 
 
 def mp_dot(
@@ -338,8 +334,21 @@ def mp_dot(
     policy="bf16",
     trans_w: bool = False,
     backend: Optional[str] = None,
+    out_dtype=None,
+    activation: Optional[str] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    epilogue: Optional[EpilogueSpec] = None,
+    epilogue_operands: Optional[dict] = None,
 ) -> jax.Array:
-    """y[..., n] = x[..., k] @ (w[n, k]ᵀ if trans_w else w[k, n]) + bias.
+    """y[..., n] = tail(x[..., k] @ (w[n, k]ᵀ if trans_w else w[k, n]) + bias).
+
+    ``tail`` is the registry epilogue: ``activation`` alone fuses an
+    activation into the GEMM's store; ``gate`` fuses ``act(·) · gate`` (the
+    SwiGLU/GeGLU gating step — one kernel launch instead of a GEMM plus an
+    elementwise pass); ``residual`` fuses ``act(·) + residual``.  Both take
+    an operand shaped like the output.  All fusions differentiate through
+    the registry's backward rules.
 
     ``trans_w=True`` is the on-the-fly-transposition path — used e.g. for
     tied-embedding logits (w stored (vocab, d_model)).
@@ -356,6 +365,10 @@ def mp_dot(
     x2d = x.reshape(-1, x.shape[-1])
     if bias is not None:
         bias = bias.reshape(-1)
+    epilogue, extras = _build_epilogue(epilogue, activation, gate, residual,
+                                       epilogue_operands)
+    extras = tuple(e.reshape(-1, e.shape[-1]) for e in extras)
+    out_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
     if is_packed(w):
         if w.layout.g != 1:
             raise ValueError("grouped PackedOperand: use mp_dot_grouped")
@@ -364,101 +377,19 @@ def mp_dot(
                 f"trans_w={trans_w} but the operand was packed with "
                 f"trans_w={w.layout.trans_w} (transposition is resolved at "
                 f"pack time)")
-        y2d = _mp_dot_packed_core(x2d, w, bias, policy.name, backend)
-        return y2d.reshape(*lead, w.layout.n)
-    y2d = _mp_dot_core(x2d, w, bias, policy.name, trans_w, backend)
-    wshape = w["q"].shape if isinstance(w, dict) else w.shape
-    n = wshape[0] if trans_w else wshape[-1]
+        n = w.layout.n
+        spec = GemmSpec(packed=True, tile_scaled=w.layout.per_tile_scales,
+                        out_dtype=out_s)
+    else:
+        w = _dequant_static(w, policy)
+        n = w.shape[0] if trans_w else w.shape[-1]
+        spec = GemmSpec(trans_b=trans_w, out_dtype=out_s)
+    y2d = _gemm_core(x2d, w, bias, extras, spec, epilogue, policy.name,
+                     backend)
     return y2d.reshape(*lead, n)
 
 
 # --- grouped / batched op ----------------------------------------------------
-
-def _grouped_dims(trans_a: bool, trans_b: bool):
-    """dot_general dims for (G, ., .) x (G, ., .): group is the batch axis."""
-    ca = 1 if trans_a else 2
-    cb = 2 if trans_b else 1
-    return (((ca,), (cb,)), ((0,), (0,)))
-
-
-def _cached_grouped_plan(x, w, trans_a: bool, trans_b: bool, out_dtype):
-    """Tuned grouped plan from the global cache, or None (same contract as
-    :func:`_cached_plan`, keyed with the extra group dimension)."""
-    from repro.tuning.plan_cache import lookup_plan
-    g = x.shape[0]
-    m = x.shape[2] if trans_a else x.shape[1]
-    k = x.shape[1] if trans_a else x.shape[2]
-    n = w.shape[1] if trans_b else w.shape[2]
-    return lookup_plan(
-        m, n, k, x.dtype, w.dtype, out_dtype,
-        trans_a=trans_a, trans_b=trans_b, g=g,
-    )
-
-
-def _matmul_grouped(x, w, bias, policy, trans_a, trans_b, backend,
-                    out_dtype=None, acc_dtype=None):
-    """One grouped GEMM (G independent problems) under a policy.
-
-    Same policy logic as the 2-D op (see :func:`_matmul_impl`).  Dynamic
-    int8 uses one per-tensor scale pair across all groups (the fused
-    dequant stays a scalar epilogue multiply).  The barrier'd down-cast is
-    safe under differentiation: it only ever runs inside the custom-VJP
-    core, where JAX never needs a JVP rule for the barrier.  ``bias`` must
-    be (G, N) here — :func:`mp_dot_grouped` normalizes.
-    """
-    return _matmul_impl(x, w, bias, policy, trans_a, trans_b, backend,
-                        out_dtype, acc_dtype, grouped=True)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _mp_dot_grouped_core(x3, w, bias, policy_name: str, trans_w: bool,
-                         backend: str, out_dtype: Optional[str]):
-    policy = get_policy(policy_name)
-    return _matmul_grouped(x3, w, bias, policy, False, trans_w, backend,
-                           out_dtype=out_dtype)
-
-
-def _mp_dot_grouped_fwd(x3, w, bias, policy_name, trans_w, backend, out_dtype):
-    y = _mp_dot_grouped_core(x3, w, bias, policy_name, trans_w, backend,
-                             out_dtype)
-    return y, (x3, w, bias)
-
-
-def _mp_dot_grouped_bwd(policy_name, trans_w, backend, out_dtype, res, dy):
-    x3, w, bias = res
-    policy = get_policy(policy_name)
-    # Non-quantized sibling precision (STE for int8); bf16 partial sums on
-    # the XLA backend so EP/TP gradient reductions move bf16 on the wire
-    # (kernel backends accumulate per the plan's acc dtype — see
-    # _matmul_impl and _bwd_flavor).
-    bwd_policy, bwd_acc = _bwd_flavor(policy)
-    # Fused-transpose grouped GEMMs — the paper's on-the-fly transposition
-    # applied per expert: no transposed expert-weight copies materialize.
-    # dx[g] = dy[g] @ op(w[g])^T
-    dx = _matmul_grouped(
-        dy, w, None, bwd_policy, False, not trans_w, backend,
-        out_dtype=x3.dtype, acc_dtype=bwd_acc,
-    )
-    # dw[g]: (k,n) = x[g]^T @ dy[g] ; transposed storage: (n,k) = dy[g]^T @ x[g].
-    if trans_w:
-        dw = _matmul_grouped(
-            dy, x3, None, bwd_policy, True, False, backend,
-            out_dtype=w.dtype, acc_dtype=bwd_acc,
-        )
-    else:
-        dw = _matmul_grouped(
-            x3, dy, None, bwd_policy, True, False, backend,
-            out_dtype=w.dtype, acc_dtype=bwd_acc,
-        )
-    # f32 accumulation for the reduction, cast back to the primal's dtype
-    # (custom-VJP cotangents must match primal dtypes).
-    dbias = (jnp.sum(dy, axis=1, dtype=jnp.float32).astype(bias.dtype)
-             if bias is not None else None)
-    return dx, dw, dbias
-
-
-_mp_dot_grouped_core.defvjp(_mp_dot_grouped_fwd, _mp_dot_grouped_bwd)
-
 
 def mp_dot_grouped(
     x: jax.Array,
@@ -470,13 +401,20 @@ def mp_dot_grouped(
     backend: Optional[str] = None,
     group_sizes: Optional[jax.Array] = None,
     out_dtype=None,
+    activation: Optional[str] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    epilogue: Optional[EpilogueSpec] = None,
+    epilogue_operands: Optional[dict] = None,
 ) -> jax.Array:
-    """y[g, m, n] = x[g, m, k] @ (w[g, n, k]ᵀ if trans_w else w[g, k, n]) + bias[g, n].
+    """y[g, m, n] = tail(x[g, m, k] @ (w[g, n, k]ᵀ if trans_w else w[g, k, n]) + bias[g, n]).
 
     The grouped sibling of :func:`mp_dot`: G independent GEMMs — MoE expert
     blocks, batched projections — in ONE kernel launch with the group as the
     leading grid axis, under the same precision policies, plan cache (keyed
-    with the extra ``g`` dimension), and fused-transpose custom VJP.
+    with the extra ``g`` dimension and the epilogue tag), fused-transpose
+    custom VJP, and registry epilogues (``gate``/``residual`` are (G, M, N)
+    operands — e.g. the fused MoE SwiGLU gating).
 
     ``group_sizes`` (shape (G,), int) marks ragged groups: rows ``>=
     group_sizes[g]`` of each output group are forced to zero, so capacity-
@@ -492,6 +430,9 @@ def mp_dot_grouped(
         raise ValueError(f"mp_dot_grouped expects x of rank 3, got {x.shape}")
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
+    epilogue, extras = _build_epilogue(epilogue, activation, gate, residual,
+                                       epilogue_operands)
+    out_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
     if is_packed(w):
         if w.layout.g != x.shape[0]:
             raise ValueError(
@@ -500,30 +441,19 @@ def mp_dot_grouped(
             raise ValueError(
                 f"trans_w={trans_w} but the operand was packed with "
                 f"trans_w={w.layout.trans_w}")
+        spec = GemmSpec(grouped=True, packed=True,
+                        tile_scaled=w.layout.per_tile_scales,
+                        ragged=group_sizes is not None, out_dtype=out_s)
     else:
-        from repro.core.quantization import dequantize_tensor, is_quantized
-        if is_quantized(w):
-            # Dequantize static-int8 dicts BEFORE the custom-VJP core: the
-            # bwd rule contracts against w and must see an array primal (a
-            # dict residual has no dtype and no array cotangent).  XLA
-            # still fuses the dequant into the GEMM read; differentiation
-            # flows through the dequant natively, as the pre-grouped MoE
-            # path did.
-            w = dequantize_tensor(
-                w, jnp.float32 if policy.quantized
-                else jnp.dtype(policy.compute_dtype))
+        w = _dequant_static(w, policy)
+        spec = GemmSpec(grouped=True, trans_b=trans_w,
+                        ragged=group_sizes is not None, out_dtype=out_s)
     if bias is not None and bias.ndim == 1:
         # Normalize a shared (N,) bias to (G, N) BEFORE the custom-VJP core:
         # outside it autodiff sum-reduces the (G, N) bias cotangent back to
         # (N,); inside, backends would disagree on broadcasting.
         bias = jnp.broadcast_to(bias[None, :], (x.shape[0], bias.shape[0]))
-    out_dtype_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
-    if is_packed(w):
-        y = _mp_dot_grouped_packed_core(x, w, bias, policy.name, backend,
-                                        out_dtype_s)
-    else:
-        y = _mp_dot_grouped_core(x, w, bias, policy.name, trans_w, backend,
-                                 out_dtype_s)
+    y = _gemm_core(x, w, bias, extras, spec, epilogue, policy.name, backend)
     if group_sizes is not None:
         sizes = jnp.asarray(group_sizes, jnp.int32).reshape(-1, 1, 1)
         rows = jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
@@ -560,8 +490,8 @@ def mp_einsum(spec: str, *operands, policy="bf16") -> jax.Array:
 
     Grouped-matmul specs (``gmk,gkn->gmn`` and the stored-transposed
     ``gmk,gnk->gmn``, any letters) are routed through :func:`mp_dot_grouped`
-    — i.e. through the grouped MPGEMM kernel and plan cache — rather than a
-    raw einsum.  Anything else runs on XLA with the policy's
+    — i.e. through the spec-driven MPGEMM core and plan cache — rather than
+    a raw einsum.  Anything else runs on XLA with the policy's
     compute/accumulate dtypes; quantized policies fall back to their bf16
     sibling there (per-slice dynamic quantization needs the grouped path).
     """

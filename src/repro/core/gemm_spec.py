@@ -1,0 +1,342 @@
+"""GemmSpec / EpilogueSpec — the declarative layer of the GEMM operator stack.
+
+The paper's core lesson (Sections IV-V) is that ONE parameterized
+micro-kernel family — cache-aware blocking, on-the-fly transposition, and a
+fused epilogue that never leaves the accumulator — should serve every
+precision, shape, and layout.  This module is the declarative half of that
+design:
+
+* :class:`GemmSpec` names one GEMM *shape family*: 2-D vs grouped, dense vs
+  pre-packed B, transposition flags, ragged grouping, output dtype.  It is
+  static/hashable, so it can ride ``jax.custom_vjp`` nondiff args and key
+  dispatch tables.
+* :class:`EpilogueSpec` names what happens to the accumulator after the
+  K loop, *before* it ever leaves VMEM: scalar dequant, alpha, bias, an
+  activation, a registry-selected fusion tail (gated activation, residual
+  add, ...), and beta·C.
+* The **epilogue registry** (:func:`register_epilogue`) is where new fusions
+  are added.  An entry contributes the forward tail, the extra (M, N)-shaped
+  operands it streams, and its backward rule — so a new fusion is ONE
+  registry entry consumed by every path (2-D, grouped, packed, every
+  precision policy, forward and backward), never a new kernel clone.
+
+:func:`apply_epilogue` is the single implementation of the epilogue
+semantics.  The Pallas kernel factory (``kernels/mpgemm.py``) calls it on
+VMEM blocks inside the kernel body; the XLA backend and the reference
+oracle (``kernels/ref.py``) call it on full arrays — one definition, three
+consumers, zero drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _has_act(ep: "EpilogueSpec") -> bool:
+    return ep.activation not in (None, "none")
+
+
+# --- the fused-epilogue registry ---------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueDef:
+    """One registered epilogue family.
+
+    ``tail(ep, acc, extras)`` maps the post-bias accumulator to the output
+    block; ``extras`` is a dict of the entry's named (M, N)-shaped streamed
+    operands.  ``bwd(ep, z, extras, dy)`` returns ``(dz, dextras)``: the
+    cotangent flowing back into the GEMM (pre-tail) and the cotangents of
+    the extra operands.  ``z`` is the recomputed pre-tail value (f32) when
+    ``needs_pre(ep)`` is true, else ``None`` — entries that only need the
+    incoming cotangent (e.g. a pure residual add) skip the recompute GEMM.
+    """
+
+    kind: str
+    extra_operands: Tuple[str, ...]
+    tail: Callable
+    bwd: Callable
+    needs_pre: Callable
+
+
+_EPILOGUES: Dict[str, EpilogueDef] = {}
+
+
+def register_epilogue(kind: str, *, extra_operands: Tuple[str, ...] = (),
+                      bwd: Callable, needs_pre: Callable):
+    """Register a fused-epilogue family under ``kind`` (decorator).
+
+    This is the extension point the four hand-cloned GEMM paths used to be:
+    a new fusion is registered once and immediately works on the 2-D,
+    grouped, and packed paths, every precision policy, and in the op-level
+    custom VJP.  See docs/gemm_stack.md for a worked example.
+    """
+    def deco(tail: Callable) -> Callable:
+        if kind in _EPILOGUES:
+            raise ValueError(f"epilogue {kind!r} already registered")
+        _EPILOGUES[kind] = EpilogueDef(
+            kind=kind, extra_operands=tuple(extra_operands), tail=tail,
+            bwd=bwd, needs_pre=needs_pre,
+        )
+        return tail
+    return deco
+
+
+def get_epilogue(kind: str) -> EpilogueDef:
+    try:
+        return _EPILOGUES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown epilogue kind {kind!r}; registered: "
+            f"{sorted(_EPILOGUES)}") from None
+
+
+def epilogue_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_EPILOGUES))
+
+
+# --- specs -------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Everything applied to the accumulator before it leaves VMEM.
+
+    Order of operations (``apply_epilogue``)::
+
+        acc = acc(f32) * scale        # scalar dequant, when a scale is fed
+        acc = alpha * acc
+        acc = acc + bias
+        acc = tail(acc)               # registry: act(acc) | act(acc)·g | ...
+        acc = acc + beta * c
+
+    ``has_bias`` / ``has_scale`` record operand *presence* for the kernel
+    factory (the launch normalizes them from the actual arguments); the
+    activation and fusion ``kind`` are the user-facing surface.
+    """
+
+    kind: str = "linear"
+    activation: Optional[str] = None
+    alpha: float = 1.0
+    beta: float = 0.0
+    has_bias: bool = False
+    has_scale: bool = False
+
+    def __post_init__(self):
+        get_epilogue(self.kind)  # raises on unknown kinds
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown activation {self.activation!r}; valid: "
+                f"{sorted(k for k in ACTIVATIONS if k)}")
+
+    @property
+    def extra_operands(self) -> Tuple[str, ...]:
+        return get_epilogue(self.kind).extra_operands
+
+    @property
+    def tag(self) -> str:
+        """Plan-cache namespace tag (``make_key(..., epilogue=...)``).
+
+        Empty for the ``linear`` family so pre-registry cache keys stay
+        byte-identical; fusion kinds tag with kind(+activation) so fused
+        and unfused tunings never collide — the extra streamed operands
+        change the measured optimum.
+        """
+        if self.kind == "linear":
+            return ""
+        return self.kind if not _has_act(self) else \
+            f"{self.kind}-{self.activation}"
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """Static description of one GEMM instance family.
+
+    The single dispatch key replacing the four hand-written paths
+    (2-D / grouped × dense / packed): the kernel factory emits the Pallas
+    body from it, and the op layer's one custom-VJP core dispatches on it.
+    ``out_dtype`` is a dtype string (None → policy/planner default);
+    ``ragged`` records that the grouped op masks rows by ``group_sizes``
+    (the mask itself lives outside the custom VJP, where autodiff handles
+    it natively).
+    """
+
+    grouped: bool = False
+    packed: bool = False
+    tile_scaled: bool = False
+    trans_a: bool = False
+    trans_b: bool = False
+    ragged: bool = False
+    out_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.tile_scaled and not self.packed:
+            raise ValueError("tile_scaled implies a packed operand")
+        if self.ragged and not self.grouped:
+            raise ValueError("ragged grouping requires grouped=True")
+        if self.packed and self.trans_b:
+            raise ValueError(
+                "packed B has its transpose resolved at pack time")
+        if self.out_dtype is not None:
+            object.__setattr__(self, "out_dtype",
+                               str(jnp.dtype(self.out_dtype)))
+
+
+# --- the one epilogue implementation -----------------------------------------
+
+def apply_epilogue(ep: EpilogueSpec, acc, *, bias=None, scale=None, c=None,
+                   extras=()):
+    """Apply ``ep`` to an accumulator value.
+
+    The SINGLE home of the epilogue semantics: the Pallas kernel body calls
+    it on (bm, bn) VMEM blocks, the XLA backend and the reference oracle on
+    full arrays.  ``extras`` is a tuple in the registry entry's
+    ``extra_operands`` order; ``bias``/``c`` must already broadcast against
+    ``acc``; ``scale`` is a scalar.
+    """
+    ed = get_epilogue(ep.kind)
+    if scale is not None:
+        acc = acc.astype(jnp.float32) * scale
+    if ep.alpha != 1.0:
+        acc = acc * jnp.asarray(ep.alpha, acc.dtype)
+    if bias is not None:
+        acc = acc + bias.astype(acc.dtype)
+    acc = ed.tail(ep, acc, dict(zip(ed.extra_operands, extras)))
+    if ep.beta != 0.0:
+        if c is None:
+            raise ValueError("beta != 0 requires c")
+        acc = acc + jnp.asarray(ep.beta, acc.dtype) * c.astype(acc.dtype)
+    return acc
+
+
+def epilogue_bwd(ep: EpilogueSpec, z, extras, dy):
+    """Cotangents through the registry tail: ``(dz, dextras)``.
+
+    ``dy`` must be f32; ``z`` is the recomputed pre-tail value (f32) when
+    the entry's ``needs_pre`` demanded it, else None.  The beta·C term is
+    linear and handled by the caller (C is never differentiated at the op
+    layer); bias/alpha/scale cotangents likewise (dbias = Σ dz rows).
+    """
+    return get_epilogue(ep.kind).bwd(ep, z, extras, dy)
+
+
+def epilogue_needs_pre(ep: EpilogueSpec) -> bool:
+    """Does the backward rule need the recomputed pre-tail value?"""
+    return bool(get_epilogue(ep.kind).needs_pre(ep))
+
+
+# --- operand -> spec resolution (shared by ops, kernel wrappers, oracle) -----
+
+def infer_epilogue_kind(named: dict) -> str:
+    """The registry kind whose ``extra_operands`` exactly match the non-None
+    ``named`` operands (``{}`` / all-None -> ``linear``).  Registry-driven,
+    so a newly registered fusion is constructible from named operands
+    without touching any call site."""
+    present = frozenset(k for k, v in named.items() if v is not None)
+    if not present:
+        return "linear"
+    for kind, ed in _EPILOGUES.items():
+        if present == frozenset(ed.extra_operands):
+            return kind
+    raise ValueError(
+        f"operands {sorted(present)} are not consumed together by any "
+        f"registered epilogue; registered: "
+        f"{ {k: v.extra_operands for k, v in _EPILOGUES.items()} }")
+
+
+def collect_extras(ep: EpilogueSpec, named: dict) -> tuple:
+    """``named`` operands ordered per the registry entry, with presence and
+    leftover validation."""
+    ed = get_epilogue(ep.kind)
+    extras = []
+    for nm in ed.extra_operands:
+        if named.get(nm) is None:
+            raise ValueError(f"epilogue {ep.kind!r} requires operand {nm!r}")
+        extras.append(named[nm])
+    for nm, v in named.items():
+        if v is not None and nm not in ed.extra_operands:
+            raise ValueError(
+                f"operand {nm!r} is not consumed by epilogue {ep.kind!r}")
+    return tuple(extras)
+
+
+def resolve_epilogue(named: dict, *, epilogue: "EpilogueSpec" = None,
+                     activation=None, alpha: float = 1.0, beta: float = 0.0,
+                     has_bias: bool = False, has_scale: bool = False):
+    """(EpilogueSpec, ordered extras) from named fusion operands.
+
+    The ONE implementation behind the op layer (``mp_dot``), the kernel
+    wrappers (``mpgemm_pallas``), and the reference oracle — an explicit
+    ``epilogue`` wins (its kind names the operands it consumes); otherwise
+    the kind is inferred from which operands are present.
+    """
+    if epilogue is None:
+        epilogue = EpilogueSpec(
+            kind=infer_epilogue_kind(named), activation=activation,
+            alpha=float(alpha), beta=float(beta), has_bias=has_bias,
+            has_scale=has_scale)
+    elif activation is not None:
+        raise ValueError(
+            "pass the activation inside the EpilogueSpec OR as the "
+            "activation kwarg, not both")
+    return epilogue, collect_extras(epilogue, named)
+
+
+# --- built-in epilogue families ----------------------------------------------
+
+def _act_vjp(ep, z, dy):
+    _, vjp = jax.vjp(ACTIVATIONS[ep.activation], z)
+    return vjp(dy)[0]
+
+
+def _linear_bwd(ep, z, extras, dy):
+    return (_act_vjp(ep, z, dy) if _has_act(ep) else dy), ()
+
+
+@register_epilogue("linear", bwd=_linear_bwd, needs_pre=_has_act)
+def _linear_tail(ep, acc, extras):
+    """act(acc) — the classic BLAS-plus-activation epilogue."""
+    return ACTIVATIONS[ep.activation](acc)
+
+
+def _gated_bwd(ep, z, extras, dy):
+    g = extras[0]
+    a_z, vjp = jax.vjp(ACTIVATIONS[ep.activation], z)
+    dz = vjp(dy * g.astype(dy.dtype))[0]
+    dg = (dy * a_z.astype(dy.dtype)).astype(g.dtype)
+    return dz, (dg,)
+
+
+@register_epilogue("gated", extra_operands=("gate",), bwd=_gated_bwd,
+                   needs_pre=lambda ep: True)
+def _gated_tail(ep, acc, extras):
+    """act(acc) · g — SwiGLU/GeGLU gating fused into the gate GEMM's store:
+    the gate projection, its activation, and the elementwise product lower
+    to ONE kernel launch instead of a GEMM plus an XLA elementwise pass."""
+    return ACTIVATIONS[ep.activation](acc) * extras["gate"].astype(acc.dtype)
+
+
+def _residual_bwd(ep, z, extras, dy):
+    dz = _act_vjp(ep, z, dy) if _has_act(ep) else dy
+    return dz, (dy.astype(extras[0].dtype),)
+
+
+@register_epilogue("residual", extra_operands=("residual",),
+                   bwd=_residual_bwd, needs_pre=_has_act)
+def _residual_tail(ep, acc, extras):
+    """act(acc) + r — the transformer residual add riding the GEMM's final
+    store (unscaled, unlike beta·C, and available on the grouped path)."""
+    return ACTIVATIONS[ep.activation](acc) + \
+        extras["residual"].astype(acc.dtype)
+
+
+LINEAR = EpilogueSpec()

@@ -1,6 +1,9 @@
-"""MPGEMM-TPU Pallas kernel.
+"""MPGEMM-TPU: ONE spec-driven Pallas kernel factory.
 
-TPU-native re-derivation of the paper's SME micro-kernel (Sections IV-C, V-C):
+TPU-native re-derivation of the paper's SME micro-kernel (Sections IV-C,
+V-C), generated from a :class:`~repro.core.gemm_spec.GemmSpec` +
+:class:`~repro.core.gemm_spec.EpilogueSpec` instead of hand-cloned per
+path:
 
 * "All four ZA tiles resident across the K loop"  ->  an fp32/int32 VMEM
   scratch accumulator revisited by a K-innermost grid; the output block is
@@ -11,15 +14,22 @@ TPU-native re-derivation of the paper's SME micro-kernel (Sections IV-C, V-C):
   whichever axis the stored layout dictates; no materialized transpose pass.
 * "Predicated edge micro-kernels"  ->  K-remainder masking with iota
   predicates in-kernel; M/N edges use Pallas partial-block masked stores.
-* "Mixed precision FMOPA"  ->  bf16 x bf16 -> f32 and int8 x int8 -> int32 via
-  ``preferred_element_type``, with a fused dequant/alpha/beta/bias/activation
-  epilogue (the paper's first-round-online-packing lesson: never run a
-  separate memory pass for work that can ride the GEMM).
+* "Mixed precision FMOPA"  ->  bf16 x bf16 -> f32 and int8 x int8 -> int32
+  via ``preferred_element_type``, with the registry-driven fused epilogue
+  (``core/gemm_spec.py``): dequant/alpha/bias/activation plus the gated-
+  activation and residual-add fusions, all riding the accumulator's single
+  store — the paper's first-round-online-packing lesson: never run a
+  separate memory pass for work that can ride the GEMM.
+
+:func:`make_gemm_kernel` is the single factory — 2-D vs grouped, dense vs
+packed B, and every registered epilogue are spec parameters of ONE body,
+not separate kernels.  :func:`mpgemm_pallas` / :func:`mpgemm_grouped_pallas`
+are thin argument-to-spec adapters kept as the public entry points.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import dataclasses
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,18 +41,12 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 from repro.core.blocking import (
-    GemmPlan, grouped_plan_from_2d, plan_gemm, plan_grouped_gemm,
-    plan_with_blocks,
+    GemmPlan, grouped_plan_from_2d, plan_gemm, plan_with_blocks,
+)
+from repro.core.gemm_spec import (
+    EpilogueSpec, GemmSpec, apply_epilogue, get_epilogue, resolve_epilogue,
 )
 from repro.packing.layout import PackedOperand
-
-_ACTIVATIONS = {
-    None: lambda x: x,
-    "none": lambda x: x,
-    "relu": jax.nn.relu,
-    "gelu": jax.nn.gelu,
-    "silu": jax.nn.silu,
-}
 
 
 def _mask_contract(x, axis: int, valid):
@@ -86,74 +90,75 @@ def _accumulate(acc_ref, a, b, ts, trans_a: bool, trans_b: bool, acc_dtype):
             preferred_element_type=acc_dtype)
 
 
-def mpgemm_kernel(
-    *refs,
-    nk: int,
-    k_rem: int,
-    trans_a: bool,
-    trans_b: bool,
-    acc_dtype,
-    alpha: float,
-    beta: float,
-    has_bias: bool,
-    activation: Optional[str],
-    has_scale: bool,
-    packed_b: bool = False,
-    tile_scaled: bool = False,
-):
-    """Grid = (M/bm, N/bn, K/bk), K innermost ('arbitrary')."""
-    idx = 0
-    a_ref = refs[idx]; idx += 1
-    b_ref = refs[idx]; idx += 1
-    ts_ref = refs[idx] if tile_scaled else None
-    idx += 1 if tile_scaled else 0
-    c_ref = refs[idx] if beta != 0.0 else None
-    idx += 1 if beta != 0.0 else 0
-    bias_ref = refs[idx] if has_bias else None
-    idx += 1 if has_bias else 0
-    scale_ref = refs[idx] if has_scale else None
-    idx += 1 if has_scale else 0
-    out_ref = refs[idx]; idx += 1
-    acc_ref = refs[idx]
+def make_gemm_kernel(*, spec: GemmSpec, epilogue: EpilogueSpec, nk: int,
+                     k_rem: int, acc_dtype):
+    """THE kernel factory: emit one Pallas body from the spec.
 
-    k = pl.program_id(2)
+    Grid = (M/bm, N/bn, K/bk) — grouped specs prepend the group axis G —
+    with K innermost ('arbitrary').  Ref order (presence driven by the
+    spec/epilogue): a, b, [tile_scales], [c], [bias], [scale],
+    *epilogue-extras, out, acc-scratch.  Grouped block refs carry a size-1
+    leading group dim; the accumulator scratch does not (it is recycled
+    across groups because K is the only revisiting axis).
+    """
+    ep_def = get_epilogue(epilogue.kind)
+    grouped = spec.grouped
+    k_axis = 3 if grouped else 2
+    n_lead = 1 if grouped else 0  # size-1 group dim on every block ref
 
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def _read(ref, extra_lead: int = 0):
+        lead = n_lead + extra_lead
+        return ref[(0,) * lead] if lead else ref[...]
 
-    a = a_ref[...]
-    # Packed B: the payload block is a pre-transposed, zero-padded (bk, bn)
-    # tile behind a leading (1, 1) tile index — an identity index map, no
-    # strided DMA, no on-the-fly transposition.
-    b = b_ref[0, 0] if packed_b else b_ref[...]
-    if k_rem:
-        # Paper's predicate registers: mask the K tail so pipeline pad
-        # garbage (possibly NaN) never pollutes the accumulator.  Packed
-        # payload tiles were zero-padded at pack time, so only A needs the
-        # predicate on that path.
-        valid = jnp.where(k == nk - 1, k_rem, a.shape[0 if trans_a else 1])
-        a = _mask_contract(a, 0 if trans_a else 1, valid)
-        if not packed_b:
-            b = _mask_contract(b, 1 if trans_b else 0, valid)
+    def kernel(*refs):
+        refs = list(refs)
+        a_ref = refs.pop(0)
+        b_ref = refs.pop(0)
+        ts_ref = refs.pop(0) if spec.tile_scaled else None
+        c_ref = refs.pop(0) if epilogue.beta != 0.0 else None
+        bias_ref = refs.pop(0) if epilogue.has_bias else None
+        scale_ref = refs.pop(0) if epilogue.has_scale else None
+        extra_refs = [refs.pop(0) for _ in ep_def.extra_operands]
+        out_ref = refs.pop(0)
+        acc_ref = refs.pop(0)
 
-    ts = ts_ref[0, 0] if tile_scaled else None
-    _accumulate(acc_ref, a, b, ts, trans_a, trans_b, acc_dtype)
+        kk = pl.program_id(k_axis)
 
-    @pl.when(k == nk - 1)
-    def _epilogue():
-        acc = acc_ref[...]
-        if has_scale:
-            # int8 dequant / general scaling: acc(i32|f32) * scalar -> f32.
-            acc = acc.astype(jnp.float32) * scale_ref[0]
-        if alpha != 1.0:
-            acc = acc * jnp.asarray(alpha, acc.dtype)
-        if has_bias:
-            acc = acc + bias_ref[...].astype(acc.dtype)
-        acc = _ACTIVATIONS[activation](acc)
-        if beta != 0.0:
-            acc = acc + jnp.asarray(beta, acc.dtype) * c_ref[...].astype(acc.dtype)
-        out_ref[...] = acc.astype(out_ref.dtype)
+        @pl.when(kk == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a = _read(a_ref)
+        # Packed B: the payload block is a pre-transposed, zero-padded
+        # (bk, bn) tile behind leading (1, 1) tile indices — an identity
+        # index map, no strided DMA, no on-the-fly transposition.
+        b = _read(b_ref, 2 if spec.packed else 0)
+        if k_rem:
+            # Paper's predicate registers: mask the K tail so pipeline pad
+            # garbage (possibly NaN) never pollutes the accumulator.
+            # Packed payload tiles were zero-padded at pack time, so only
+            # A needs the predicate on that path.
+            valid = jnp.where(kk == nk - 1, k_rem,
+                              a.shape[0 if spec.trans_a else 1])
+            a = _mask_contract(a, 0 if spec.trans_a else 1, valid)
+            if not spec.packed:
+                b = _mask_contract(b, 1 if spec.trans_b else 0, valid)
+
+        ts = _read(ts_ref, 2) if spec.tile_scaled else None
+        _accumulate(acc_ref, a, b, ts, spec.trans_a, spec.trans_b, acc_dtype)
+
+        @pl.when(kk == nk - 1)
+        def _epilogue():
+            out = apply_epilogue(
+                epilogue, acc_ref[...],
+                bias=_read(bias_ref) if bias_ref is not None else None,
+                scale=scale_ref[0] if scale_ref is not None else None,
+                c=_read(c_ref) if c_ref is not None else None,
+                extras=tuple(_read(r) for r in extra_refs),
+            ).astype(out_ref.dtype)
+            out_ref[...] = out[None] if grouped else out
+
+    return kernel
 
 
 def _compiler_params(interpret: bool, grid_rank: int = 3):
@@ -173,7 +178,8 @@ def _compiler_params(interpret: bool, grid_rank: int = 3):
 
 
 def _packed_plan(m: int, k: int, n: int, layout, a_dtype, out_dtype,
-                 trans_a: bool, beta: float, g: int = 1) -> GemmPlan:
+                 trans_a: bool, beta: float, g: int = 1,
+                 epilogue_tag: str = "", extra_mn: int = 0) -> GemmPlan:
     """Resolve a plan for a packed-B GEMM: tuned (packed-layout namespace)
     if its blocks agree with the payload layout, else the analytic solve
     with (bn, bk) pinned to the layout — the payload's tiling IS the block
@@ -185,23 +191,244 @@ def _packed_plan(m: int, k: int, n: int, layout, a_dtype, out_dtype,
     plan = lookup_plan(
         m, n, k, a_dtype, layout.dtype, out_dtype,
         trans_a=trans_a, trans_b=False, beta=beta, g=g, layout=layout.tag,
+        epilogue=epilogue_tag,
     )
     if plan is not None and (plan.bn, plan.bk) != (layout.bn, layout.bk):
         plan = None  # tuned entry from a different payload tiling
     if plan is None:
         base = plan_gemm(m, n, k, a_dtype, layout.dtype,
-                         out_dtype=out_dtype, acc_dtype=acc, beta=beta)
+                         out_dtype=out_dtype, acc_dtype=acc, beta=beta,
+                         extra_mn_inputs=extra_mn)
         plan = plan_with_blocks(
             m, n, k, base.bm, layout.bn, layout.bk, a_dtype, layout.dtype,
-            out_dtype, acc, beta=beta, notes="packed-b",
+            out_dtype, acc, beta=beta, extra_mn_inputs=extra_mn,
+            notes="packed-b",
         )
         if g != 1:
             plan = grouped_plan_from_2d(plan, g)
     if layout.per_tile_scales and plan.acc_dtype != "float32":
-        import dataclasses
         plan = dataclasses.replace(plan, acc_dtype="float32")
     return plan
 
+
+def _resolve_epilogue(activation, alpha, beta, bias, scale, gate, residual):
+    """Build the EpilogueSpec + ordered extras tuple from wrapper kwargs
+    (the shared registry-driven resolution — core/gemm_spec.py)."""
+    return resolve_epilogue(
+        {"gate": gate, "residual": residual},
+        activation=activation, alpha=alpha, beta=beta,
+        has_bias=bias is not None, has_scale=scale is not None,
+    )
+
+
+def mpgemm_pallas_spec(
+    a: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    b_packed: Optional[PackedOperand] = None,
+    c: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    extras: Sequence[jax.Array] = (),
+    spec: GemmSpec,
+    epilogue: EpilogueSpec = EpilogueSpec(),
+    out_dtype=None,
+    plan: Optional[GemmPlan] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Launch ONE spec-described GEMM through the kernel factory.
+
+    The single launch path behind :func:`mpgemm_pallas` and
+    :func:`mpgemm_grouped_pallas` (and the op layer's custom-VJP core):
+    resolves shapes, plan (tuned cache -> analytic fallback, keyed with the
+    epilogue tag so fused and unfused tunings never collide), BlockSpecs,
+    and the kernel body — one accumulator / edge-predication / epilogue
+    implementation for all spec combinations.
+    """
+    grouped = spec.grouped
+    if (b is None) == (b_packed is None):
+        raise ValueError("exactly one of b / b_packed is required")
+    layout = b_packed.layout if b_packed is not None else None
+    # Normalize packed/tile_scaled from the ACTUAL operand, not the caller's
+    # spec: a default-constructed spec over a per-tile-scaled payload must
+    # still stream the scales (silently skipping the dequant would return
+    # wrong numerics with no error).
+    spec = dataclasses.replace(
+        spec, packed=layout is not None,
+        tile_scaled=layout is not None and layout.per_tile_scales)
+    if layout is not None:
+        if grouped and layout.g == 1:
+            raise ValueError("2-D payload: use a non-grouped spec")
+        if not grouped and layout.g != 1:
+            raise ValueError("grouped payload: use a grouped spec")
+    if grouped:
+        if a.ndim != 3 or (b is not None and b.ndim != 3):
+            raise ValueError(
+                f"grouped operands must be rank-3: got a={a.shape}")
+        g = a.shape[0]
+        if layout is not None and layout.g != g:
+            raise ValueError(
+                f"group mismatch: a has {g}, payload {layout.g}")
+        if b is not None and b.shape[0] != g:
+            raise ValueError(f"group mismatch: {a.shape} x {b.shape}")
+        m = a.shape[2] if spec.trans_a else a.shape[1]
+        ka = a.shape[1] if spec.trans_a else a.shape[2]
+    else:
+        g = 1
+        m = a.shape[1] if spec.trans_a else a.shape[0]
+        ka = a.shape[0] if spec.trans_a else a.shape[1]
+    if layout is not None:
+        n, kb = layout.n, layout.k
+    elif grouped:
+        n = b.shape[1] if spec.trans_b else b.shape[2]
+        kb = b.shape[2] if spec.trans_b else b.shape[1]
+    else:
+        n = b.shape[0] if spec.trans_b else b.shape[1]
+        kb = b.shape[1] if spec.trans_b else b.shape[0]
+    if ka != kb:
+        bshape = layout.payload_shape if layout is not None else b.shape
+        raise ValueError(f"contraction mismatch: {a.shape} x {bshape}")
+    k = ka
+
+    # Normalize the epilogue to operand presence (the factory keys ref
+    # unpacking off these flags).
+    epilogue = dataclasses.replace(
+        epilogue, has_bias=bias is not None, has_scale=scale is not None)
+    ep_def = get_epilogue(epilogue.kind)
+    extras = tuple(extras)
+    if len(extras) != len(ep_def.extra_operands):
+        raise ValueError(
+            f"epilogue {epilogue.kind!r} needs operands "
+            f"{ep_def.extra_operands}, got {len(extras)}")
+    if epilogue.beta != 0.0 and c is None:
+        raise ValueError("beta != 0 requires c")
+    n_extra_mn = len(extras)
+
+    # --- plan resolution: explicit > tuned (epilogue-tagged) > analytic ---
+    if plan is not None and layout is not None and (
+            (plan.bn, plan.bk) != (layout.bn, layout.bk)):
+        raise ValueError(
+            f"plan blocks ({plan.bn}, {plan.bk}) incompatible with packed "
+            f"layout ({layout.bn}, {layout.bk})")
+    if plan is None and layout is not None:
+        plan = _packed_plan(m, k, n, layout, a.dtype, out_dtype,
+                            spec.trans_a, epilogue.beta, g=g,
+                            epilogue_tag=epilogue.tag, extra_mn=n_extra_mn)
+    if plan is None:
+        # Closed-loop planning: a tuned plan from the persistent cache wins
+        # over the analytic model (repro.tuning populates it; lazy import
+        # keeps the kernel layer free of a hard tuning dependency).
+        from repro.tuning.plan_cache import lookup_plan
+        plan = lookup_plan(
+            m, n, k, a.dtype, b.dtype, out_dtype,
+            trans_a=spec.trans_a, trans_b=spec.trans_b, beta=epilogue.beta,
+            g=g, epilogue=epilogue.tag,
+        )
+    if plan is None:
+        plan = plan_gemm(
+            m, n, k, a.dtype, b.dtype, out_dtype=out_dtype,
+            beta=epilogue.beta, extra_mn_inputs=n_extra_mn,
+        )
+        if grouped:
+            plan = grouped_plan_from_2d(plan, g)
+    out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
+    acc_dtype = jnp.dtype(plan.acc_dtype)
+    if layout is not None and layout.per_tile_scales:
+        # Per-tile scales accumulate scaled f32 partials — coerce even for
+        # an explicitly supplied plan (mirrors _packed_plan; an int32
+        # accumulator would reject the scaled stores deep inside Pallas).
+        acc_dtype = jnp.dtype(jnp.float32)
+    bm, bn, bk = plan.bm, plan.bn, plan.bk
+    grid = ((g,) if grouped else ()) + (
+        pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+
+    # --- BlockSpecs: grouped specs prepend a size-1 group block dim and a
+    # leading group index to every map -----------------------------------
+    lead = (1,) if grouped else ()
+
+    def _im(f):
+        if grouped:
+            return lambda gg, i, j, kk: (gg,) + f(i, j, kk)
+        return lambda i, j, kk: f(i, j, kk)
+
+    a_spec = (
+        pl.BlockSpec(lead + (bk, bm), _im(lambda i, j, kk: (kk, i)))
+        if spec.trans_a
+        else pl.BlockSpec(lead + (bm, bk), _im(lambda i, j, kk: (i, kk)))
+    )
+    if layout is not None:
+        # Identity tile read: grid step (i, j, kk) fetches payload tile
+        # (kk, j) — one contiguous DMA, the payoff of ahead-of-time packing.
+        b_spec = pl.BlockSpec(lead + (1, 1, bk, bn),
+                              _im(lambda i, j, kk: (kk, j, 0, 0)))
+        inputs = [a, b_packed.payload]
+    else:
+        b_spec = (
+            pl.BlockSpec(lead + (bn, bk), _im(lambda i, j, kk: (j, kk)))
+            if spec.trans_b
+            else pl.BlockSpec(lead + (bk, bn), _im(lambda i, j, kk: (kk, j)))
+        )
+        inputs = [a, b]
+    in_specs = [a_spec, b_spec]
+    if spec.tile_scaled:
+        in_specs.append(pl.BlockSpec(lead + (1, 1),
+                                     _im(lambda i, j, kk: (kk, j))))
+        inputs.append(b_packed.scales)
+    mn_spec = pl.BlockSpec(lead + (bm, bn), _im(lambda i, j, kk: (i, j)))
+    if epilogue.beta != 0.0:
+        in_specs.append(mn_spec)
+        inputs.append(c)
+    if bias is not None:
+        if grouped:
+            bias_in = jnp.broadcast_to(
+                bias.reshape((1, -1) if bias.ndim == 1
+                             else (g, -1))[:, None, :],
+                (g, 1, n))
+        else:
+            bias_in = bias.reshape(1, -1)
+        in_specs.append(pl.BlockSpec(lead + (1, bn),
+                                     _im(lambda i, j, kk: (0, j))))
+        inputs.append(bias_in)
+    if scale is not None:
+        scale1d = jnp.asarray(scale, jnp.float32).reshape(1)
+        in_specs.append(pl.BlockSpec(
+            memory_space=pltpu.SMEM if (pltpu and not interpret) else None))
+        inputs.append(scale1d)
+    for x in extras:
+        in_specs.append(mn_spec)
+        inputs.append(x)
+
+    scratch = [pltpu.VMEM((bm, bn), acc_dtype)] if pltpu else [
+        pl.BlockSpec(memory_space=pl.ANY)
+    ]
+
+    kernel = make_gemm_kernel(
+        spec=spec,
+        epilogue=epilogue,
+        nk=grid[-1],
+        k_rem=plan.k_rem,
+        acc_dtype=acc_dtype,
+    )
+
+    kwargs = {}
+    params = _compiler_params(interpret, grid_rank=len(grid))
+    if params is not None:
+        kwargs["compiler_params"] = params
+
+    out_shape = ((g, m, n) if grouped else (m, n))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=mn_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(*inputs)
+
+
+# --- public wrappers (argument -> spec adapters) -----------------------------
 
 def mpgemm_pallas(
     a: jax.Array,
@@ -216,11 +443,19 @@ def mpgemm_pallas(
     bias: Optional[jax.Array] = None,
     scale: Optional[jax.Array] = None,
     activation: Optional[str] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
     out_dtype=None,
     plan: Optional[GemmPlan] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """out = activation(alpha * op(a) @ op(b) * scale + bias) + beta * c.
+    """out = tail(alpha * op(a) @ op(b) * scale + bias) + beta * c.
+
+    ``tail`` is the registry epilogue: ``activation`` alone selects the
+    linear family; ``gate`` selects the gated fusion (``act(acc) · gate``,
+    the SwiGLU/GeGLU step in one launch); ``residual`` the residual-add
+    fusion (``act(acc) + residual``).  ``gate``/``residual`` are (M, N)
+    operands streamed per output block.
 
     ``b_packed`` replaces ``b`` with a pre-packed operand (repro.packing):
     the kernel reads the (bk, bn)-tiled payload through identity index
@@ -228,339 +463,75 @@ def mpgemm_pallas(
     pack time), and for int8 payloads the per-tile dequant rides the
     accumulation.  Mutually exclusive with ``b``/``trans_b``.
     """
-    if (b is None) == (b_packed is None):
-        raise ValueError("exactly one of b / b_packed is required")
     layout = b_packed.layout if b_packed is not None else None
     if layout is not None and layout.g != 1:
         raise ValueError("grouped payload: use mpgemm_grouped_pallas")
-    m = a.shape[1] if trans_a else a.shape[0]
-    ka = a.shape[0] if trans_a else a.shape[1]
-    if layout is not None:
-        n, kb = layout.n, layout.k
-        trans_b = False  # resolved at pack time
-    else:
-        n = b.shape[0] if trans_b else b.shape[1]
-        kb = b.shape[1] if trans_b else b.shape[0]
-    if ka != kb:
-        bshape = layout.payload_shape if layout is not None else b.shape
-        raise ValueError(f"contraction mismatch: {a.shape} x {bshape}")
-    k = ka
-    if plan is not None and layout is not None and (
-            (plan.bn, plan.bk) != (layout.bn, layout.bk)):
-        raise ValueError(
-            f"plan blocks ({plan.bn}, {plan.bk}) incompatible with packed "
-            f"layout ({layout.bn}, {layout.bk})")
-    if plan is None and layout is not None:
-        plan = _packed_plan(m, k, n, layout, a.dtype, out_dtype,
-                            trans_a, beta)
-    if plan is None:
-        # Closed-loop planning: a tuned plan from the persistent cache wins
-        # over the analytic model (repro.tuning populates it; lazy import
-        # keeps the kernel layer free of a hard tuning dependency).
-        from repro.tuning.plan_cache import lookup_plan
-        plan = lookup_plan(
-            m, n, k, a.dtype, b.dtype, out_dtype,
-            trans_a=trans_a, trans_b=trans_b, beta=beta,
-        )
-    if plan is None:
-        plan = plan_gemm(
-            m, n, k, a.dtype, b.dtype, out_dtype=out_dtype, beta=beta
-        )
-    out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
-    acc_dtype = jnp.dtype(plan.acc_dtype)
-    if layout is not None and layout.per_tile_scales:
-        # Per-tile scales accumulate scaled f32 partials — coerce even for
-        # an explicitly supplied plan (mirrors _packed_plan; an int32
-        # accumulator would reject the scaled stores deep inside Pallas).
-        acc_dtype = jnp.dtype(jnp.float32)
-    bm, bn, bk = plan.bm, plan.bn, plan.bk
-    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
-
-    a_spec = (
-        pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
-        if trans_a
-        else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
-    )
-    if layout is not None:
-        # Identity tile read: grid step (i, j, kk) fetches payload tile
-        # (kk, j) — one contiguous DMA, the payoff of ahead-of-time packing.
-        b_spec = pl.BlockSpec((1, 1, bk, bn), lambda i, j, kk: (kk, j, 0, 0))
-        inputs = [a, b_packed.payload]
-    else:
-        b_spec = (
-            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
-            if trans_b
-            else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
-        )
-        inputs = [a, b]
-    in_specs = [a_spec, b_spec]
-    tile_scaled = layout is not None and layout.per_tile_scales
-    if tile_scaled:
-        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)))
-        inputs.append(b_packed.scales)
-    if beta != 0.0:
-        if c is None:
-            raise ValueError("beta != 0 requires c")
-        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
-        inputs.append(c)
-    if bias is not None:
-        bias2d = bias.reshape(1, -1)
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-        inputs.append(bias2d)
-    if scale is not None:
-        scale1d = jnp.asarray(scale, jnp.float32).reshape(1)
-        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM if (pltpu and not interpret) else None))
-        inputs.append(scale1d)
-
-    scratch = [pltpu.VMEM((bm, bn), acc_dtype)] if pltpu else [
-        pl.BlockSpec(memory_space=pl.ANY)
-    ]
-
-    kernel = functools.partial(
-        mpgemm_kernel,
-        nk=grid[2],
-        k_rem=plan.k_rem,
+    epilogue, extras = _resolve_epilogue(
+        activation, alpha, beta, bias, scale, gate, residual)
+    spec = GemmSpec(
+        grouped=False,
+        packed=layout is not None,
+        tile_scaled=layout is not None and layout.per_tile_scales,
         trans_a=trans_a,
-        trans_b=trans_b,
-        acc_dtype=acc_dtype,
-        alpha=float(alpha),
-        beta=float(beta),
-        has_bias=bias is not None,
-        activation=activation,
-        has_scale=scale is not None,
-        packed_b=layout is not None,
-        tile_scaled=tile_scaled,
+        trans_b=False if layout is not None else trans_b,
     )
-
-    kwargs = {}
-    params = _compiler_params(interpret)
-    if params is not None:
-        kwargs["compiler_params"] = params
-
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=scratch,
+    return mpgemm_pallas_spec(
+        a, b, b_packed=b_packed, c=c, bias=bias, scale=scale, extras=extras,
+        spec=spec, epilogue=epilogue, out_dtype=out_dtype, plan=plan,
         interpret=interpret,
-        **kwargs,
-    )(*inputs)
-
-
-# --- grouped / batched variant -----------------------------------------------
-
-def mpgemm_grouped_kernel(
-    *refs,
-    nk: int,
-    k_rem: int,
-    trans_a: bool,
-    trans_b: bool,
-    acc_dtype,
-    alpha: float,
-    has_bias: bool,
-    activation: Optional[str],
-    has_scale: bool,
-    packed_b: bool = False,
-    tile_scaled: bool = False,
-):
-    """Grid = (G, M/bm, N/bn, K/bk), K innermost ('arbitrary').
-
-    Identical contract to :func:`mpgemm_kernel` per group — the leading
-    grid axis only selects which problem the (bm, bn) accumulator serves.
-    Block refs carry a size-1 group dim; the accumulator scratch does not
-    (it is recycled across groups because K is the only revisiting axis).
-    """
-    idx = 0
-    a_ref = refs[idx]; idx += 1
-    b_ref = refs[idx]; idx += 1
-    ts_ref = refs[idx] if tile_scaled else None
-    idx += 1 if tile_scaled else 0
-    bias_ref = refs[idx] if has_bias else None
-    idx += 1 if has_bias else 0
-    scale_ref = refs[idx] if has_scale else None
-    idx += 1 if has_scale else 0
-    out_ref = refs[idx]; idx += 1
-    acc_ref = refs[idx]
-
-    k = pl.program_id(3)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    a = a_ref[0]
-    b = b_ref[0, 0, 0] if packed_b else b_ref[0]
-    if k_rem:
-        valid = jnp.where(k == nk - 1, k_rem, a.shape[0 if trans_a else 1])
-        a = _mask_contract(a, 0 if trans_a else 1, valid)
-        if not packed_b:
-            b = _mask_contract(b, 1 if trans_b else 0, valid)
-
-    ts = ts_ref[0, 0, 0] if tile_scaled else None
-    _accumulate(acc_ref, a, b, ts, trans_a, trans_b, acc_dtype)
-
-    @pl.when(k == nk - 1)
-    def _epilogue():
-        acc = acc_ref[...]
-        if has_scale:
-            acc = acc.astype(jnp.float32) * scale_ref[0]
-        if alpha != 1.0:
-            acc = acc * jnp.asarray(alpha, acc.dtype)
-        if has_bias:
-            acc = acc + bias_ref[0].astype(acc.dtype)
-        acc = _ACTIVATIONS[activation](acc)
-        out_ref[...] = acc.astype(out_ref.dtype)[None]
+    )
 
 
 def mpgemm_grouped_pallas(
     a: jax.Array,
     b: Optional[jax.Array] = None,
+    c: Optional[jax.Array] = None,
     *,
     b_packed: Optional[PackedOperand] = None,
     trans_a: bool = False,
     trans_b: bool = False,
     alpha: float = 1.0,
+    beta: float = 0.0,
     bias: Optional[jax.Array] = None,
     scale: Optional[jax.Array] = None,
     activation: Optional[str] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
     out_dtype=None,
     plan: Optional[GemmPlan] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """out[g] = activation(alpha * op(a[g]) @ op(b[g]) * scale + bias[g]).
+    """out[g] = tail(alpha * op(a[g]) @ op(b[g]) * scale + bias[g]) + beta*c[g].
 
     ``a``: (G, M, K) — or (G, K, M) under ``trans_a``; ``b``: (G, K, N) —
     or (G, N, K) under ``trans_b``; ``bias``: (G, N) or (N,) broadcast to
-    every group; output (G, M, N).  The G expert/batch problems share one
-    kernel launch with the group as the leading (parallel) grid axis, so
-    small per-expert GEMMs amortize launch and pipeline ramp-up instead of
-    paying them G times — the grouped-GEMM-on-SME pattern (LOHO, Hello
-    SME!) in TPU form.  No beta/C term: no grouped caller accumulates into
-    an existing output (use the 2-D kernel for that).
+    every group; ``gate``/``residual``/``c``: (G, M, N); output (G, M, N).
+    The G expert/batch problems share one kernel launch with the group as
+    the leading (parallel) grid axis, so small per-expert GEMMs amortize
+    launch and pipeline ramp-up instead of paying them G times — the
+    grouped-GEMM-on-SME pattern (LOHO, Hello SME!) in TPU form.  The same
+    registry epilogues as :func:`mpgemm_pallas` apply per group (the
+    spec-driven factory made the grouped beta·C term free).
 
     ``b_packed`` replaces ``b`` with a grouped packed operand (payload
     ``(G, nkb, nnb, bk, bn)``): identity tile reads per group, transpose
     resolved at pack time, per-tile int8 dequant riding the accumulation —
     the pre-packed-expert-weights serving configuration.
     """
-    if (b is None) == (b_packed is None):
-        raise ValueError("exactly one of b / b_packed is required")
     layout = b_packed.layout if b_packed is not None else None
     if layout is not None and layout.g == 1:
         raise ValueError("2-D payload: use mpgemm_pallas")
-    if a.ndim != 3 or (b is not None and b.ndim != 3):
-        raise ValueError(f"grouped operands must be rank-3: got a={a.shape}")
-    g = a.shape[0]
-    if layout is not None and layout.g != g:
-        raise ValueError(f"group mismatch: a has {g}, payload {layout.g}")
-    if b is not None and b.shape[0] != g:
-        raise ValueError(f"group mismatch: {a.shape} x {b.shape}")
-    m = a.shape[2] if trans_a else a.shape[1]
-    ka = a.shape[1] if trans_a else a.shape[2]
-    if layout is not None:
-        n, kb = layout.n, layout.k
-        trans_b = False  # resolved at pack time
-    else:
-        n = b.shape[1] if trans_b else b.shape[2]
-        kb = b.shape[2] if trans_b else b.shape[1]
-    if ka != kb:
-        raise ValueError(f"contraction mismatch: a={a.shape}, k_b={kb}")
-    k = ka
-    if plan is not None and layout is not None and (
-            (plan.bn, plan.bk) != (layout.bn, layout.bk)):
-        raise ValueError(
-            f"plan blocks ({plan.bn}, {plan.bk}) incompatible with packed "
-            f"layout ({layout.bn}, {layout.bk})")
-    if plan is None and layout is not None:
-        plan = _packed_plan(m, k, n, layout, a.dtype, out_dtype,
-                            trans_a, 0.0, g=g)
-    if plan is None:
-        from repro.tuning.plan_cache import lookup_plan
-        plan = lookup_plan(
-            m, n, k, a.dtype, b.dtype, out_dtype,
-            trans_a=trans_a, trans_b=trans_b, g=g,
-        )
-    if plan is None:
-        plan = plan_grouped_gemm(g, m, n, k, a.dtype, b.dtype,
-                                 out_dtype=out_dtype)
-    out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
-    acc_dtype = jnp.dtype(plan.acc_dtype)
-    if layout is not None and layout.per_tile_scales:
-        # Per-tile scales accumulate scaled f32 partials — coerce even for
-        # an explicitly supplied plan (mirrors _packed_plan; an int32
-        # accumulator would reject the scaled stores deep inside Pallas).
-        acc_dtype = jnp.dtype(jnp.float32)
-    bm, bn, bk = plan.bm, plan.bn, plan.bk
-    grid = (g, pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
-
-    a_spec = (
-        pl.BlockSpec((1, bk, bm), lambda gg, i, j, kk: (gg, kk, i))
-        if trans_a
-        else pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk))
-    )
-    if layout is not None:
-        b_spec = pl.BlockSpec((1, 1, 1, bk, bn),
-                              lambda gg, i, j, kk: (gg, kk, j, 0, 0))
-        inputs = [a, b_packed.payload]
-    else:
-        b_spec = (
-            pl.BlockSpec((1, bn, bk), lambda gg, i, j, kk: (gg, j, kk))
-            if trans_b
-            else pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j))
-        )
-        inputs = [a, b]
-    in_specs = [a_spec, b_spec]
-    tile_scaled = layout is not None and layout.per_tile_scales
-    if tile_scaled:
-        in_specs.append(pl.BlockSpec((1, 1, 1),
-                                     lambda gg, i, j, kk: (gg, kk, j)))
-        inputs.append(b_packed.scales)
-    if bias is not None:
-        bias3d = jnp.broadcast_to(
-            bias.reshape((1, -1) if bias.ndim == 1 else (g, -1))[:, None, :],
-            (g, 1, n),
-        )
-        in_specs.append(pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j)))
-        inputs.append(bias3d)
-    if scale is not None:
-        scale1d = jnp.asarray(scale, jnp.float32).reshape(1)
-        in_specs.append(pl.BlockSpec(
-            memory_space=pltpu.SMEM if (pltpu and not interpret) else None))
-        inputs.append(scale1d)
-
-    scratch = [pltpu.VMEM((bm, bn), acc_dtype)] if pltpu else [
-        pl.BlockSpec(memory_space=pl.ANY)
-    ]
-
-    kernel = functools.partial(
-        mpgemm_grouped_kernel,
-        nk=grid[3],
-        k_rem=plan.k_rem,
+    epilogue, extras = _resolve_epilogue(
+        activation, alpha, beta, bias, scale, gate, residual)
+    spec = GemmSpec(
+        grouped=True,
+        packed=layout is not None,
+        tile_scaled=layout is not None and layout.per_tile_scales,
         trans_a=trans_a,
-        trans_b=trans_b,
-        acc_dtype=acc_dtype,
-        alpha=float(alpha),
-        has_bias=bias is not None,
-        activation=activation,
-        has_scale=scale is not None,
-        packed_b=layout is not None,
-        tile_scaled=tile_scaled,
+        trans_b=False if layout is not None else trans_b,
     )
-
-    kwargs = {}
-    params = _compiler_params(interpret, grid_rank=4)
-    if params is not None:
-        kwargs["compiler_params"] = params
-
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
-        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
-        scratch_shapes=scratch,
+    return mpgemm_pallas_spec(
+        a, b, b_packed=b_packed, c=c, bias=bias, scale=scale, extras=extras,
+        spec=spec, epilogue=epilogue, out_dtype=out_dtype, plan=plan,
         interpret=interpret,
-        **kwargs,
-    )(*inputs)
+    )

@@ -6,13 +6,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-_ACTIVATIONS = {
-    None: lambda x: x,
-    "none": lambda x: x,
-    "relu": jax.nn.relu,
-    "gelu": jax.nn.gelu,
-    "silu": jax.nn.silu,
-}
+from repro.core.gemm_spec import apply_epilogue, resolve_epilogue
 
 
 def mpgemm_ref(
@@ -27,26 +21,38 @@ def mpgemm_ref(
     bias=None,
     scale=None,
     activation: Optional[str] = None,
+    gate=None,
+    residual=None,
     out_dtype=None,
     acc_dtype=None,
 ):
-    """Oracle for kernels.mpgemm.mpgemm_pallas."""
+    """Oracle for ``kernels.mpgemm.mpgemm_pallas`` — and, with rank-3
+    operands (leading group dim), for ``mpgemm_grouped_pallas``.
+
+    The epilogue semantics come from the SAME implementation the kernel
+    body uses (``core/gemm_spec.py::apply_epilogue``), so the oracle and
+    the kernel cannot drift; only the matmul itself is re-derived here.
+    """
     if acc_dtype is None:
         acc_dtype = jnp.int32 if jnp.dtype(a.dtype).kind == "i" else jnp.float32
     if out_dtype is None:
         out_dtype = jnp.int32 if jnp.dtype(a.dtype).kind == "i" else a.dtype
-    lhs = a.T if trans_a else a
-    rhs = b.T if trans_b else b
-    acc = jax.lax.dot(lhs, rhs, preferred_element_type=acc_dtype)
-    if scale is not None:
-        acc = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
-    if alpha != 1.0:
-        acc = acc * jnp.asarray(alpha, acc.dtype)
+    lhs = jnp.swapaxes(a, -1, -2) if trans_a else a
+    rhs = jnp.swapaxes(b, -1, -2) if trans_b else b
+    acc = jnp.matmul(lhs, rhs, preferred_element_type=acc_dtype)
     if bias is not None:
-        acc = acc + bias.reshape(1, -1).astype(acc.dtype)
-    acc = _ACTIVATIONS[activation](acc)
-    if beta != 0.0:
-        acc = acc + jnp.asarray(beta, acc.dtype) * c.astype(acc.dtype)
+        n = acc.shape[-1]
+        if acc.ndim == 3:  # grouped: (G, N) per-group or (N,) shared
+            bias = jnp.broadcast_to(
+                bias.reshape((1, -1) if bias.ndim == 1 else
+                             (bias.shape[0], -1))[:, None, :],
+                (acc.shape[0], 1, n))
+        else:
+            bias = bias.reshape(1, -1)
+    ep, extras = resolve_epilogue({"gate": gate, "residual": residual},
+                                  activation=activation, alpha=alpha,
+                                  beta=beta)
+    acc = apply_epilogue(ep, acc, bias=bias, scale=scale, c=c, extras=extras)
     return acc.astype(out_dtype)
 
 

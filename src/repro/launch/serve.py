@@ -4,6 +4,7 @@
         --smoke --requests 6 --policy int8
 """
 import argparse
+import os
 import time
 
 import numpy as np
@@ -30,7 +31,16 @@ def main():
                     help="pack static weights into kernel-native tile "
                          "layouts at load time (repro.packing; cache via "
                          "REPRO_PACK_CACHE)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable the fused gated-activation/residual "
+                         "epilogues (core/gemm_spec.py) — the unfused A/B "
+                         "baseline benchmarks/bench_epilogue.py measures")
     args = ap.parse_args()
+
+    if args.no_fuse:
+        # Read lazily at trace time by models/layers.py via
+        # core.config.fused_epilogues(), so setting it before build works.
+        os.environ["REPRO_FUSED_EPILOGUE"] = "0"
 
     cfg = cb.get(args.arch, smoke=args.smoke)
     model = build_model(cfg, policy=args.policy, remat=False)

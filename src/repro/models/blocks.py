@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import config as gemm_cfg
 from repro.core.gemm import mp_dot, mp_dot_grouped
 from repro.distributed import act
 from repro.models import attention as attn
@@ -46,10 +47,12 @@ def init_norm(cfg, d=None):
     return {"scale": jnp.zeros((d,), jnp.float32)}
 
 
-def _mlp(params, x, cfg, policy):
+def _mlp(params, x, cfg, policy, residual=None):
+    """MLP with the block residual riding the down-projection's epilogue
+    (``residual=`` — models/layers.py); callers pass the pre-norm stream."""
     if cfg.mlp == "gelu":
-        return gelu_mlp(params, x, policy)
-    return swiglu_mlp(params, x, policy)
+        return gelu_mlp(params, x, policy, residual=residual)
+    return swiglu_mlp(params, x, policy, residual=residual)
 
 
 def _init_mlp(key, cfg):
@@ -183,7 +186,8 @@ def dense_fwd(params, x, ctx, *, window=None):
     cfg = ctx["cfg"]
     o, kv = _self_attention(params["attn"], norm(params["ln1"], x, cfg), ctx, window)
     x = x + o
-    x = x + _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"])
+    x = _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"],
+             residual=x)
     cache = None
     if kv is not None:
         cache = _kv_to_ring_cache(kv, ctx["cache_len"] if window is None
@@ -196,7 +200,8 @@ def dense_decode(params, x, cache, ctx):
     cfg = ctx["cfg"]
     o, cache = attn_decode(params["attn"], norm(params["ln1"], x, cfg), cache, ctx)
     x = x + o
-    x = x + _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"])
+    x = _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"],
+             residual=x)
     return x, cache
 
 
@@ -259,7 +264,7 @@ def cross_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
 
 # =============================== MoE ===========================================
 
-def _expert_dot(ebuf, w, policy):
+def _expert_dot(ebuf, w, policy, **fusion):
     """(e, n, d) x (e, d, f) -> (e, n, f) through the grouped MPGEMM op.
 
     One kernel launch for all E experts (group = leading grid axis), under
@@ -270,11 +275,16 @@ def _expert_dot(ebuf, w, policy):
     bf16 on the wire (the mixtral-hillclimb optimization that einsum-based
     dispatch could not express — see EXPERIMENTS.md §Perf).
 
+    ``fusion`` forwards registry-epilogue operands (``activation=``,
+    ``gate=`` — core/gemm_spec.py), which is how the MoE SwiGLU gating
+    rides the gate GEMM's store below.
+
     ``w`` may be a grouped :class:`repro.packing.PackedOperand` — expert
     weights packed once at load time (``pack_params``): mp_dot_grouped
     then reads the pre-tiled per-expert payload with identity index maps
     instead of re-laying the experts out on every launch."""
-    return mp_dot_grouped(ebuf, w, policy=policy, out_dtype=jnp.float32)
+    return mp_dot_grouped(ebuf, w, policy=policy, out_dtype=jnp.float32,
+                          **fusion)
 
 
 def init_moe(key, cfg):
@@ -351,9 +361,15 @@ def moe_mlp(params, x, cfg, policy, capacity_factor: float = 1.25):
     # barrier (inside its custom VJP, where no differentiation rule for the
     # barrier is ever needed).
     ebuf = buf.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
-    h_gate = _expert_dot(ebuf, params["w_gate"], policy)
     h_up = _expert_dot(ebuf, params["w_up"], policy)
-    h = jax.nn.silu(h_gate) * h_up                          # f32 activations
+    if gemm_cfg.fused_epilogues():
+        # Gated epilogue: silu(gate GEMM) · up rides the gate GEMM's
+        # accumulator store — one grouped launch, no elementwise pass.
+        h = _expert_dot(ebuf, params["w_gate"], policy,
+                        activation="silu", gate=h_up)
+    else:
+        h_gate = _expert_dot(ebuf, params["w_gate"], policy)
+        h = jax.nn.silu(h_gate) * h_up                      # f32 activations
     y = _expert_dot(h, params["w_down"], policy)  # (e,n,f) x (e,f,d) -> (e,n,d)
     y = y.reshape(e, b, cap, d).transpose(1, 0, 2, 3)       # (b,e,C,d)
 
@@ -421,7 +437,8 @@ def encdec_fwd(params, x, ctx):
     x = x + o
     o, xkv = _cross_attention(params["xattn"], norm(params["lnx"], x, cfg), ctx)
     x = x + o
-    x = x + _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"])
+    x = _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"],
+             residual=x)
     cache = None
     if kv is not None:
         dt = ctx.get("cache_dtype", jnp.bfloat16)
@@ -438,7 +455,8 @@ def encdec_decode(params, x, cache, ctx):
     o, _ = _cross_attention(params["xattn"], norm(params["lnx"], x, cfg), ctx,
                             kv=(cache["cross"]["k"], cache["cross"]["v"]))
     x = x + o
-    x = x + _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"])
+    x = _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"],
+             residual=x)
     return x, {"self": self_cache, "cross": cache["cross"]}
 
 

@@ -1,6 +1,9 @@
 """Common neural-net layers.  Every matmul routes through ``core.gemm.mp_dot``
 so the paper's multi-precision GEMM technique is the substrate of every
-architecture in the framework.
+architecture in the framework.  MLPs use the registry epilogues
+(core/gemm_spec.py): the SwiGLU gating step and the block residual add ride
+the GEMM's accumulator store instead of running as separate elementwise
+passes (``core.config.fused_epilogues`` toggles, for A/B benchmarks).
 """
 from __future__ import annotations
 
@@ -9,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import config as cfg
 from repro.core.gemm import mp_dot
 
 
@@ -72,17 +76,37 @@ def apply_rope(x, cos, sin, positions=None):
 
 # --- MLPs ---------------------------------------------------------------------
 
-def swiglu_mlp(params, x, policy):
+def swiglu_mlp(params, x, policy, residual=None):
+    """silu(x@w_gate) * (x@w_up) @ w_down [+ residual].
+
+    Fused path: the gating step — gate GEMM, silu, elementwise product —
+    is ONE kernel launch (the ``gated`` registry epilogue riding the gate
+    GEMM's accumulator store), and the block residual rides the down
+    projection's store (``residual`` epilogue).  The unfused path keeps the
+    pre-registry three-GEMMs-plus-elementwise form for A/B benchmarks.
+    """
+    if cfg.fused_epilogues():
+        up = mp_dot(x, params["w_up"], policy=policy)
+        h = mp_dot(x, params["w_gate"], policy=policy,
+                   activation="silu", gate=up)
+        return mp_dot(h, params["w_down"], policy=policy, residual=residual)
     gate = mp_dot(x, params["w_gate"], policy=policy)
     up = mp_dot(x, params["w_up"], policy=policy)
-    return mp_dot(jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up,
-                  params["w_down"], policy=policy)
+    out = mp_dot(jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up,
+                 params["w_down"], policy=policy)
+    return out if residual is None else residual + out
 
 
-def gelu_mlp(params, x, policy):
+def gelu_mlp(params, x, policy, residual=None):
+    if cfg.fused_epilogues():
+        h = mp_dot(x, params["w_up"], params.get("b_up"), policy=policy,
+                   activation="gelu")
+        return mp_dot(h, params["w_down"], params.get("b_down"),
+                      policy=policy, residual=residual)
     h = mp_dot(x, params["w_up"], params.get("b_up"), policy=policy)
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
-    return mp_dot(h, params["w_down"], params.get("b_down"), policy=policy)
+    out = mp_dot(h, params["w_down"], params.get("b_down"), policy=policy)
+    return out if residual is None else residual + out
 
 
 def init_swiglu(key, d: int, f: int, dtype=jnp.float32):

@@ -49,6 +49,7 @@ from repro.core.blocking import (
     plan_with_blocks, vmem_working_set,
 )
 from repro.core.constants import DEFAULT_HW, HardwareSpec
+from repro.core.gemm_spec import EpilogueSpec, get_epilogue
 from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
 from repro.tuning.plan_cache import PlanCache, get_plan_cache, make_key
 
@@ -123,6 +124,36 @@ def _operands(m: int, n: int, k: int, plan: GemmPlan,
     return a, b
 
 
+def _epilogue_kwargs(epilogue: Optional[EpilogueSpec], m: int, n: int,
+                     plan: GemmPlan, seed: int = 0,
+                     g: Optional[int] = None) -> dict:
+    """Kernel kwargs + synthesized operands so the sweep launches the SPEC
+    it will actually serve: fused epilogues stream extra (M, N) operands
+    (gate/residual/C), so measuring the bare GEMM would tune the wrong
+    kernel.  Returns {} for the default (linear, no-op) epilogue."""
+    if epilogue is None:
+        return {}
+    rng = np.random.default_rng(seed + 1)
+    lead = () if g is None else (g,)
+
+    def _mn():
+        return jnp.asarray(rng.standard_normal(lead + (m, n)),
+                           plan.out_dtype)
+
+    kw = {"activation": epilogue.activation, "alpha": epilogue.alpha}
+    for name in get_epilogue(epilogue.kind).extra_operands:
+        kw[name] = _mn()
+    if epilogue.beta != 0.0:
+        kw["beta"] = epilogue.beta
+        kw["c"] = _mn()
+    if epilogue.has_bias:
+        rngb = np.random.default_rng(seed + 2)
+        bias = jnp.asarray(rngb.standard_normal((n,)), plan.out_dtype)
+        kw["bias"] = (jnp.broadcast_to(bias[None], (g, n))
+                      if g is not None else bias)
+    return kw
+
+
 def _time_best(run, iters: int, warmup: int) -> float:
     """Best-of-``iters`` wall microseconds for ``run()`` (post-warmup)."""
     for _ in range(warmup):
@@ -146,8 +177,13 @@ def measure_plan(
     iters: int = 3,
     warmup: int = 1,
     hw: HardwareSpec = DEFAULT_HW,
+    epilogue_kwargs: Optional[dict] = None,
 ) -> Measurement:
-    """Time ``mpgemm_pallas`` under one forced plan (best-of-``iters``)."""
+    """Time ``mpgemm_pallas`` under one forced plan (best-of-``iters``).
+
+    ``epilogue_kwargs`` (from :func:`_epilogue_kwargs`) makes the timed
+    launch carry the fused epilogue the tuned plan will serve.
+    """
     mode = _resolve_mode(mode)
     modeled = _modeled_us(plan, hw)
     if mode == "modeled":
@@ -159,6 +195,7 @@ def measure_plan(
             a, b, trans_a=trans_a, trans_b=trans_b,
             out_dtype=plan.out_dtype, plan=plan,
             interpret=(mode == "interpret"),
+            **(epilogue_kwargs or {}),
         )
 
     return Measurement(plan=plan, mode=mode,
@@ -175,6 +212,7 @@ def candidate_plans(
     out_dtype=None,
     *,
     beta: float = 0.0,
+    extra_mn_inputs: int = 0,
     hw: HardwareSpec = DEFAULT_HW,
     radius: int = 1,
     max_candidates: int = 24,
@@ -187,10 +225,11 @@ def candidate_plans(
     (paper eq (1)), deduplicated after clamping, and capped at
     ``max_candidates`` nearest-to-seed points.  The analytic plan itself is
     always candidate 0, which makes ``tune_gemm``'s speedup >= 1 by
-    construction.
+    construction.  ``extra_mn_inputs`` counts fused-epilogue (M, N)
+    operands so the traffic/working-set pricing matches the launched spec.
     """
     seed_plan = plan_gemm(m, n, k, a_dtype, b_dtype, out_dtype,
-                          beta=beta, hw=hw)
+                          beta=beta, extra_mn_inputs=extra_mn_inputs, hw=hw)
     bm_axis, bn_axis, bk_axis = enumerate_block_lattice(
         m, n, k, a_dtype, b_dtype, hw=hw
     )
@@ -213,7 +252,9 @@ def candidate_plans(
     budget = int(hw.vmem_bytes * vmem_budget_frac)
     for bm, bn, bk in combos:
         cand = plan_with_blocks(m, n, k, bm, bn, bk, a_dtype, b_dtype,
-                                out_dtype, beta=beta, hw=hw, notes="tuned")
+                                out_dtype, beta=beta,
+                                extra_mn_inputs=extra_mn_inputs, hw=hw,
+                                notes="tuned")
         blocks = (cand.bm, cand.bn, cand.bk)
         if blocks in seen or cand.vmem_bytes > budget:
             continue
@@ -240,6 +281,7 @@ def sweep(
     trans_a: bool = False,
     trans_b: bool = False,
     beta: float = 0.0,
+    epilogue: Optional[EpilogueSpec] = None,
     mode: str = "auto",
     radius: int = 1,
     max_candidates: int = 24,
@@ -250,6 +292,9 @@ def sweep(
 ) -> List[Measurement]:
     """Measure every candidate plan for one GEMM instance.
 
+    ``epilogue`` makes the sweep launch the fused spec it will actually
+    serve (extra gated/residual/C operands synthesized per candidate).
+
     Runnable on CPU (uses ``mode="modeled"`` resolution by default there)::
 
         >>> from repro.tuning import sweep
@@ -258,8 +303,12 @@ def sweep(
         >>> sorted(ms, key=lambda m: m.wall_us)[0].blocks  # doctest: +SKIP
         (256, 256, 512)
     """
+    n_extra = len(epilogue.extra_operands) if epilogue is not None else 0
+    if epilogue is not None and epilogue.beta != 0.0:
+        beta = epilogue.beta
     plans = candidate_plans(
-        m, n, k, a_dtype, b_dtype, out_dtype, beta=beta, hw=hw,
+        m, n, k, a_dtype, b_dtype, out_dtype, beta=beta,
+        extra_mn_inputs=n_extra, hw=hw,
         radius=radius, max_candidates=max_candidates,
     )
     resolved = _resolve_mode(mode)
@@ -267,9 +316,11 @@ def sweep(
         return [measure_plan(None, None, p, mode="modeled", hw=hw)
                 for p in plans]
     a, b = _operands(m, n, k, plans[0], trans_a, trans_b, seed)
+    ep_kw = _epilogue_kwargs(epilogue, m, n, plans[0], seed)
     return [
         measure_plan(a, b, p, trans_a=trans_a, trans_b=trans_b,
-                     mode=resolved, iters=iters, warmup=warmup, hw=hw)
+                     mode=resolved, iters=iters, warmup=warmup, hw=hw,
+                     epilogue_kwargs=ep_kw)
         for p in plans
     ]
 
@@ -359,6 +410,7 @@ def tune_gemm(
     trans_a: bool = False,
     trans_b: bool = False,
     beta: float = 0.0,
+    epilogue: Optional[EpilogueSpec] = None,
     mode: str = "auto",
     radius: int = 1,
     max_candidates: int = 24,
@@ -370,6 +422,11 @@ def tune_gemm(
     seed: int = 0,
 ) -> TuneResult:
     """Sweep, pick the measured winner, persist it to the plan cache.
+
+    ``epilogue`` tunes THE spec the op layer will launch (the sweep carries
+    the fused operands) and persists under the epilogue-tagged key
+    (``make_key(..., epilogue=...)``) so fused and unfused tunings never
+    collide.
 
     ``cache=None`` uses the process-global cache, so the very next
     ``mp_dot`` on this shape consumes the tuned plan — plans resolve at
@@ -395,12 +452,15 @@ def tune_gemm(
     """
     measurements = sweep(
         m, n, k, a_dtype, b_dtype, out_dtype,
-        trans_a=trans_a, trans_b=trans_b, beta=beta, mode=mode,
-        radius=radius, max_candidates=max_candidates,
+        trans_a=trans_a, trans_b=trans_b, beta=beta, epilogue=epilogue,
+        mode=mode, radius=radius, max_candidates=max_candidates,
         iters=iters, warmup=warmup, hw=hw, seed=seed,
     )
+    if epilogue is not None and epilogue.beta != 0.0:
+        beta = epilogue.beta
     key = make_key(m, n, k, a_dtype, b_dtype, out_dtype,
-                   trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw)
+                   trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw,
+                   epilogue=epilogue.tag if epilogue is not None else "")
     return _persist_best(key, measurements, cache, save)
 
 
@@ -417,6 +477,7 @@ def measure_grouped_plan(
     iters: int = 3,
     warmup: int = 1,
     hw: HardwareSpec = DEFAULT_HW,
+    epilogue_kwargs: Optional[dict] = None,
 ) -> Measurement:
     """Time ``mpgemm_grouped_pallas`` under one forced plan.
 
@@ -435,6 +496,7 @@ def measure_grouped_plan(
             a, b, trans_a=trans_a, trans_b=trans_b,
             out_dtype=plan.out_dtype, plan=plan,
             interpret=(mode == "interpret"),
+            **(epilogue_kwargs or {}),
         )
 
     return Measurement(plan=plan, mode=mode,
@@ -453,6 +515,7 @@ def tune_grouped_gemm(
     *,
     trans_a: bool = False,
     trans_b: bool = False,
+    epilogue: Optional[EpilogueSpec] = None,
     mode: str = "auto",
     radius: int = 1,
     max_candidates: int = 24,
@@ -467,9 +530,11 @@ def tune_grouped_gemm(
 
     Candidates are the 2-D lattice neighborhood lifted per-group (the group
     axis adds grid steps, not working set, so the candidate space is the
-    same), measured through the grouped kernel, and persisted under the
-    grouped cache key (``g…`` prefix) that
-    ``mp_dot_grouped`` / ``mpgemm_grouped_pallas`` read back.
+    same), measured through the grouped kernel launch — carrying
+    ``epilogue``'s fused operands when given (e.g. the MoE gated-SwiGLU
+    spec) — and persisted under the grouped cache key (``g…`` prefix, plus
+    the epilogue tag) that ``mp_dot_grouped`` / ``mpgemm_grouped_pallas``
+    read back.
 
     Runnable on CPU::
 
@@ -480,10 +545,13 @@ def tune_grouped_gemm(
         >>> r.best.plan.g
         4
     """
+    n_extra = len(epilogue.extra_operands) if epilogue is not None else 0
+    ep_beta = epilogue.beta if epilogue is not None else 0.0
     plans = [
         grouped_plan_from_2d(p, g)
         for p in candidate_plans(
             m, n, k, a_dtype, b_dtype, out_dtype, hw=hw,
+            beta=ep_beta, extra_mn_inputs=n_extra,
             radius=radius, max_candidates=max_candidates,
         )
     ]
@@ -495,12 +563,14 @@ def tune_grouped_gemm(
         ]
     else:
         a, b = _operands(m, n, k, plans[0], trans_a, trans_b, seed, g=g)
+        ep_kw = _epilogue_kwargs(epilogue, m, n, plans[0], seed, g=g)
         measurements = [
             measure_grouped_plan(a, b, p, trans_a=trans_a, trans_b=trans_b,
                                  mode=resolved, iters=iters, warmup=warmup,
-                                 hw=hw)
+                                 hw=hw, epilogue_kwargs=ep_kw)
             for p in plans
         ]
     key = make_key(m, n, k, a_dtype, b_dtype, out_dtype,
-                   trans_a=trans_a, trans_b=trans_b, hw=hw, g=g)
+                   trans_a=trans_a, trans_b=trans_b, beta=ep_beta, hw=hw,
+                   g=g, epilogue=epilogue.tag if epilogue is not None else "")
     return _persist_best(key, measurements, cache, save, extra_meta={"g": g})

@@ -84,6 +84,7 @@ def make_key(
     hw: HardwareSpec = DEFAULT_HW,
     g: int = 1,
     layout: str = "",
+    epilogue: str = "",
 ) -> str:
     """Canonical cache key for one logical GEMM instance.
 
@@ -97,15 +98,22 @@ def make_key(
     optimum than the strided on-the-fly path, so packed and unpacked
     tunings must never collide.  Appended as a suffix only when set, so
     default (unpacked) keys stay byte-identical to the existing schema.
+
+    ``epilogue`` tags a non-linear fused epilogue
+    (``core/gemm_spec.py::EpilogueSpec.tag``, e.g. ``gated-silu``): fused
+    epilogues stream extra (M, N) operands, which changes the measured
+    optimum, so fused and unfused tunings must never collide either.  The
+    linear family tags as ``""``, keeping pre-registry keys byte-stable.
     """
     a_dtype, b_dtype, out_dtype, _ = _resolve_dtypes(a_dtype, b_dtype, out_dtype)
     group = f"g{g}|" if g != 1 else ""
     lay = f"|lay={layout}" if layout else ""
+    ep = f"|ep={epilogue}" if epilogue else ""
     return (
         f"{group}m{m}n{n}k{k}"
         f"|a={a_dtype}|b={b_dtype}|out={out_dtype}"
         f"|ta={int(trans_a)}|tb={int(trans_b)}|beta={int(beta != 0.0)}"
-        f"|hw={hw.name}{lay}"
+        f"|hw={hw.name}{lay}{ep}"
     )
 
 
@@ -294,13 +302,15 @@ def lookup_plan(
     hw: HardwareSpec = DEFAULT_HW,
     g: int = 1,
     layout: str = "",
+    epilogue: str = "",
 ) -> Optional[GemmPlan]:
     """Tuned plan for this GEMM instance, or None (miss / cache disabled).
 
-    This is the single read path used by both ``core/gemm.py`` (the
-    mp_dot / mp_dot_grouped layer) and ``kernels/mpgemm.py`` (direct kernel
-    callers).  ``g > 1`` selects the grouped-instance namespace; ``layout``
-    the packed-operand namespace (see :func:`make_key`).
+    This is the single read path behind the spec-driven kernel launch
+    (``kernels/mpgemm.py::mpgemm_pallas_spec``), through which every
+    ``mp_dot`` / ``mp_dot_grouped`` flows.  ``g > 1`` selects the
+    grouped-instance namespace; ``layout`` the packed-operand namespace;
+    ``epilogue`` the fused-epilogue namespace (see :func:`make_key`).
     """
     cache = get_plan_cache()
     if cache is None:
@@ -308,5 +318,5 @@ def lookup_plan(
     return cache.get(make_key(
         m, n, k, a_dtype, b_dtype, out_dtype,
         trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw, g=g,
-        layout=layout,
+        layout=layout, epilogue=epilogue,
     ))

@@ -1,0 +1,450 @@
+"""GemmSpec / EpilogueSpec registry: kernel-vs-oracle parity and grad
+parity for the fused epilogues (gated activation, residual add) across the
+spec matrix (2-D / grouped) x policies x backends, plus registry/key
+plumbing."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import config as cfg
+from repro.core.gemm import mp_dot, mp_dot_grouped
+from repro.core.gemm_spec import (
+    ACTIVATIONS, EpilogueSpec, GemmSpec, apply_epilogue, epilogue_kinds,
+    get_epilogue, register_epilogue,
+)
+from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
+from repro.kernels.ref import mpgemm_ref
+from repro.tuning import make_key
+
+G, M, K, N = 3, 24, 40, 16
+
+
+@pytest.fixture
+def ops(rng):
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    e = jnp.asarray(rng.standard_normal((M, N)), "float32")
+    return x, w, e
+
+
+@pytest.fixture
+def gops(rng):
+    x = jnp.asarray(rng.standard_normal((G, M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((G, K, N)), "float32")
+    e = jnp.asarray(rng.standard_normal((G, M, N)), "float32")
+    return x, w, e
+
+
+def _fused_ref(x, w, ep_kind, act, extra):
+    """Explicit jnp formula (independent of apply_epilogue) for the op."""
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    a = ACTIVATIONS[act](acc)
+    if ep_kind == "gated":
+        return a * extra.astype(jnp.float32)
+    if ep_kind == "residual":
+        return a + extra.astype(jnp.float32)
+    return a
+
+
+# --- registry plumbing -------------------------------------------------------
+
+def test_builtin_kinds_registered():
+    assert set(epilogue_kinds()) >= {"linear", "gated", "residual"}
+    assert get_epilogue("gated").extra_operands == ("gate",)
+    assert get_epilogue("residual").extra_operands == ("residual",)
+
+
+def test_unknown_kind_and_activation_raise():
+    with pytest.raises(ValueError, match="unknown epilogue kind"):
+        EpilogueSpec(kind="nope")
+    with pytest.raises(ValueError, match="unknown activation"):
+        EpilogueSpec(activation="tanhh")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_epilogue("linear", bwd=lambda *a: None,
+                          needs_pre=lambda ep: False)(lambda *a: None)
+
+
+def test_gemm_spec_validation():
+    with pytest.raises(ValueError, match="tile_scaled"):
+        GemmSpec(tile_scaled=True)
+    with pytest.raises(ValueError, match="ragged"):
+        GemmSpec(ragged=True)
+    with pytest.raises(ValueError, match="pack time"):
+        GemmSpec(packed=True, trans_b=True)
+    assert GemmSpec(out_dtype=jnp.float32).out_dtype == "float32"
+
+
+def test_epilogue_tag_namespaces_cache_keys():
+    """Fused and unfused tunings must never collide; linear keys stay
+    byte-identical to the pre-registry schema."""
+    assert EpilogueSpec().tag == ""
+    assert EpilogueSpec(kind="linear", activation="relu").tag == ""
+    assert EpilogueSpec(kind="gated", activation="silu").tag == "gated-silu"
+    assert EpilogueSpec(kind="residual").tag == "residual"
+    base = make_key(M, N, K, "float32")
+    assert make_key(M, N, K, "float32", epilogue="") == base
+    fused = make_key(M, N, K, "float32", epilogue="gated-silu")
+    assert fused != base and fused.endswith("|ep=gated-silu")
+    assert fused != make_key(M, N, K, "float32", epilogue="residual")
+
+
+def test_op_level_operand_validation(ops):
+    x, w, e = ops
+    with pytest.raises(ValueError, match="requires operand"):
+        mp_dot(x, w, epilogue=EpilogueSpec(kind="gated", activation="silu"))
+    with pytest.raises(ValueError, match="not consumed"):
+        mp_dot(x, w, gate=e, residual=e)
+
+
+# --- kernel vs oracle parity (spec x epilogue matrix) ------------------------
+
+@pytest.mark.parametrize("kind,act", [
+    ("linear", "relu"), ("gated", "silu"), ("gated", None),
+    ("residual", None), ("residual", "gelu"),
+])
+@pytest.mark.parametrize("m,n,k", [(M, N, K), (100, 70, 50)])
+def test_kernel_matches_oracle_2d(rng, kind, act, m, n, k):
+    a = jnp.asarray(rng.standard_normal((m, k)), "float32")
+    b = jnp.asarray(rng.standard_normal((k, n)), "float32")
+    e = jnp.asarray(rng.standard_normal((m, n)), "float32")
+    kw = {"gate": e} if kind == "gated" else (
+        {"residual": e} if kind == "residual" else {})
+    out = mpgemm_pallas(a, b, activation=act, interpret=True, **kw)
+    ref = mpgemm_ref(a, b, activation=act, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("kind,act", [
+    ("linear", "relu"), ("gated", "silu"), ("residual", None),
+])
+def test_kernel_matches_oracle_grouped(rng, kind, act):
+    a = jnp.asarray(rng.standard_normal((G, M, K)), "float32")
+    b = jnp.asarray(rng.standard_normal((G, K, N)), "float32")
+    e = jnp.asarray(rng.standard_normal((G, M, N)), "float32")
+    kw = {"gate": e} if kind == "gated" else (
+        {"residual": e} if kind == "residual" else {})
+    out = mpgemm_grouped_pallas(a, b, activation=act, interpret=True, **kw)
+    ref = mpgemm_ref(a, b, activation=act, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_grouped_beta_c_epilogue(rng):
+    """beta·C on the grouped path — new capability of the unified factory
+    (the hand-cloned grouped kernel had no C term)."""
+    a = jnp.asarray(rng.standard_normal((G, M, K)), "float32")
+    b = jnp.asarray(rng.standard_normal((G, K, N)), "float32")
+    c = jnp.asarray(rng.standard_normal((G, M, N)), "float32")
+    out = mpgemm_grouped_pallas(a, b, c, beta=0.5, alpha=2.0,
+                                activation="relu", interpret=True)
+    ref = mpgemm_ref(a, b, c, beta=0.5, alpha=2.0, activation="relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_apply_epilogue_is_shared_semantics(rng):
+    """The oracle and the kernel both consume apply_epilogue — spot-check
+    the composed order of operations directly."""
+    acc = jnp.asarray(rng.standard_normal((4, 8)), "float32")
+    bias = jnp.asarray(rng.standard_normal((1, 8)), "float32")
+    g = jnp.asarray(rng.standard_normal((4, 8)), "float32")
+    ep = EpilogueSpec(kind="gated", activation="silu", alpha=0.5)
+    got = apply_epilogue(ep, acc, bias=bias, extras=(g,))
+    want = jax.nn.silu(0.5 * acc + bias) * g
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# --- op-level forward parity (spec x epilogue x policy x backend) ------------
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("policy", ["fp32", "bf16", "int8"])
+@pytest.mark.parametrize("kind,act", [("gated", "silu"), ("residual", None),
+                                      ("linear", "gelu")])
+def test_mp_dot_fused_forward(ops, policy, backend, kind, act):
+    x, w, e = ops
+    kw = {"gate": e} if kind == "gated" else (
+        {"residual": e} if kind == "residual" else {})
+    y = mp_dot(x, w, policy=policy, backend=backend, activation=act, **kw)
+    ref = np.asarray(_fused_ref(x, w, kind, act, e))
+    got = np.asarray(y, np.float32)
+    if policy == "fp32":
+        np.testing.assert_allclose(got, ref, atol=1e-5)
+    elif policy == "bf16":
+        np.testing.assert_allclose(got, ref, atol=0.25)
+    else:  # int8 dynamic per-tensor: bounded relative error
+        assert np.abs(got - ref).max() < 0.08 * max(np.abs(ref).max(), 1.0)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("policy", ["fp32", "bf16", "int8"])
+@pytest.mark.parametrize("kind,act", [("gated", "silu"), ("residual", None)])
+def test_mp_dot_grouped_fused_forward(gops, policy, backend, kind, act):
+    x, w, e = gops
+    kw = {"gate": e} if kind == "gated" else {"residual": e}
+    y = mp_dot_grouped(x, w, policy=policy, backend=backend,
+                       activation=act, out_dtype=jnp.float32, **kw)
+    ref = np.asarray(_fused_ref(x, w, kind, act, e))
+    got = np.asarray(y, np.float32)
+    if policy == "fp32":
+        np.testing.assert_allclose(got, ref, atol=1e-5)
+    elif policy == "bf16":
+        np.testing.assert_allclose(got, ref, atol=0.25)
+    else:
+        assert np.abs(got - ref).max() < 0.08 * max(np.abs(ref).max(), 1.0)
+
+
+@pytest.mark.parametrize("kind", ["gated", "residual"])
+def test_fused_backends_agree(ops, kind):
+    x, w, e = ops
+    kw = {"gate": e} if kind == "gated" else {"residual": e}
+    a = mp_dot(x, w, policy="bf16", backend="xla", activation="silu", **kw)
+    b = mp_dot(x, w, policy="bf16", backend="interpret", activation="silu",
+               **kw)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=1e-5, rtol=1e-4)
+
+
+# --- grad parity for the new fusions -----------------------------------------
+
+@pytest.mark.parametrize("policy,tol", [("fp32", 1e-4), ("bf16", 0.35)])
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_gated_grad_parity_2d(ops, policy, backend, tol):
+    x, w, e = ops
+
+    def fused(x, w, e):
+        return jnp.sum(mp_dot(x, w, policy=policy, backend=backend,
+                              activation="silu", gate=e,
+                              out_dtype=jnp.float32) ** 2)
+
+    def unfused(x, w, e):
+        cd = jnp.float32 if policy == "fp32" else jnp.bfloat16
+        h = jnp.matmul(x.astype(cd), w.astype(cd),
+                       preferred_element_type=jnp.float32)
+        return jnp.sum((jax.nn.silu(h) * e) ** 2)
+
+    g1 = jax.grad(fused, (0, 1, 2))(x, w, e)
+    g2 = jax.grad(unfused, (0, 1, 2))(x, w, e)
+    scale = max(float(jnp.abs(g2[0]).max()), 1.0)
+    for a, b in zip(g1, g2):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol * scale)
+
+
+@pytest.mark.parametrize("act", [None, "gelu"])
+def test_residual_grad_parity_2d(ops, act):
+    x, w, e = ops
+
+    def fused(x, w, e):
+        return jnp.sum(mp_dot(x, w, policy="fp32", activation=act,
+                              residual=e) ** 2)
+
+    def unfused(x, w, e):
+        return jnp.sum((_fused_ref(x, w, "residual", act, e)) ** 2)
+
+    g1 = jax.grad(fused, (0, 1, 2))(x, w, e)
+    g2 = jax.grad(unfused, (0, 1, 2))(x, w, e)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-4)
+
+
+def test_gated_grad_parity_grouped(gops):
+    x, w, e = gops
+
+    def fused(x, w, e):
+        return jnp.sum(mp_dot_grouped(x, w, policy="fp32",
+                                      activation="silu", gate=e,
+                                      out_dtype=jnp.float32) ** 2)
+
+    def unfused(x, w, e):
+        h = jnp.einsum("gmk,gkn->gmn", x, w,
+                       preferred_element_type=jnp.float32)
+        return jnp.sum((jax.nn.silu(h) * e) ** 2)
+
+    g1 = jax.grad(fused, (0, 1, 2))(x, w, e)
+    g2 = jax.grad(unfused, (0, 1, 2))(x, w, e)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-4)
+
+
+def test_gated_with_bias_grad(ops):
+    """dbias must flow through the activation derivative (Σ dz, not Σ dy)."""
+    x, w, e = ops
+    bias = jnp.asarray(np.linspace(-1, 1, N), "float32")
+
+    def fused(b):
+        return jnp.sum(mp_dot(x, w, b, policy="fp32", activation="silu",
+                              gate=e) ** 2)
+
+    def unfused(b):
+        h = jnp.matmul(x, w) + b[None, :]
+        return jnp.sum((jax.nn.silu(h) * e) ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(fused)(bias)),
+                               np.asarray(jax.grad(unfused)(bias)),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_ragged_gated_masks_grads(gops):
+    """Fused epilogue composes with ragged group_sizes masking."""
+    x, w, e = gops
+    sizes = jnp.asarray([M, 7, 0], jnp.int32)
+    dx = jax.grad(lambda x: jnp.sum(mp_dot_grouped(
+        x, w, policy="fp32", activation="silu", gate=e,
+        group_sizes=sizes) ** 2))(x)
+    assert np.all(np.asarray(dx[2]) == 0.0)
+    assert np.all(np.asarray(dx[1, 7:]) == 0.0)
+    assert float(jnp.abs(dx[0]).sum()) > 0
+
+
+def test_alpha_epilogue_grad_chains(ops):
+    """y = alpha·(x@w): grads must carry the alpha factor (regression —
+    the backward GEMMs once dropped it), while dbias (added after alpha)
+    must not."""
+    x, w, _ = ops
+    bias = jnp.zeros((N,), jnp.float32)
+    ep = EpilogueSpec(alpha=2.0)
+
+    def fused(x, w, b):
+        return jnp.sum(mp_dot(x, w, b, policy="fp32", epilogue=ep) ** 2)
+
+    def reff(x, w, b):
+        return jnp.sum((2.0 * (x @ w) + b[None, :]) ** 2)
+
+    g1 = jax.grad(fused, (0, 1, 2))(x, w, bias)
+    g2 = jax.grad(reff, (0, 1, 2))(x, w, bias)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-5)
+
+
+# --- spec-aware tuning -------------------------------------------------------
+
+def test_tune_gemm_epilogue_namespace_and_consumption(rng):
+    """tune_gemm(epilogue=…) sweeps the fused spec (interpret launch carries
+    the gate operand) and persists under the epilogue-tagged key, which the
+    fused mp_dot launch then consumes — and the unfused key stays absent."""
+    from repro.tuning import PlanCache, set_plan_cache, tune_gemm
+    ep = EpilogueSpec(kind="gated", activation="silu")
+    cache = PlanCache(None)
+    res = tune_gemm(M, N, K, "float32", mode="interpret", max_candidates=3,
+                    iters=1, epilogue=ep, cache=cache)
+    assert res.key.endswith("|ep=gated-silu")
+    assert res.key in cache
+    assert make_key(M, N, K, "float32") not in cache
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    e = jnp.asarray(rng.standard_normal((M, N)), "float32")
+    baseline = mp_dot(x, w, policy="fp32", backend="interpret",
+                      activation="silu", gate=e)
+    prev = set_plan_cache(cache)
+    try:
+        tuned = mp_dot(x, w, policy="fp32", backend="interpret",
+                       activation="silu", gate=e)
+    finally:
+        set_plan_cache(prev)
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(baseline),
+                               atol=1e-6)
+
+
+def test_tune_grouped_gemm_epilogue_beta_in_key():
+    """A grouped tuning measured WITH a beta·C stream must persist under
+    the beta+epilogue-tagged key the launch reads back (regression — the
+    grouped tuner once keyed beta-carrying sweeps as beta=0)."""
+    from repro.tuning import PlanCache, tune_grouped_gemm
+    ep = EpilogueSpec(kind="residual", beta=1.0)
+    cache = PlanCache(None)
+    res = tune_grouped_gemm(G, M, N, K, "float32", mode="interpret",
+                            max_candidates=2, iters=1, epilogue=ep,
+                            cache=cache)
+    assert "|beta=1|" in res.key and res.key.endswith("|ep=residual")
+    assert res.key.startswith(f"g{G}|")
+    assert res.key in cache
+    assert make_key(M, N, K, "float32", g=G) not in cache
+
+
+def test_extra_mn_inputs_priced_in_plan():
+    """Fused operands enlarge the modeled working set and traffic (paper
+    eqs (1)/(3) extended), so the planner can see the fused launch."""
+    from repro.core.blocking import plan_with_blocks
+    p0 = plan_with_blocks(256, 256, 256, 128, 128, 128, "float32")
+    p1 = plan_with_blocks(256, 256, 256, 128, 128, 128, "float32",
+                          extra_mn_inputs=1)
+    assert p1.vmem_bytes > p0.vmem_bytes
+    assert p1.hbm_bytes == p0.hbm_bytes + 256 * 256 * 4
+
+
+# --- model-layer integration -------------------------------------------------
+
+def test_swiglu_fused_matches_unfused(rng):
+    """The fused SwiGLU MLP (layers.py) must match the unfused composition
+    within compute-dtype rounding, forward and backward."""
+    from repro.models.layers import init_swiglu, swiglu_mlp
+    params = init_swiglu(jax.random.PRNGKey(0), 32, 64)
+    x = jnp.asarray(rng.standard_normal((4, 8, 32)), "float32")
+    r = jnp.asarray(rng.standard_normal((4, 8, 32)), "float32")
+
+    def run(fused, params, x):
+        with cfg.fused_epilogue(fused):
+            return swiglu_mlp(params, x, "fp32", residual=r)
+
+    yf = run(True, params, x)
+    yu = run(False, params, x)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yu),
+                               atol=1e-4, rtol=1e-4)
+    gf = jax.grad(lambda p: jnp.sum(run(True, p, x) ** 2))(params)
+    gu = jax.grad(lambda p: jnp.sum(run(False, p, x) ** 2))(params)
+    for name in params:
+        np.testing.assert_allclose(np.asarray(gf[name]),
+                                   np.asarray(gu[name]),
+                                   atol=1e-2, rtol=1e-3)
+
+
+def test_spec_launch_normalizes_tile_scaled(rng):
+    """mpgemm_pallas_spec must derive packed/tile_scaled from the ACTUAL
+    operand: a default-constructed spec over a per-tile-scaled int8 payload
+    still streams the scales (regression — a bare GemmSpec(packed=True)
+    once skipped the dequant silently)."""
+    from repro.core.blocking import plan_gemm
+    from repro.kernels.mpgemm import mpgemm_pallas_spec
+    from repro.packing import pack_operand
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    wp = pack_operand(w, plan_gemm(M, N, K, "float32", "int8"),
+                      dtype="int8", backend="xla")
+    assert wp.layout.per_tile_scales
+    y = mpgemm_pallas_spec(x, b_packed=wp, spec=GemmSpec(packed=True),
+                           out_dtype="float32", interpret=True)
+    ref = jnp.matmul(x, w)
+    # per-tile int8 quantization: close to the dense product, not garbage
+    err = float(jnp.abs(y - ref).max())
+    assert err < 0.05 * float(jnp.abs(ref).max()), err
+
+
+def test_packed_weight_with_fused_epilogue(rng):
+    """Registry epilogues compose with the packed-B path (spec matrix
+    corner: packed x gated)."""
+    from repro.core.blocking import plan_gemm
+    from repro.packing import pack_operand
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    e = jnp.asarray(rng.standard_normal((M, N)), "float32")
+    packed = pack_operand(w, plan_gemm(M, N, K, "float32"),
+                          backend="interpret")
+    with cfg.gemm_backend("interpret"):
+        y = mp_dot(x, packed, policy="fp32", activation="silu", gate=e)
+    ref = _fused_ref(x, w, "gated", "silu", e)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
