@@ -13,7 +13,8 @@ def main() -> None:
     from benchmarks import (
         bench_autotune, bench_breakdown, bench_epilogue,
         bench_gemm_workloads, bench_irregular, bench_loads,
-        bench_mixed_precision, bench_packing, bench_tiles, roofline_report,
+        bench_mixed_precision, bench_packing, bench_sparse, bench_tiles,
+        roofline_report,
     )
     bench_tiles.run()                      # paper Fig. 2
     bench_loads.run()                      # paper Fig. 3
@@ -32,6 +33,9 @@ def main() -> None:
     bench_epilogue.run()                   # beyond-paper: fused epilogues
     bench_epilogue.run_trace_gate()
     bench_epilogue.run_wall_sanity()
+    bench_sparse.run()                     # beyond-paper: tile-sparse MPGEMM
+    bench_sparse.run_trace_gate()
+    bench_sparse.run_wall()
 
 
 if __name__ == "__main__":

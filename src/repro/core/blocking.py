@@ -169,7 +169,7 @@ def enumerate_block_lattice(
 def modeled_traffic_bytes(
     m: int, n: int, k: int, bm: int, bn: int,
     a_bytes: int, b_bytes: int, c_bytes: int, beta: float = 0.0,
-    extra_mn_inputs: int = 0,
+    extra_mn_inputs: int = 0, density: float = 1.0,
 ) -> int:
     """HBM traffic for a K-innermost revisiting grid (C resident in VMEM).
 
@@ -177,13 +177,20 @@ def modeled_traffic_bytes(
     written once (and read once iff beta != 0).  ``extra_mn_inputs`` counts
     additional (M, N)-shaped epilogue operands (gated-activation / residual
     fusions — core/gemm_spec.py), each read exactly once.
+
+    ``density`` < 1 prices a TILE-SPARSE B operand (repro.sparse): only the
+    stored fraction of B tiles is ever DMA'd, and the A-side re-reads
+    shrink the same way (the sparse walk skips the A block of a pruned
+    (kk, j) tile too — grid steps, not just payload bytes, scale with
+    density).  The epilogue/C terms do NOT scale: every output tile is
+    still visited (anchor visits) and written exactly once.
     """
     n_col_blocks = math.ceil(n / bn)
     n_row_blocks = math.ceil(m / bm)
     c_factor = 2 if beta else 1
-    return (
-        m * k * a_bytes * n_col_blocks
-        + k * n * b_bytes * n_row_blocks
+    return int(
+        m * k * a_bytes * n_col_blocks * density
+        + k * n * b_bytes * n_row_blocks * density
         + m * n * c_bytes * (c_factor + extra_mn_inputs)
     )
 
@@ -223,6 +230,7 @@ def plan_gemm(
     *,
     beta: float = 0.0,
     extra_mn_inputs: int = 0,
+    density: float = 1.0,
     hw: HardwareSpec = DEFAULT_HW,
     vmem_budget_frac: float = 0.75,
     max_block: int = 2048,
@@ -233,6 +241,11 @@ def plan_gemm(
     (here the MXU's 128), derive the reduction block from the granularity
     constraint (paper: TLB eq (2); here: DMA row width), then maximize CMR
     subject to the capacity constraint (paper: 8 MB L2; here: VMEM budget).
+
+    ``density`` < 1 prices a tile-sparse B operand (repro.sparse): skipped
+    tiles cost neither HBM bytes (A and B streams scale with density) nor
+    MACs (FLOPs scale the same way), so the CMR objective — and therefore
+    the chosen blocks — reflects the sparse launch the plan will serve.
     """
     a_dtype, b_dtype, out_dtype, acc_dtype = _resolve_dtypes(
         a_dtype, b_dtype, out_dtype, acc_dtype
@@ -263,8 +276,9 @@ def plan_gemm(
                 if ws > budget:
                     continue
                 traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob,
-                                                beta, extra_mn_inputs)
-                flops = 2 * m * n * k
+                                                beta, extra_mn_inputs,
+                                                density)
+                flops = int(2 * m * n * k * density)
                 cmr = flops / max(1, traffic)
                 # Secondary objectives: fewer grid steps, squarer C block.
                 grid_steps = (
@@ -280,7 +294,7 @@ def plan_gemm(
         bm, bn, bk = best[1][:3]
     return plan_with_blocks(
         m, n, k, bm, bn, bk, a_dtype, b_dtype, out_dtype, acc_dtype,
-        beta=beta, extra_mn_inputs=extra_mn_inputs, hw=hw,
+        beta=beta, extra_mn_inputs=extra_mn_inputs, density=density, hw=hw,
     )
 
 
@@ -298,6 +312,7 @@ def plan_with_blocks(
     *,
     beta: float = 0.0,
     extra_mn_inputs: int = 0,
+    density: float = 1.0,
     hw: HardwareSpec = DEFAULT_HW,
     notes: str = "",
 ) -> GemmPlan:
@@ -324,9 +339,12 @@ def plan_with_blocks(
     ws = vmem_working_set(bm, bn, bk, ab, bb, ob, accb, beta,
                           extra_mn_inputs)
     traffic = modeled_traffic_bytes(m, n, k, bm, bn, ab, bb, ob, beta,
-                                    extra_mn_inputs)
+                                    extra_mn_inputs, density)
+    flops = int(2 * m * n * k * density)
     grid = (math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk))
     auto_notes = [notes] if notes else []
+    if density < 1.0:
+        auto_notes.append(f"density={density:.2f}")
     if m % bm or n % bn:
         auto_notes.append("edge-mn")
     k_rem = k % bk
@@ -336,8 +354,8 @@ def plan_with_blocks(
         m=m, n=n, k=k, bm=bm, bn=bn, bk=bk,
         a_dtype=a_dtype, b_dtype=b_dtype,
         out_dtype=out_dtype, acc_dtype=acc_dtype,
-        grid=grid, vmem_bytes=ws, hbm_bytes=traffic, flops=2 * m * n * k,
-        cmr=2 * m * n * k / max(1, traffic), k_rem=k_rem,
+        grid=grid, vmem_bytes=ws, hbm_bytes=traffic, flops=flops,
+        cmr=flops / max(1, traffic), k_rem=k_rem,
         notes=" ".join(auto_notes),
     )
 

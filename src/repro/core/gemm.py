@@ -44,6 +44,7 @@ from repro.core.gemm_spec import (
 from repro.core.policy import PrecisionPolicy, get_policy, quantize_per_tensor
 from repro.kernels.mpgemm import mpgemm_pallas_spec
 from repro.packing.layout import PackedOperand, is_packed
+from repro.sparse.layout import TileSparseOperand, is_sparse
 
 _LINEAR = EpilogueSpec()
 
@@ -104,11 +105,33 @@ def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
     kernel_backend = backend in ("pallas", "interpret")
     interp = backend == "interpret"
 
-    def _kernel(a, b, wp, scale):
+    def _kernel(a, b, wp, scale, ws=None):
         return mpgemm_pallas_spec(
-            a, b, b_packed=wp, bias=bias, scale=scale, extras=extras,
-            spec=spec, epilogue=epilogue, out_dtype=out_dtype,
-            interpret=interp)
+            a, b, b_packed=wp, b_sparse=ws, bias=bias, scale=scale,
+            extras=extras, spec=spec, epilogue=epilogue,
+            out_dtype=out_dtype, interpret=interp)
+
+    if is_sparse(w):
+        # Tile-sparse B: kernel backends walk only the stored tiles (the
+        # sparse launch path); the policy logic mirrors the packed branch
+        # — the payload IS the weight-side storage, so only the x side
+        # ever needs a per-call cast/quantize.
+        layout = w.layout
+        if kernel_backend and not (policy.quantized
+                                   and layout.dtype != "int8"):
+            if policy.quantized:
+                xq, sx = quantize_per_tensor(x)
+                return _kernel(xq, None, None, sx, w)
+            xc = x.astype(jnp.dtype(policy.compute_dtype))
+            if layout.dtype != "int8":
+                w = w.astype(policy.compute_dtype)
+            return _kernel(xc, None, None, None, w)
+        # XLA fallback — or a float payload under the dynamic-int8 policy:
+        # densify (zeros at pruned tiles) and reuse the dense-path logic.
+        from repro.sparse.sparsify import densify_operand
+        w = densify_operand(w)
+        spec = dataclasses.replace(spec, sparse=False, tile_scaled=False,
+                                   trans_b=False)
 
     if is_packed(w):
         layout = w.layout
@@ -187,6 +210,26 @@ def _packed_weight_cotangent(wp: PackedOperand, dw_dense) -> PackedOperand:
     return PackedOperand(payload_ct, None, layout)
 
 
+def _sparse_weight_cotangent(ws: TileSparseOperand,
+                             dw_dense) -> TileSparseOperand:
+    """Cotangent pytree for a tile-sparse weight primal.
+
+    The defining property of the sparse op's VJP: the dense gradient is
+    MASKED to the stored tiles — pruned tiles are structural zeros with no
+    tangent space, so training under a fixed pattern can never resurrect
+    them (and the trailing anchor zero tile stays a constant: zero
+    cotangent).  int8 payloads are frozen via float0, exactly as packed.
+    """
+    from repro.sparse.sparsify import payload_cotangent
+    layout = ws.layout
+    if layout.per_tile_scales:
+        return TileSparseOperand(
+            np.zeros(ws.payload.shape, jax.dtypes.float0),
+            jnp.zeros_like(ws.scales), layout)
+    return TileSparseOperand(payload_cotangent(dw_dense, layout), None,
+                             layout)
+
+
 # --- the one differentiable core ---------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
@@ -230,10 +273,18 @@ def _gemm_bwd(spec: GemmSpec, epilogue: EpilogueSpec, policy_name, backend,
     grouped = spec.grouped
 
     packed = is_packed(w)
+    sparse = is_sparse(w)
     if packed:
         from repro.packing.pack import unpack_operand
         kb = backend if backend in ("pallas", "interpret") else None
         w_dense = unpack_operand(w, backend=kb)  # (k,n)/(g,k,n), trans resolved
+        w_trans = False
+    elif sparse:
+        # Densify once (zeros at pruned tiles): backward contracts over N,
+        # for which the dense on-the-fly-transpose path exists; the weight
+        # cotangent is then masked back to the stored tiles.
+        from repro.sparse.sparsify import densify_operand
+        w_dense = densify_operand(w)
         w_trans = False
     else:
         w_dense = w
@@ -242,8 +293,8 @@ def _gemm_bwd(spec: GemmSpec, epilogue: EpilogueSpec, policy_name, backend,
     z = None
     if epilogue_needs_pre(epilogue):
         zspec = dataclasses.replace(
-            spec, packed=False, tile_scaled=False, trans_b=w_trans,
-            ragged=False, out_dtype="float32")
+            spec, packed=False, sparse=False, tile_scaled=False,
+            trans_b=w_trans, ragged=False, out_dtype="float32")
         z = _apply_gemm(x, w_dense, bias, (), zspec,
                         EpilogueSpec(alpha=epilogue.alpha), bwd_policy,
                         backend)
@@ -259,24 +310,27 @@ def _gemm_bwd(spec: GemmSpec, epilogue: EpilogueSpec, policy_name, backend,
     # dx = dzg @ op(w)^T : if w stored (k,n) -> dzg(m,n) x w(k,n)^T == trans_b=True
     #                      if w stored (n,k) (trans_w) -> plain dzg @ w.
     dx_spec = dataclasses.replace(
-        spec, packed=False, tile_scaled=False, trans_a=False,
+        spec, packed=False, sparse=False, tile_scaled=False, trans_a=False,
         trans_b=not w_trans, ragged=False, out_dtype=str(x.dtype))
     dx = _apply_gemm(dzg, w_dense, None, (), dx_spec, _LINEAR, bwd_policy,
                      backend, acc_dtype=bwd_acc)
 
     # dw: (k,n) = x^T @ dzg ; transposed storage: (n,k) = dzg^T @ x.
-    if packed and w.layout.per_tile_scales:
+    if (packed or sparse) and w.layout.per_tile_scales:
         dw_dense = None  # int8 payload: no tangent space, frozen weight
     else:
         dw_spec = dataclasses.replace(
-            spec, packed=False, tile_scaled=False, trans_a=True,
-            trans_b=False, ragged=False, out_dtype=str(w_dense.dtype))
+            spec, packed=False, sparse=False, tile_scaled=False,
+            trans_a=True, trans_b=False, ragged=False,
+            out_dtype=str(w_dense.dtype))
         dw_dense = (_apply_gemm(dzg, x, None, (), dw_spec, _LINEAR,
                                 bwd_policy, backend, acc_dtype=bwd_acc)
                     if w_trans else
                     _apply_gemm(x, dzg, None, (), dw_spec, _LINEAR,
                                 bwd_policy, backend, acc_dtype=bwd_acc))
-    dw = _packed_weight_cotangent(w, dw_dense) if packed else dw_dense
+    dw = (_packed_weight_cotangent(w, dw_dense) if packed
+          else _sparse_weight_cotangent(w, dw_dense) if sparse
+          else dw_dense)
 
     # f32 accumulation for the reduction, cast back to the primal's dtype
     # (custom-VJP cotangents must match primal dtypes).
@@ -328,9 +382,10 @@ def _dequant_static(w, policy):
 
 def mp_dot(
     x: jax.Array,
-    w: jax.Array,
+    w: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     *,
+    b_sparse: Optional[TileSparseOperand] = None,
     policy="bf16",
     trans_w: bool = False,
     backend: Optional[str] = None,
@@ -358,7 +413,20 @@ def mp_dot(
     — no per-call cast/dequant/transposition — and ``trans_w`` must match
     the orientation recorded at pack time (the transpose is already
     resolved inside the payload).
+
+    ``w`` may also be a :class:`repro.sparse.TileSparseOperand` — or passed
+    explicitly as ``b_sparse=`` with ``w`` omitted: the forward then visits
+    ONLY the stored tiles (grid = stored-tile schedule, scalar-prefetched
+    index maps), the custom VJP masks the weight cotangent to the stored
+    tiles (pruned tiles have no tangent space — a fixed pattern can never
+    be resurrected by training), and ``dx`` contracts against the
+    densified weight.  Composes with every registry epilogue and precision
+    policy; int8 payloads are frozen via float0 like packed int8.
     """
+    if (w is None) == (b_sparse is None):
+        raise ValueError("exactly one of w / b_sparse is required")
+    if b_sparse is not None:
+        w = b_sparse
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
     lead = x.shape[:-1]
@@ -369,16 +437,18 @@ def mp_dot(
                                        epilogue_operands)
     extras = tuple(e.reshape(-1, e.shape[-1]) for e in extras)
     out_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
-    if is_packed(w):
+    if is_packed(w) or is_sparse(w):
+        kind = "PackedOperand" if is_packed(w) else "TileSparseOperand"
         if w.layout.g != 1:
-            raise ValueError("grouped PackedOperand: use mp_dot_grouped")
+            raise ValueError(f"grouped {kind}: use mp_dot_grouped")
         if trans_w != w.layout.trans_w:
             raise ValueError(
                 f"trans_w={trans_w} but the operand was packed with "
                 f"trans_w={w.layout.trans_w} (transposition is resolved at "
                 f"pack time)")
         n = w.layout.n
-        spec = GemmSpec(packed=True, tile_scaled=w.layout.per_tile_scales,
+        spec = GemmSpec(packed=is_packed(w), sparse=is_sparse(w),
+                        tile_scaled=w.layout.per_tile_scales,
                         out_dtype=out_s)
     else:
         w = _dequant_static(w, policy)
@@ -393,9 +463,10 @@ def mp_dot(
 
 def mp_dot_grouped(
     x: jax.Array,
-    w: jax.Array,
+    w: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     *,
+    b_sparse: Optional[TileSparseOperand] = None,
     policy="bf16",
     trans_w: bool = False,
     backend: Optional[str] = None,
@@ -425,15 +496,26 @@ def mp_dot_grouped(
     ``out_dtype`` overrides the policy's output dtype — MoE keeps f32
     activations between the expert GEMMs and the combine, matching the
     accumulator precision.
+
+    ``w`` may be a grouped :class:`repro.packing.PackedOperand` or a
+    grouped :class:`repro.sparse.TileSparseOperand` (also accepted as the
+    explicit ``b_sparse=`` kwarg): the sparse form walks only the union
+    of every group's stored tiles — per-expert tile pruning shrinks the
+    launch grid itself — with the same masked-cotangent VJP as
+    :func:`mp_dot`.
     """
     if x.ndim != 3:
         raise ValueError(f"mp_dot_grouped expects x of rank 3, got {x.shape}")
+    if (w is None) == (b_sparse is None):
+        raise ValueError("exactly one of w / b_sparse is required")
+    if b_sparse is not None:
+        w = b_sparse
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
     epilogue, extras = _build_epilogue(epilogue, activation, gate, residual,
                                        epilogue_operands)
     out_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
-    if is_packed(w):
+    if is_packed(w) or is_sparse(w):
         if w.layout.g != x.shape[0]:
             raise ValueError(
                 f"group mismatch: x has {x.shape[0]}, payload {w.layout.g}")
@@ -441,7 +523,8 @@ def mp_dot_grouped(
             raise ValueError(
                 f"trans_w={trans_w} but the operand was packed with "
                 f"trans_w={w.layout.trans_w}")
-        spec = GemmSpec(grouped=True, packed=True,
+        spec = GemmSpec(grouped=True, packed=is_packed(w),
+                        sparse=is_sparse(w),
                         tile_scaled=w.layout.per_tile_scales,
                         ragged=group_sizes is not None, out_dtype=out_s)
     else:

@@ -172,6 +172,7 @@ class GemmSpec:
 
     grouped: bool = False
     packed: bool = False
+    sparse: bool = False
     tile_scaled: bool = False
     trans_a: bool = False
     trans_b: bool = False
@@ -179,13 +180,16 @@ class GemmSpec:
     out_dtype: Optional[str] = None
 
     def __post_init__(self):
-        if self.tile_scaled and not self.packed:
-            raise ValueError("tile_scaled implies a packed operand")
+        if self.tile_scaled and not (self.packed or self.sparse):
+            raise ValueError(
+                "tile_scaled implies a packed or tile-sparse operand")
+        if self.packed and self.sparse:
+            raise ValueError("packed and sparse B are mutually exclusive")
         if self.ragged and not self.grouped:
             raise ValueError("ragged grouping requires grouped=True")
-        if self.packed and self.trans_b:
+        if (self.packed or self.sparse) and self.trans_b:
             raise ValueError(
-                "packed B has its transpose resolved at pack time")
+                "packed/sparse B has its transpose resolved at pack time")
         if self.out_dtype is not None:
             object.__setattr__(self, "out_dtype",
                                str(jnp.dtype(self.out_dtype)))

@@ -47,6 +47,7 @@ from repro.core.gemm_spec import (
     EpilogueSpec, GemmSpec, apply_epilogue, get_epilogue, resolve_epilogue,
 )
 from repro.packing.layout import PackedOperand
+from repro.sparse.layout import TileSparseOperand, build_schedule
 
 
 def _mask_contract(x, axis: int, valid):
@@ -100,6 +101,16 @@ def make_gemm_kernel(*, spec: GemmSpec, epilogue: EpilogueSpec, nk: int,
     *epilogue-extras, out, acc-scratch.  Grouped block refs carry a size-1
     leading group dim; the accumulator scratch does not (it is recycled
     across groups because K is the only revisiting axis).
+
+    **Tile-sparse specs** (``spec.sparse``) swap the dense K axis for a
+    walk over the operand's stored-tile schedule: grid = (M/bm,
+    schedule_len), the scalar-prefetched schedule arrays (kk, jj, slot,
+    first, last[, gg]) lead the ref list, and the accumulator
+    initializes/stores on the schedule's per-column first/last flags
+    instead of ``kk == 0`` / ``kk == nk - 1`` — zero tiles are never
+    visited.  ``nk`` is then the dense k-tile count (for K-tail
+    predication via the prefetched ``kk``), and the grid never prepends a
+    group axis (grouping is folded into the schedule).
     """
     ep_def = get_epilogue(epilogue.kind)
     grouped = spec.grouped
@@ -109,6 +120,57 @@ def make_gemm_kernel(*, spec: GemmSpec, epilogue: EpilogueSpec, nk: int,
     def _read(ref, extra_lead: int = 0):
         lead = n_lead + extra_lead
         return ref[(0,) * lead] if lead else ref[...]
+
+    def sparse_kernel(*refs):
+        refs = list(refs)
+        kk_ref = refs.pop(0)
+        refs.pop(0)  # jj: consumed by the index maps only
+        refs.pop(0)  # slot: consumed by the index maps only
+        first_ref = refs.pop(0)
+        last_ref = refs.pop(0)
+        if grouped:
+            refs.pop(0)  # gg: consumed by the index maps only
+        a_ref = refs.pop(0)
+        b_ref = refs.pop(0)
+        ts_ref = refs.pop(0) if spec.tile_scaled else None
+        c_ref = refs.pop(0) if epilogue.beta != 0.0 else None
+        bias_ref = refs.pop(0) if epilogue.has_bias else None
+        scale_ref = refs.pop(0) if epilogue.has_scale else None
+        extra_refs = [refs.pop(0) for _ in ep_def.extra_operands]
+        out_ref = refs.pop(0)
+        acc_ref = refs.pop(0)
+
+        t = pl.program_id(1)
+
+        @pl.when(first_ref[t] == 1)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a = _read(a_ref)
+        b = b_ref[0]  # payload tile (1, bk, bn) -> (bk, bn)
+        if k_rem:
+            # The K-tail tile can appear ANYWHERE in the schedule; the
+            # prefetched kk identifies it.  Payload tiles were zero-padded
+            # at sparsify time, so only A needs the predicate.
+            valid = jnp.where(kk_ref[t] == nk - 1, k_rem,
+                              a.shape[0 if spec.trans_a else 1])
+            a = _mask_contract(a, 0 if spec.trans_a else 1, valid)
+        ts = ts_ref[0, 0] if spec.tile_scaled else None
+        _accumulate(acc_ref, a, b, ts, spec.trans_a, False, acc_dtype)
+
+        @pl.when(last_ref[t] == 1)
+        def _epilogue():
+            out = apply_epilogue(
+                epilogue, acc_ref[...],
+                bias=_read(bias_ref) if bias_ref is not None else None,
+                scale=scale_ref[0] if scale_ref is not None else None,
+                c=_read(c_ref) if c_ref is not None else None,
+                extras=tuple(_read(r) for r in extra_refs),
+            ).astype(out_ref.dtype)
+            out_ref[...] = out[None] if grouped else out
+
+    if spec.sparse:
+        return sparse_kernel
 
     def kernel(*refs):
         refs = list(refs)
@@ -177,38 +239,63 @@ def _compiler_params(interpret: bool, grid_rank: int = 3):
         return None
 
 
-def _packed_plan(m: int, k: int, n: int, layout, a_dtype, out_dtype,
-                 trans_a: bool, beta: float, g: int = 1,
+def _layout_plan(m: int, k: int, n: int, layout, a_dtype, out_dtype,
+                 trans_a: bool, beta: float, *, sparse: bool, g: int = 1,
                  epilogue_tag: str = "", extra_mn: int = 0) -> GemmPlan:
-    """Resolve a plan for a packed-B GEMM: tuned (packed-layout namespace)
-    if its blocks agree with the payload layout, else the analytic solve
-    with (bn, bk) pinned to the layout — the payload's tiling IS the block
-    decision, only bm stays free.  Per-tile-scaled payloads force an f32
-    accumulator (scales vary per K step, so int32 accumulation across
-    blocks is no longer exact)."""
+    """Resolve a plan for a layout-pinned B operand (packed OR tile-sparse).
+
+    ONE resolver for both pre-laid-out forms: tuned plan from the layout's
+    namespace (``make_key(layout=tag)`` for packed, ``make_key(sparsity=
+    tag)`` for sparse) if its blocks agree with the payload layout, else
+    the analytic solve with (bn, bk) pinned to the layout — the payload's
+    tiling IS the block decision, only bm stays free.  Sparse layouts
+    additionally DENSITY-PRICE the analytic traffic/FLOP model (skipped
+    tiles cost neither B bytes nor MACs — core/blocking.py ``density=``).
+    Per-tile-scaled payloads force an f32 accumulator (scales vary per K
+    step, so int32 accumulation across blocks is no longer exact)."""
     from repro.tuning.plan_cache import lookup_plan
     acc = "float32" if layout.per_tile_scales else None
+    density = layout.density if sparse else 1.0
+    namespace = {"sparsity": layout.tag} if sparse else {"layout": layout.tag}
     plan = lookup_plan(
         m, n, k, a_dtype, layout.dtype, out_dtype,
-        trans_a=trans_a, trans_b=False, beta=beta, g=g, layout=layout.tag,
-        epilogue=epilogue_tag,
+        trans_a=trans_a, trans_b=False, beta=beta, g=g,
+        epilogue=epilogue_tag, **namespace,
     )
     if plan is not None and (plan.bn, plan.bk) != (layout.bn, layout.bk):
         plan = None  # tuned entry from a different payload tiling
     if plan is None:
         base = plan_gemm(m, n, k, a_dtype, layout.dtype,
                          out_dtype=out_dtype, acc_dtype=acc, beta=beta,
-                         extra_mn_inputs=extra_mn)
+                         extra_mn_inputs=extra_mn, density=density)
         plan = plan_with_blocks(
             m, n, k, base.bm, layout.bn, layout.bk, a_dtype, layout.dtype,
             out_dtype, acc, beta=beta, extra_mn_inputs=extra_mn,
-            notes="packed-b",
+            density=density, notes="tile-sparse" if sparse else "packed-b",
         )
         if g != 1:
             plan = grouped_plan_from_2d(plan, g)
     if layout.per_tile_scales and plan.acc_dtype != "float32":
         plan = dataclasses.replace(plan, acc_dtype="float32")
     return plan
+
+
+def _bias_input(bias, grouped: bool, g: int, n: int):
+    """Normalize a bias operand for the kernel's (1, bn) block reads:
+    (N,)/(G, N) -> (1, N) or broadcast (G, 1, N) — shared by the dense and
+    sparse launch paths."""
+    if grouped:
+        return jnp.broadcast_to(
+            bias.reshape((1, -1) if bias.ndim == 1 else (g, -1))[:, None, :],
+            (g, 1, n))
+    return bias.reshape(1, -1)
+
+
+def _scale_spec_and_input(scale, interpret: bool):
+    """The dynamic-quant per-tensor scale rides SMEM (1-elem f32)."""
+    spec = pl.BlockSpec(
+        memory_space=pltpu.SMEM if (pltpu and not interpret) else None)
+    return spec, jnp.asarray(scale, jnp.float32).reshape(1)
 
 
 def _resolve_epilogue(activation, alpha, beta, bias, scale, gate, residual):
@@ -221,11 +308,117 @@ def _resolve_epilogue(activation, alpha, beta, bias, scale, gate, residual):
     )
 
 
+def _launch_sparse(a, b_sparse: TileSparseOperand, *, c, bias, scale, extras,
+                   spec: GemmSpec, epilogue: EpilogueSpec, plan: GemmPlan,
+                   out_dtype, acc_dtype, m: int, n: int, g: int,
+                   interpret: bool):
+    """Launch the tile-sparse walk: grid (M/bm, schedule_len).
+
+    The dense K axis is replaced by the operand's stored-tile schedule;
+    every BlockSpec index map reads the scalar-prefetched schedule arrays
+    (kk = A-side k-tile, jj = output column, slot = payload tile, gg =
+    group), so each grid step DMAs exactly one stored tile — zero tiles
+    appear in neither the grid nor the DMA stream.  Grouped operands fold
+    the group axis into the schedule (the grid stays rank 2); empty output
+    columns get one anchor visit of the shared zero payload tile so their
+    epilogue (bias/activation/residual/beta·C) still runs.
+    """
+    if pltpu is None:  # pragma: no cover - CPU jaxlibs ship pltpu
+        raise NotImplementedError(
+            "tile-sparse launches need pallas.tpu (PrefetchScalarGridSpec)")
+    layout = b_sparse.layout
+    grouped = spec.grouped
+    sched = build_schedule(layout)
+    t_len = layout.schedule_len
+    bm, bn, bk = plan.bm, layout.bn, layout.bk
+    grid = (pl.cdiv(m, bm), t_len)
+    lead = (1,) if grouped else ()
+    n_sp = 6 if grouped else 5  # kk, jj, slot, first, last [, gg]
+
+    def _sim(f):
+        """Index map over (i, t) + the scalar-prefetch refs; ``f`` gets
+        (i, t, kk, jj, slot, gg)."""
+        if grouped:
+            return lambda i, t, kk, jj, slot, fr, la, gg: \
+                f(i, t, kk, jj, slot, gg)
+        return lambda i, t, kk, jj, slot, fr, la: \
+            f(i, t, kk, jj, slot, None)
+
+    def _lead(gg, t):
+        return (gg[t],) if grouped else ()
+
+    a_spec = (
+        pl.BlockSpec(lead + (bk, bm),
+                     _sim(lambda i, t, kk, jj, slot, gg:
+                          _lead(gg, t) + (kk[t], i)))
+        if spec.trans_a
+        else pl.BlockSpec(lead + (bm, bk),
+                          _sim(lambda i, t, kk, jj, slot, gg:
+                               _lead(gg, t) + (i, kk[t])))
+    )
+    b_spec = pl.BlockSpec((1, bk, bn),
+                          _sim(lambda i, t, kk, jj, slot, gg:
+                               (slot[t], 0, 0)))
+    in_specs = [a_spec, b_spec]
+    inputs = [a, b_sparse.payload]
+    if spec.tile_scaled:
+        in_specs.append(pl.BlockSpec(
+            (1, 1), _sim(lambda i, t, kk, jj, slot, gg: (slot[t], 0))))
+        inputs.append(b_sparse.scales)
+    mn_spec = pl.BlockSpec(
+        lead + (bm, bn),
+        _sim(lambda i, t, kk, jj, slot, gg: _lead(gg, t) + (i, jj[t])))
+    if epilogue.beta != 0.0:
+        in_specs.append(mn_spec)
+        inputs.append(c)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec(
+            lead + (1, bn),
+            _sim(lambda i, t, kk, jj, slot, gg: _lead(gg, t) + (0, jj[t]))))
+        inputs.append(_bias_input(bias, grouped, g, n))
+    if scale is not None:
+        sspec, scale1d = _scale_spec_and_input(scale, interpret)
+        in_specs.append(sspec)
+        inputs.append(scale1d)
+    for x in extras:
+        in_specs.append(mn_spec)
+        inputs.append(x)
+
+    kernel = make_gemm_kernel(
+        spec=spec, epilogue=epilogue, nk=layout.nkb, k_rem=plan.k_rem,
+        acc_dtype=acc_dtype,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_sp,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=mn_spec,
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+    )
+    kwargs = {}
+    params = _compiler_params(interpret, grid_rank=len(grid))
+    if params is not None:
+        kwargs["compiler_params"] = params
+    sp_args = [jnp.asarray(x) for x in
+               (sched.kk, sched.jj, sched.slot, sched.first, sched.last)]
+    if grouped:
+        sp_args.append(jnp.asarray(sched.gg))
+    out_shape = ((g, m, n) if grouped else (m, n))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
+        interpret=interpret,
+        **kwargs,
+    )(*sp_args, *inputs)
+
+
 def mpgemm_pallas_spec(
     a: jax.Array,
     b: Optional[jax.Array] = None,
     *,
     b_packed: Optional[PackedOperand] = None,
+    b_sparse: Optional[TileSparseOperand] = None,
     c: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     scale: Optional[jax.Array] = None,
@@ -243,32 +436,38 @@ def mpgemm_pallas_spec(
     resolves shapes, plan (tuned cache -> analytic fallback, keyed with the
     epilogue tag so fused and unfused tunings never collide), BlockSpecs,
     and the kernel body — one accumulator / edge-predication / epilogue
-    implementation for all spec combinations.
+    implementation for all spec combinations.  ``b_sparse`` selects the
+    tile-sparse walk: the grid's K axis is replaced by the operand's
+    stored-tile schedule (scalar-prefetched index maps), so pruned tiles
+    are never DMA'd or multiplied.
     """
     grouped = spec.grouped
-    if (b is None) == (b_packed is None):
-        raise ValueError("exactly one of b / b_packed is required")
+    if sum(x is not None for x in (b, b_packed, b_sparse)) != 1:
+        raise ValueError("exactly one of b / b_packed / b_sparse is required")
     layout = b_packed.layout if b_packed is not None else None
-    # Normalize packed/tile_scaled from the ACTUAL operand, not the caller's
-    # spec: a default-constructed spec over a per-tile-scaled payload must
-    # still stream the scales (silently skipping the dequant would return
-    # wrong numerics with no error).
+    slayout = b_sparse.layout if b_sparse is not None else None
+    # Normalize packed/sparse/tile_scaled from the ACTUAL operand, not the
+    # caller's spec: a default-constructed spec over a per-tile-scaled
+    # payload must still stream the scales (silently skipping the dequant
+    # would return wrong numerics with no error).
     spec = dataclasses.replace(
-        spec, packed=layout is not None,
-        tile_scaled=layout is not None and layout.per_tile_scales)
-    if layout is not None:
-        if grouped and layout.g == 1:
+        spec, packed=layout is not None, sparse=slayout is not None,
+        tile_scaled=(layout is not None and layout.per_tile_scales)
+        or (slayout is not None and slayout.per_tile_scales))
+    b_layout = layout if layout is not None else slayout
+    if b_layout is not None:
+        if grouped and b_layout.g == 1:
             raise ValueError("2-D payload: use a non-grouped spec")
-        if not grouped and layout.g != 1:
+        if not grouped and b_layout.g != 1:
             raise ValueError("grouped payload: use a grouped spec")
     if grouped:
         if a.ndim != 3 or (b is not None and b.ndim != 3):
             raise ValueError(
                 f"grouped operands must be rank-3: got a={a.shape}")
         g = a.shape[0]
-        if layout is not None and layout.g != g:
+        if b_layout is not None and b_layout.g != g:
             raise ValueError(
-                f"group mismatch: a has {g}, payload {layout.g}")
+                f"group mismatch: a has {g}, payload {b_layout.g}")
         if b is not None and b.shape[0] != g:
             raise ValueError(f"group mismatch: {a.shape} x {b.shape}")
         m = a.shape[2] if spec.trans_a else a.shape[1]
@@ -277,8 +476,8 @@ def mpgemm_pallas_spec(
         g = 1
         m = a.shape[1] if spec.trans_a else a.shape[0]
         ka = a.shape[0] if spec.trans_a else a.shape[1]
-    if layout is not None:
-        n, kb = layout.n, layout.k
+    if b_layout is not None:
+        n, kb = b_layout.n, b_layout.k
     elif grouped:
         n = b.shape[1] if spec.trans_b else b.shape[2]
         kb = b.shape[2] if spec.trans_b else b.shape[1]
@@ -286,7 +485,8 @@ def mpgemm_pallas_spec(
         n = b.shape[0] if spec.trans_b else b.shape[1]
         kb = b.shape[1] if spec.trans_b else b.shape[0]
     if ka != kb:
-        bshape = layout.payload_shape if layout is not None else b.shape
+        bshape = (b_layout.payload_shape if b_layout is not None
+                  else b.shape)
         raise ValueError(f"contraction mismatch: {a.shape} x {bshape}")
     k = ka
 
@@ -305,14 +505,15 @@ def mpgemm_pallas_spec(
     n_extra_mn = len(extras)
 
     # --- plan resolution: explicit > tuned (epilogue-tagged) > analytic ---
-    if plan is not None and layout is not None and (
-            (plan.bn, plan.bk) != (layout.bn, layout.bk)):
+    if plan is not None and b_layout is not None and (
+            (plan.bn, plan.bk) != (b_layout.bn, b_layout.bk)):
         raise ValueError(
-            f"plan blocks ({plan.bn}, {plan.bk}) incompatible with packed "
-            f"layout ({layout.bn}, {layout.bk})")
-    if plan is None and layout is not None:
-        plan = _packed_plan(m, k, n, layout, a.dtype, out_dtype,
-                            spec.trans_a, epilogue.beta, g=g,
+            f"plan blocks ({plan.bn}, {plan.bk}) incompatible with "
+            f"packed/sparse layout ({b_layout.bn}, {b_layout.bk})")
+    if plan is None and b_layout is not None:
+        plan = _layout_plan(m, k, n, b_layout, a.dtype, out_dtype,
+                            spec.trans_a, epilogue.beta,
+                            sparse=slayout is not None, g=g,
                             epilogue_tag=epilogue.tag, extra_mn=n_extra_mn)
     if plan is None:
         # Closed-loop planning: a tuned plan from the persistent cache wins
@@ -333,11 +534,16 @@ def mpgemm_pallas_spec(
             plan = grouped_plan_from_2d(plan, g)
     out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
     acc_dtype = jnp.dtype(plan.acc_dtype)
-    if layout is not None and layout.per_tile_scales:
+    if b_layout is not None and b_layout.per_tile_scales:
         # Per-tile scales accumulate scaled f32 partials — coerce even for
-        # an explicitly supplied plan (mirrors _packed_plan; an int32
+        # an explicitly supplied plan (mirrors _layout_plan; an int32
         # accumulator would reject the scaled stores deep inside Pallas).
         acc_dtype = jnp.dtype(jnp.float32)
+    if spec.sparse:
+        return _launch_sparse(
+            a, b_sparse, c=c, bias=bias, scale=scale, extras=extras,
+            spec=spec, epilogue=epilogue, plan=plan, out_dtype=out_dtype,
+            acc_dtype=acc_dtype, m=m, n=n, g=g, interpret=interpret)
     bm, bn, bk = plan.bm, plan.bn, plan.bk
     grid = ((g,) if grouped else ()) + (
         pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
@@ -379,20 +585,12 @@ def mpgemm_pallas_spec(
         in_specs.append(mn_spec)
         inputs.append(c)
     if bias is not None:
-        if grouped:
-            bias_in = jnp.broadcast_to(
-                bias.reshape((1, -1) if bias.ndim == 1
-                             else (g, -1))[:, None, :],
-                (g, 1, n))
-        else:
-            bias_in = bias.reshape(1, -1)
         in_specs.append(pl.BlockSpec(lead + (1, bn),
                                      _im(lambda i, j, kk: (0, j))))
-        inputs.append(bias_in)
+        inputs.append(_bias_input(bias, grouped, g, n))
     if scale is not None:
-        scale1d = jnp.asarray(scale, jnp.float32).reshape(1)
-        in_specs.append(pl.BlockSpec(
-            memory_space=pltpu.SMEM if (pltpu and not interpret) else None))
+        sspec, scale1d = _scale_spec_and_input(scale, interpret)
+        in_specs.append(sspec)
         inputs.append(scale1d)
     for x in extras:
         in_specs.append(mn_spec)
@@ -436,6 +634,7 @@ def mpgemm_pallas(
     c: Optional[jax.Array] = None,
     *,
     b_packed: Optional[PackedOperand] = None,
+    b_sparse: Optional[TileSparseOperand] = None,
     trans_a: bool = False,
     trans_b: bool = False,
     alpha: float = 1.0,
@@ -461,24 +660,30 @@ def mpgemm_pallas(
     the kernel reads the (bk, bn)-tiled payload through identity index
     maps — no strided DMA, no on-the-fly transposition (it was resolved at
     pack time), and for int8 payloads the per-tile dequant rides the
-    accumulation.  Mutually exclusive with ``b``/``trans_b``.
+    accumulation.  ``b_sparse`` replaces ``b`` with a tile-sparse operand
+    (repro.sparse): only the stored tiles are visited — the grid's K axis
+    becomes the stored-tile schedule, steered by scalar-prefetched index
+    maps.  ``b``/``b_packed``/``b_sparse`` are mutually exclusive, and the
+    pre-packed forms exclude ``trans_b`` (resolved at pack/sparsify time).
     """
-    layout = b_packed.layout if b_packed is not None else None
+    layout = (b_packed.layout if b_packed is not None
+              else b_sparse.layout if b_sparse is not None else None)
     if layout is not None and layout.g != 1:
         raise ValueError("grouped payload: use mpgemm_grouped_pallas")
     epilogue, extras = _resolve_epilogue(
         activation, alpha, beta, bias, scale, gate, residual)
     spec = GemmSpec(
         grouped=False,
-        packed=layout is not None,
+        packed=b_packed is not None,
+        sparse=b_sparse is not None,
         tile_scaled=layout is not None and layout.per_tile_scales,
         trans_a=trans_a,
         trans_b=False if layout is not None else trans_b,
     )
     return mpgemm_pallas_spec(
-        a, b, b_packed=b_packed, c=c, bias=bias, scale=scale, extras=extras,
-        spec=spec, epilogue=epilogue, out_dtype=out_dtype, plan=plan,
-        interpret=interpret,
+        a, b, b_packed=b_packed, b_sparse=b_sparse, c=c, bias=bias,
+        scale=scale, extras=extras, spec=spec, epilogue=epilogue,
+        out_dtype=out_dtype, plan=plan, interpret=interpret,
     )
 
 
@@ -488,6 +693,7 @@ def mpgemm_grouped_pallas(
     c: Optional[jax.Array] = None,
     *,
     b_packed: Optional[PackedOperand] = None,
+    b_sparse: Optional[TileSparseOperand] = None,
     trans_a: bool = False,
     trans_b: bool = False,
     alpha: float = 1.0,
@@ -516,22 +722,28 @@ def mpgemm_grouped_pallas(
     ``b_packed`` replaces ``b`` with a grouped packed operand (payload
     ``(G, nkb, nnb, bk, bn)``): identity tile reads per group, transpose
     resolved at pack time, per-tile int8 dequant riding the accumulation —
-    the pre-packed-expert-weights serving configuration.
+    the pre-packed-expert-weights serving configuration.  ``b_sparse``
+    replaces ``b`` with a grouped tile-sparse operand: the per-expert
+    sparsity patterns fold into one flat stored-tile schedule, so the
+    launch walks exactly the union of every expert's nonzero tiles
+    (pruned experts cost nothing — the tile-sparse MoE configuration).
     """
-    layout = b_packed.layout if b_packed is not None else None
+    layout = (b_packed.layout if b_packed is not None
+              else b_sparse.layout if b_sparse is not None else None)
     if layout is not None and layout.g == 1:
         raise ValueError("2-D payload: use mpgemm_pallas")
     epilogue, extras = _resolve_epilogue(
         activation, alpha, beta, bias, scale, gate, residual)
     spec = GemmSpec(
         grouped=True,
-        packed=layout is not None,
+        packed=b_packed is not None,
+        sparse=b_sparse is not None,
         tile_scaled=layout is not None and layout.per_tile_scales,
         trans_a=trans_a,
         trans_b=False if layout is not None else trans_b,
     )
     return mpgemm_pallas_spec(
-        a, b, b_packed=b_packed, c=c, bias=bias, scale=scale, extras=extras,
-        spec=spec, epilogue=epilogue, out_dtype=out_dtype, plan=plan,
-        interpret=interpret,
+        a, b, b_packed=b_packed, b_sparse=b_sparse, c=c, bias=bias,
+        scale=scale, extras=extras, spec=spec, epilogue=epilogue,
+        out_dtype=out_dtype, plan=plan, interpret=interpret,
     )

@@ -31,6 +31,24 @@ def main():
                     help="pack static weights into kernel-native tile "
                          "layouts at load time (repro.packing; cache via "
                          "REPRO_PACK_CACHE)")
+    ap.add_argument("--sparsity", type=float, default=0.0,
+                    help="fraction of weight TILES to prune at load time "
+                         "(repro.sparse tile-magnitude pruning; 0 = off). "
+                         "The sparse MPGEMM path then skips pruned tiles "
+                         "entirely — grid, DMA, and MACs all shrink")
+    ap.add_argument("--sparsity-method", default="magnitude",
+                    choices=["magnitude", "nm"],
+                    help="tile sparsifier: global magnitude top-k per "
+                         "operand, or structured N:M over k-tiles (N of "
+                         "every 4 kept, N derived from --sparsity — the "
+                         "level quantizes to multiples of 1/4)")
+    ap.add_argument("--sparsity-blocks", type=int, nargs=2, default=None,
+                    metavar=("BK", "BN"),
+                    help="tile size of the sparsity lattice (default: the "
+                         "block planner's choice — which for SMALL weights "
+                         "can be one whole-matrix tile, making pruning "
+                         "all-or-nothing; pass smaller blocks for finer "
+                         "granularity)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused gated-activation/residual "
                          "epilogues (core/gemm_spec.py) — the unfused A/B "
@@ -42,6 +60,13 @@ def main():
         # core.config.fused_epilogues(), so setting it before build works.
         os.environ["REPRO_FUSED_EPILOGUE"] = "0"
 
+    if not 0.0 <= args.sparsity < 1.0:
+        raise SystemExit(f"--sparsity must be in [0, 1) — a fraction of "
+                         f"tiles to prune, got {args.sparsity}")
+    if args.pack and args.sparsity > 0:
+        raise SystemExit("--pack and --sparsity are mutually exclusive "
+                         "(a weight is stored packed-dense OR tile-sparse)")
+
     cfg = cb.get(args.arch, smoke=args.smoke)
     model = build_model(cfg, policy=args.policy, remat=False)
     params = model.init(jax.random.PRNGKey(0))
@@ -51,6 +76,36 @@ def main():
                              m_hint=args.batch * 32)
         print(f"[serve] packed static weights: "
               f"{packed_param_bytes(params)/2**20:.1f} MiB payload")
+    if args.sparsity > 0:
+        from repro.sparse import (
+            sparse_param_bytes, sparse_param_density, sparsify_params,
+        )
+        # The N:M pattern keeps n_keep of every 4 k-tiles: the requested
+        # prune level quantizes to the NEAREST multiple of 1/4 (4:4 == a
+        # tiny request honestly rounds to "prune nothing", never silently
+        # over-prunes).
+        m_block = 4
+        n_keep = max(1, round((1.0 - args.sparsity) * m_block))
+        if args.sparsity_method == "nm":
+            print(f"[serve] N:M sparsity: keeping {n_keep} of every "
+                  f"{m_block} k-tiles (requested prune {args.sparsity:.2f}"
+                  f" -> effective {1 - n_keep / m_block:.2f})")
+        params = sparsify_params(params, density=1.0 - args.sparsity,
+                                 method=args.sparsity_method,
+                                 nm=(n_keep, m_block),
+                                 blocks=args.sparsity_blocks,
+                                 policy=args.policy, m_hint=args.batch * 32)
+        density = sparse_param_density(params)
+        print(f"[serve] tile-sparse static weights: "
+              f"{sparse_param_bytes(params)/2**20:.1f} MiB payload, "
+              f"tile density {density:.2f} ({args.sparsity_method})")
+        if density > (1.0 - args.sparsity) + 0.1:
+            print(f"[serve] WARNING: effective tile density {density:.2f} "
+                  f"is well above the requested {1 - args.sparsity:.2f} — "
+                  f"the planner's tile lattice is too coarse for these "
+                  f"weight shapes (pruning is per whole tile). Pass "
+                  f"--sparsity-blocks with smaller BK BN for finer "
+                  f"granularity.")
     eng = ServeEngine(model, params, batch_size=args.batch,
                       max_len=args.max_len)
     rng = np.random.default_rng(0)
@@ -66,6 +121,10 @@ def main():
     n_tok = sum(len(v) for v in out.values())
     print(f"[serve] {args.requests} requests, {n_tok} tokens, {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s CPU, policy={args.policy})")
+    for t in eng.telemetry:
+        print(f"  wave{t.wave}: {t.requests} reqs, {t.tokens} tok, "
+              f"{t.tokens_per_s:.1f} tok/s, occupancy {t.slot_occupancy:.2f},"
+              f" queue {t.queue_depth}")
     for uid in sorted(out):
         print(f"  req{uid}: {out[uid][:10]}")
 

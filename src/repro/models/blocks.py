@@ -282,7 +282,10 @@ def _expert_dot(ebuf, w, policy, **fusion):
     ``w`` may be a grouped :class:`repro.packing.PackedOperand` — expert
     weights packed once at load time (``pack_params``): mp_dot_grouped
     then reads the pre-tiled per-expert payload with identity index maps
-    instead of re-laying the experts out on every launch."""
+    instead of re-laying the experts out on every launch.  It may also be
+    a grouped :class:`repro.sparse.TileSparseOperand` (``sparsify_params``)
+    — the launch then walks only the union of every expert's stored tiles,
+    so tile-pruned experts shrink the grid itself."""
     return mp_dot_grouped(ebuf, w, policy=policy, out_dtype=jnp.float32,
                           **fusion)
 

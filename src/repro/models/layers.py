@@ -136,11 +136,15 @@ def embed_tokens(emb, tokens, policy_out_dtype=jnp.bfloat16):
 def logits_from_hidden(x, head, *, tied: bool, policy):
     """tied=True: head is the (V, d) embedding table -> on-the-fly transpose.
 
-    A packed head (repro.packing; only the UNtied head is ever packed — the
-    tied table doubles as the embedding gather source, which needs a dense
-    array) carries its orientation in the payload layout: the transpose was
-    resolved at pack time, so the layout's flag wins over ``tied``."""
+    A packed or tile-sparse head (repro.packing / repro.sparse; only the
+    UNtied head is ever transformed — the tied table doubles as the
+    embedding gather source, which needs a dense array) carries its
+    orientation in the payload layout: the transpose was resolved at
+    pack/sparsify time, so the layout's flag wins over ``tied``.  The
+    sparse head is the logits-layer win: vocab columns whose weight tiles
+    were pruned cost neither HBM reads nor MXU passes."""
     from repro.packing import is_packed
-    if is_packed(head):
+    from repro.sparse import is_sparse
+    if is_packed(head) or is_sparse(head):
         return mp_dot(x, head, policy=policy, trans_w=head.layout.trans_w)
     return mp_dot(x, head, policy=policy, trans_w=tied)

@@ -7,13 +7,17 @@ mirrors ``tuning/plan_cache.py``'s design one level up the data ladder:
 * **Keying** follows the plan cache's canonical-string discipline: a key
   names one packed artifact exactly —
 
-      ``<weight name>|<PackedLayout.tag>|k{K}n{N}[g{G}]|src=<dtype>|sha=<digest>``
+      ``<weight name>|<layout.tag>|k{K}n{N}[g{G}]|src=<dtype>|sha=<digest>``
 
-  The layout tag carries (bk, bn, payload dtype), so a *plan change*
-  (retuning, hardware change) changes the key and transparently invalidates
-  the cached payload — the cache can never serve tiles packed for a
-  different block decision.  The content digest does the same for a weight
-  update (new checkpoint -> new digest -> repack).
+  The layout tag carries (bk, bn, payload dtype) — and, for tile-SPARSE
+  layouts (``repro.sparse.TileSparseLayout``), the nnz count and the
+  sparsity-pattern digest — so a *plan change* (retuning, hardware change)
+  OR a *sparsity change* (different density, different pattern, sparse vs
+  dense pack of the same weight) changes the key and transparently
+  invalidates the cached payload: the cache can never serve tiles packed
+  for a different block decision, and sparse-packed and dense-packed
+  payloads of the same weight can never alias.  The content digest does
+  the same for a weight update (new checkpoint -> new digest -> repack).
 
 * **Persistence** is a directory: ``index.json`` (versioned, atomically
   replaced under the plan cache's advisory file lock) maps keys to
@@ -64,19 +68,69 @@ def weight_digest(w) -> str:
     return h.hexdigest()
 
 
-def make_weight_key(name: str, w, layout: PackedLayout) -> str:
-    """Canonical cache key for one packed weight (see module docstring)."""
+def make_weight_key(name: str, w, layout) -> str:
+    """Canonical cache key for one packed/sparse weight (module docstring).
+
+    ``layout`` is any layout exposing ``tag``/``k``/``n``/``g``/
+    ``orig_dtype`` — :class:`PackedLayout` or
+    ``repro.sparse.TileSparseLayout``.  The tag is what keeps the two
+    namespaces (and every sparsity pattern within the sparse one) from
+    ever aliasing.
+    """
     group = f"g{layout.g}|" if layout.g != 1 else ""
     return (f"{name}|{layout.tag}|{group}k{layout.k}n{layout.n}"
             f"|src={layout.orig_dtype}|sha={weight_digest(w)[:16]}")
 
 
-def _layout_to_dict(layout: PackedLayout) -> dict:
-    return dataclasses.asdict(layout)
+def _operand_classes():
+    """(layout kind -> (layout cls, operand cls)) — lazy so this module
+    never hard-imports repro.sparse (packing is the lower layer)."""
+    from repro.sparse.layout import TileSparseLayout, TileSparseOperand
+    return {
+        "packed": (PackedLayout, PackedOperand),
+        "tile_sparse": (TileSparseLayout, TileSparseOperand),
+    }
 
 
-def _layout_from_dict(d: dict) -> PackedLayout:
-    return PackedLayout(**d)
+def _layout_kind(layout) -> str:
+    return "packed" if isinstance(layout, PackedLayout) else "tile_sparse"
+
+
+def _layout_to_dict(layout) -> dict:
+    d = dataclasses.asdict(layout)
+    # JSON round-trip turns the sparse index tuples into lists; the
+    # constructor normalizes them back (TileSparseLayout.__post_init__).
+    d["kind"] = _layout_kind(layout)
+    return d
+
+
+def _layout_from_dict(d: dict):
+    d = dict(d)
+    kind = d.pop("kind", "packed")
+    layout_cls, _ = _operand_classes()[kind]
+    return layout_cls(**d)
+
+
+def _operand_for(layout, payload, scales):
+    _, operand_cls = _operand_classes()[_layout_kind(layout)]
+    return operand_cls(payload, scales, layout)
+
+
+def _restore_payload_dtype(raw: np.ndarray, dtype_str: str):
+    """Undo npz's erasure of extension dtypes.
+
+    numpy has no native bfloat16 (etc.): ``np.savez`` writes such payloads
+    as raw void records (``V2``) and ``np.load`` hands them back that way,
+    which made every DISK hit of a bf16 payload silently miss (the
+    ``jnp.asarray`` failed and ``get`` treated it as a corrupt entry).
+    The layout records the true payload dtype, so a same-itemsize view
+    restores it losslessly.
+    """
+    want = jnp.dtype(dtype_str)
+    if raw.dtype != want and raw.dtype.kind == "V" \
+            and raw.dtype.itemsize == want.itemsize:
+        raw = raw.view(want)
+    return jnp.asarray(raw)
 
 
 class PackedWeightCache:
@@ -147,12 +201,13 @@ class PackedWeightCache:
             try:
                 data = np.load(self.path / entry["file"])
                 layout = _layout_from_dict(entry["layout"])
-                payload = jnp.asarray(data["payload"])
+                payload = _restore_payload_dtype(data["payload"],
+                                                 layout.dtype)
                 scales = (jnp.asarray(data["scales"])
                           if "scales" in data.files else None)
             except (OSError, KeyError, TypeError, ValueError):
                 return None  # corrupt entry == miss, never a crash
-            packed = PackedOperand(payload, scales, layout)
+            packed = _operand_for(layout, payload, scales)
             self._mem[key] = packed
             return packed
 
@@ -240,6 +295,21 @@ class PackedWeightCache:
                         backend=backend)
         self.put(key, packed)
         return packed
+
+    def get_or_build(self, name: str, w, layout, build_fn: Callable):
+        """Layout-first sibling of :meth:`get_or_pack` for operands whose
+        layout is computed by the caller (the tile-sparse subsystem: the
+        sparsity pattern IS part of the layout, and its tag/digest must be
+        in the key).  ``build_fn()`` produces the operand on a miss."""
+        key = make_weight_key(name, w, layout)
+        hit = self.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        built = build_fn()
+        self.put(key, built)
+        return built
 
 
 # -- process-global cache -----------------------------------------------------

@@ -3,10 +3,19 @@
 Continuous-batching-lite: requests are grouped into a fixed batch; each
 decode step advances every live sequence one token; finished sequences
 (EOS or length) free their slot for queued requests (slot reuse keeps the
-compiled decode_step's shapes static — the production pattern)."""
+compiled decode_step's shapes static — the production pattern).
+
+``generate()`` emits per-wave telemetry (:class:`WaveTelemetry`:
+tokens/s, slot occupancy, queue depth) into ``engine.telemetry`` — the
+first observability surface toward production serving: occupancy says
+whether the static batch is sized right, queue depth whether admission is
+falling behind, tokens/s is the throughput SLO number.  An optional
+``on_wave`` callback streams each record as it completes (metrics
+export)."""
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -23,30 +32,77 @@ class Request:
     out_tokens: Optional[List[int]] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class WaveTelemetry:
+    """Observability record for ONE wave of batched generation.
+
+    ``wall_s`` (and therefore ``tokens_per_s``) covers prefill + decode —
+    and, for the FIRST wave after process start or a shape change, the
+    jax.jit compilation of the prefill/decode executables.  ``prefill_s``
+    isolates the prefill(+compile) portion so metrics consumers can
+    baseline steady-state decode throughput (``tokens / (wall_s -
+    prefill_s)``) or drop the wave-0 outlier.
+    """
+
+    wave: int                # 0-based wave index within this generate() call
+    requests: int            # requests admitted into the wave
+    tokens: int              # tokens emitted by the wave
+    decode_steps: int        # decode iterations the wave ran
+    wall_s: float            # wave wall time (prefill + decode)
+    prefill_s: float         # prefill wall time (incl. compile on wave 0)
+    tokens_per_s: float      # tokens / wall_s
+    slot_occupancy: float    # mean live-slot fraction over decode steps
+    queue_depth: int         # requests still queued when the wave finished
+
+
 class ServeEngine:
     def __init__(self, model, params, *, batch_size: int, max_len: int,
-                 eos_id: int = 1, greedy: bool = True):
+                 eos_id: int = 1, greedy: bool = True,
+                 on_wave: Optional[Callable[[WaveTelemetry], None]] = None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
+        self.on_wave = on_wave
+        self.telemetry: List[WaveTelemetry] = []
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=max_len))
         self._decode = jax.jit(model.decode_step)
 
     def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Static-batch generation with slot reuse between waves."""
+        """Static-batch generation with slot reuse between waves.
+
+        Resets and repopulates ``self.telemetry`` with one
+        :class:`WaveTelemetry` per wave (and streams each record through
+        ``on_wave`` when configured).
+        """
         results: Dict[int, List[int]] = {}
         queue = list(requests)
+        self.telemetry = []
+        wave_idx = 0
         while queue:
             wave = queue[: self.batch_size]
             queue = queue[self.batch_size:]
-            results.update(self._run_wave(wave))
+            t0 = time.perf_counter()
+            out, steps, occupancy, prefill_s = self._run_wave(wave)
+            wall = time.perf_counter() - t0
+            n_tok = sum(len(v) for v in out.values())
+            record = WaveTelemetry(
+                wave=wave_idx, requests=len(wave), tokens=n_tok,
+                decode_steps=steps, wall_s=wall, prefill_s=prefill_s,
+                tokens_per_s=n_tok / wall if wall > 0 else 0.0,
+                slot_occupancy=occupancy, queue_depth=len(queue),
+            )
+            self.telemetry.append(record)
+            if self.on_wave is not None:
+                self.on_wave(record)
+            results.update(out)
+            wave_idx += 1
         return results
 
-    def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
+    def _run_wave(self, wave: List[Request]):
         b = self.batch_size
         plen = max(len(r.prompt) for r in wave)
         toks = np.zeros((b, plen), np.int32)
@@ -61,13 +117,23 @@ class ServeEngine:
         if cfg.family == "vlm":
             batch["image_embeds"] = jnp.zeros(
                 (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        t_pf = time.perf_counter()
         logits, caches = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t_pf
         out = {r.uid: [] for r in wave}
         live = np.array([True] * len(wave) + [False] * (b - len(wave)))
         token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         max_new = max(r.max_new_tokens for r in wave)
         pos = plen
+        occ_sum = 0.0
+        emit_steps = 0
+        decode_steps = 0
         for step in range(max_new):
+            # Slot occupancy is sampled at emission time: live slots doing
+            # useful work this step over the static batch width.
+            occ_sum += float(live.sum()) / b
+            emit_steps += 1
             tok_np = np.asarray(token[:, 0])
             for i, r in enumerate(wave):
                 if live[i]:
@@ -79,6 +145,8 @@ class ServeEngine:
                 break
             logits, caches = self._decode(self.params, token, caches,
                                           jnp.int32(pos))
+            decode_steps += 1
             token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             pos += 1
-        return out
+        occupancy = occ_sum / emit_steps if emit_steps else 0.0
+        return out, decode_steps, occupancy, prefill_s

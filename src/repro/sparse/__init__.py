@@ -1,0 +1,49 @@
+"""Tile-sparse operand subsystem — skip zero tiles end-to-end.
+
+The layer between pruning and execution: weight tiles that are (or are
+made) zero on the plan's (bk, bn) lattice are dropped from storage AND
+from the kernel's tile walk — the dense K grid is replaced by a
+scalar-prefetched per-column tile list, so a pruned tile costs neither
+HBM bytes nor an MXU pass.
+
+    core/blocking.py (plan, density-priced)   repro.tuning (sparsity-keyed)
+            └──────────────┬───────────────────────┘
+                           ▼
+    repro.sparse: sparsify_magnitude / sparsify_nm / sparsify_params
+            │  TileSparseOperand (stored tiles + per-tile scales +
+            │                     TileSparseLayout BSR metadata)
+            │  payload cache: repro.packing.PackedWeightCache (the layout
+            │                 tag — pattern digest included — keys it)
+            ▼
+    mp_dot / mp_dot_grouped (x, TileSparseOperand)  |  mp_dot(b_sparse=...)
+            ▼
+    kernels/mpgemm.py  mpgemm_pallas(b_sparse=...) — grid (M/bm, nnz),
+                       scalar-prefetched index maps, zero tiles never
+                       visited (the jaxpr-verifiable tile-visit gate)
+
+Public API: :func:`sparsify_magnitude`, :func:`sparsify_nm`,
+:func:`sparsify_with_mask`, :func:`sparsify_params`,
+:func:`densify_operand`, :class:`TileSparseOperand`,
+:class:`TileSparseLayout`, :func:`is_sparse`, :func:`build_schedule`.
+See docs/sparse.md for the layout format and the accuracy/perf trade-off.
+"""
+from repro.sparse.layout import (
+    SparseSchedule, TileSparseLayout, TileSparseOperand, build_schedule,
+    is_sparse,
+)
+from repro.sparse.params import (
+    sparse_param_bytes, sparse_param_density, sparsify_params,
+)
+from repro.sparse.sparsify import (
+    build_payload, densify_operand, magnitude_mask, nm_mask,
+    payload_cotangent, sparsify_magnitude, sparsify_nm, sparsify_with_mask,
+    tile_scores,
+)
+
+__all__ = [
+    "SparseSchedule", "TileSparseLayout", "TileSparseOperand",
+    "build_payload", "build_schedule", "densify_operand", "is_sparse",
+    "magnitude_mask", "nm_mask", "payload_cotangent", "sparse_param_bytes",
+    "sparse_param_density", "sparsify_magnitude", "sparsify_nm",
+    "sparsify_params", "sparsify_with_mask", "tile_scores",
+]

@@ -1,0 +1,299 @@
+"""Tile-sparse operand layout metadata and the :class:`TileSparseOperand`
+pytree.
+
+The cache-aware partitioning of every GEMM in this framework already
+decomposes the B operand into a (bk, bn) tile lattice (core/blocking.py),
+and the packed-operand subsystem (repro.packing) stores those tiles
+contiguously.  This module is the sparse sibling: when weight pruning or
+MoE routing leaves whole tiles zero, only the NONZERO tiles are stored —
+and, downstream, only the nonzero tiles are ever visited by the kernel
+("LOw-cOst yet High-Performant Sparse Matrix-Matrix Multiplication on Arm
+SME Architectures" shows tile granularity is the sparsity level that
+matches outer-product tile hardware; the layout-metadata approach follows
+"Fast Matrix Multiplication via Compiler-only Layered Data Reorganization
+and Intrinsic Lowering": no new kernel family, just new index maps).
+
+    logical weight  w[k, n]   (or w[n, k] under ``trans_w``)
+        │  sparsify (repro.sparse.sparsify): tile on the plan's (bk, bn)
+        │  lattice, score tiles, drop the weak ones, zero-pad edges,
+        │  resolve the transpose, optionally per-tile int8 quantize
+        ▼
+    payload[nnz + 1, bk, bn]     — stored tiles in column-major (g, j)
+                                   order, plus ONE trailing all-zero tile
+                                   shared by anchor visits (see below)
+    scales [nnz + 1, 1] f32      — int8 payloads only
+    TileSparseLayout             — BSR-style (indptr, indices) over the
+                                   tile lattice, static/hashable aux data
+
+The BSR structure is **column-major over output-tile columns**: column
+``c`` (= group ``c // nnb``, n-tile ``c % nnb``) stores the k-tile indices
+``indices[indptr[c]:indptr[c+1]]`` (ascending).  That is exactly the order
+the output-stationary kernel wants: all stored tiles of one accumulator
+column are consecutive, so the K loop becomes a walk over a contiguous
+slice of the schedule.
+
+**Anchor visits.**  A column with NO stored tiles would never be visited
+by a stored-tiles-only grid, leaving its output block unwritten (and its
+epilogue — bias, activation, residual — unapplied).  The schedule
+therefore inserts one *anchor* entry per empty column, pointing at the
+shared trailing zero tile: the column is visited once, accumulates zero,
+and the epilogue runs.  ``schedule_len = nnz + n_empty_columns``.
+
+:class:`TileSparseLayout` is static (hashable — the index arrays are
+tuples), so it travels as pytree aux data and the Pallas grid derived from
+it is a **trace-time constant**: the traced jaxpr of a sparse GEMM
+literally has ``grid = (M/bm, schedule_len)``, which is how the benchmark
+gate (benchmarks/bench_sparse.py) proves zero tiles are skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSparseLayout:
+    """Static description of one tile-sparse operand (pytree aux data).
+
+    ``k``/``n`` are the LOGICAL GEMM dims — a ``trans_w`` source has its
+    transpose resolved at sparsify time, exactly like
+    :class:`repro.packing.PackedLayout`.  ``indptr``/``indices`` are the
+    BSR column structure over the (bk, bn) tile lattice (column-major over
+    ``g * nnb`` output-tile columns; see module docstring).  ``dtype`` is
+    the payload dtype (``int8`` implies per-tile scales); ``g`` > 1 marks
+    a grouped operand (MoE experts / batched weights) whose per-group
+    patterns are folded into the single flat column structure.
+    """
+
+    k: int
+    n: int
+    bk: int
+    bn: int
+    dtype: str
+    orig_dtype: str
+    indptr: Tuple[int, ...]
+    indices: Tuple[int, ...]
+    trans_w: bool = False
+    g: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "indptr", tuple(int(i) for i in self.indptr))
+        object.__setattr__(self, "indices",
+                          tuple(int(i) for i in self.indices))
+        ncols = self.g * self.nnb
+        if len(self.indptr) != ncols + 1:
+            raise ValueError(
+                f"indptr must have g*nnb+1 = {ncols + 1} entries, got "
+                f"{len(self.indptr)}")
+        if self.indptr[0] != 0 or self.indptr[-1] != len(self.indices):
+            raise ValueError("indptr must start at 0 and end at len(indices)")
+        for c in range(ncols):
+            lo, hi = self.indptr[c], self.indptr[c + 1]
+            if hi < lo:
+                raise ValueError("indptr must be non-decreasing")
+            col = self.indices[lo:hi]
+            if any(kk < 0 or kk >= self.nkb for kk in col):
+                raise ValueError(
+                    f"column {c} has k-tile index outside [0, {self.nkb})")
+            if any(col[i] >= col[i + 1] for i in range(len(col) - 1)):
+                raise ValueError(
+                    f"column {c} k-tile indices must be strictly ascending")
+
+    @property
+    def nkb(self) -> int:
+        return _cdiv(self.k, self.bk)
+
+    @property
+    def nnb(self) -> int:
+        return _cdiv(self.n, self.bn)
+
+    @property
+    def nnz(self) -> int:
+        """Stored (nonzero) tile count across all groups/columns."""
+        return len(self.indices)
+
+    @property
+    def ntiles(self) -> int:
+        """Dense tile count of the lattice: what a dense K grid would visit."""
+        return self.g * self.nkb * self.nnb
+
+    @property
+    def density(self) -> float:
+        return self.nnz / max(1, self.ntiles)
+
+    @property
+    def per_tile_scales(self) -> bool:
+        return self.dtype == "int8"
+
+    @property
+    def payload_shape(self) -> Tuple[int, ...]:
+        # +1: the shared trailing zero tile anchor visits read.
+        return (self.nnz + 1, self.bk, self.bn)
+
+    @property
+    def scales_shape(self) -> Optional[Tuple[int, ...]]:
+        if not self.per_tile_scales:
+            return None
+        return (self.nnz + 1, 1)
+
+    @property
+    def schedule_len(self) -> int:
+        """Grid extent of the sparse tile walk: nnz + one anchor per empty
+        column (the kernel's innermost grid axis — the tile-visit count the
+        benchmark gate asserts on)."""
+        empty = sum(
+            1 for c in range(self.g * self.nnb)
+            if self.indptr[c] == self.indptr[c + 1])
+        return self.nnz + empty
+
+    @property
+    def pattern_digest(self) -> str:
+        """Short content fingerprint of the sparsity pattern."""
+        h = hashlib.sha256()
+        h.update(repr((self.indptr, self.indices)).encode())
+        return h.hexdigest()[:8]
+
+    @property
+    def tag(self) -> str:
+        """Layout namespace tag.
+
+        Used by the packed-weight cache key (sparse-packed and dense-packed
+        payloads of the same weight must never alias — the pattern digest
+        separates even two sparsifications at the same nnz) and by the plan
+        cache's ``make_key(..., sparsity=...)`` namespace (a sparse launch
+        has a different measured optimum than the dense-K grid).
+        """
+        return (f"spB{self.bk}x{self.bn}{self.dtype}"
+                f"-nnz{self.nnz}of{self.ntiles}-{self.pattern_digest}")
+
+    def describe(self) -> str:
+        shape = f"{self.k}x{self.n}"
+        if self.g != 1:
+            shape = f"{self.g}x{shape}"
+        t = "ᵀ" if self.trans_w else ""
+        return (f"TileSparseLayout[{shape}{t} {self.orig_dtype}->{self.dtype}"
+                f" tiles=({self.bk},{self.bn}) nnz={self.nnz}/{self.ntiles}"
+                f" d={self.density:.2f}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseSchedule:
+    """The scalar-prefetch arrays one :class:`TileSparseLayout` lowers to.
+
+    One entry per tile VISIT, column-major over (g, j): stored tiles in
+    k-ascending order, plus one anchor entry per empty column pointing at
+    the trailing zero payload tile.  All arrays are int32 of length
+    ``layout.schedule_len``; they are passed to the kernel as
+    scalar-prefetch operands so the BlockSpec index maps can steer every
+    DMA from them (the paper's scalar-prefetched gather, TPU form).
+    """
+
+    kk: np.ndarray      # k-tile index of the visit (A-side index map + K-tail)
+    jj: np.ndarray      # n-tile column of the visit (output/bias/extras maps)
+    gg: np.ndarray      # group of the visit (grouped operands; zeros for 2-D)
+    slot: np.ndarray    # payload tile to read (zero tile for anchors)
+    first: np.ndarray   # 1 == first visit of its column (accumulator init)
+    last: np.ndarray    # 1 == last visit of its column (epilogue + store)
+
+
+@functools.lru_cache(maxsize=256)
+def build_schedule(layout: TileSparseLayout) -> SparseSchedule:
+    """Lower a layout's BSR structure to the kernel's visit schedule.
+
+    Cached on the (hashable) layout: every launch of the same operand
+    reuses the same host arrays.
+    """
+    nnb = layout.nnb
+    zero_slot = layout.nnz
+    kk, jj, gg, slot, first, last = [], [], [], [], [], []
+    for c in range(layout.g * nnb):
+        lo, hi = layout.indptr[c], layout.indptr[c + 1]
+        col = layout.indices[lo:hi] if hi > lo else (0,)  # anchor visit
+        for i, kt in enumerate(col):
+            kk.append(kt)
+            jj.append(c % nnb)
+            gg.append(c // nnb)
+            slot.append(lo + i if hi > lo else zero_slot)
+            first.append(1 if i == 0 else 0)
+            last.append(1 if i == len(col) - 1 else 0)
+    as32 = lambda v: np.asarray(v, np.int32)  # noqa: E731
+    return SparseSchedule(kk=as32(kk), jj=as32(jj), gg=as32(gg),
+                          slot=as32(slot), first=as32(first), last=as32(last))
+
+
+class TileSparseOperand:
+    """A tile-sparse GEMM operand: stored tiles + optional per-tile scales
+    + layout.
+
+    Registered as a pytree (payload/scales are children, layout is aux), so
+    it flows through jit, ``lax.scan`` (a stacked-layer operand carries a
+    leading layer axis on the payload that scan slices away — the shared
+    pattern lives in the aux layout), and parameter trees.  The consuming
+    ops (``mp_dot`` / ``mp_dot_grouped`` / ``mpgemm_pallas``) dispatch on
+    the type.
+    """
+
+    __slots__ = ("payload", "scales", "layout")
+
+    def __init__(self, payload, scales, layout: TileSparseLayout):
+        self.payload = payload
+        self.scales = scales
+        self.layout = layout
+
+    # -- conveniences --------------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """The LOGICAL (transpose-resolved) operand shape: (k, n) / (g, k, n)."""
+        base = (self.layout.k, self.layout.n)
+        return (self.layout.g,) + base if self.layout.g != 1 else base
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.layout.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        total = self.payload.size * self.payload.dtype.itemsize
+        if self.scales is not None:
+            total += self.scales.size * self.scales.dtype.itemsize
+        return total
+
+    def astype(self, dtype) -> "TileSparseOperand":
+        """Payload cast for float payloads (no-op when dtypes match) —
+        mirrors :meth:`repro.packing.PackedOperand.astype`."""
+        dtype = jnp.dtype(dtype)
+        if self.layout.per_tile_scales or self.payload.dtype == dtype:
+            return self
+        layout = dataclasses.replace(self.layout, dtype=str(dtype))
+        return TileSparseOperand(self.payload.astype(dtype), None, layout)
+
+    def __repr__(self) -> str:
+        return self.layout.describe().replace("TileSparseLayout",
+                                              "TileSparseOperand")
+
+
+def _flatten(p: TileSparseOperand):
+    return (p.payload, p.scales), p.layout
+
+
+def _unflatten(layout: TileSparseLayout, children) -> TileSparseOperand:
+    payload, scales = children
+    return TileSparseOperand(payload, scales, layout)
+
+
+jax.tree_util.register_pytree_node(TileSparseOperand, _flatten, _unflatten)
+
+
+def is_sparse(w) -> bool:
+    return isinstance(w, TileSparseOperand)

@@ -1,0 +1,193 @@
+"""Sparsify model parameter trees at load time — the serving-side entry
+point, mirroring ``repro.packing.params.pack_params`` one subsystem over.
+
+``sparsify_params`` walks a parameter pytree with the same walk discipline
+as ``pack_params`` / ``quantize_params`` and replaces every eligible GEMM
+weight with its :class:`~repro.sparse.layout.TileSparseOperand` form:
+
+    policy fp32 / bf16 / bf16_serve  ->  float payload in the policy's
+                                         compute dtype
+    policy int8                      ->  int8 payload + per-tile scales
+
+Eligibility reuses ``quantization.QUANT_LEAVES``.  The same three
+structural cases as ``pack_params``, with one sparse-specific twist:
+
+* plain 2-D weight                       -> 2-D sparsify
+* scanned-stack leaf ("stack"/"encoder") -> ONE pattern SHARED across the
+      layer axis (tile scores averaged over layers), so the stacked
+      payload keeps a leading layer axis that ``lax.scan`` slices away
+      while the static layout stays layer-invariant — per-layer patterns
+      would give per-layer payload shapes, which scan cannot stack.
+* MoE expert weight (trailing 3-D)       -> grouped sparsify, per-expert
+      patterns folded into one flat schedule (stacked MoE combines both:
+      shared-over-layers pattern + grouped payload)
+
+Every sparsify goes through the process-global packed-weight cache
+(``repro.packing.cache``, ``REPRO_PACK_CACHE``): the cache key carries the
+sparse layout's tag — density, blocks, payload dtype AND the pattern
+digest — so sparse-packed and dense-packed payloads of the same weight can
+never alias (see the cache-key regression tests).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocking import plan_gemm
+from repro.core.policy import get_policy
+from repro.core.quantization import QUANT_LEAVES
+from repro.packing.cache import PackedWeightCache, get_pack_cache
+from repro.packing.params import (
+    MOE_GROUPED_LEAVES, _is_stacked, _leaf_name, _path_str,
+)
+from repro.sparse.layout import TileSparseLayout, TileSparseOperand
+from repro.sparse.sparsify import (
+    _core_dims, _keep_to_structure, build_payload, magnitude_mask, nm_mask,
+    tile_scores,
+)
+
+METHODS = ("magnitude", "nm")
+
+
+def _payload_dtype(policy) -> str:
+    return "int8" if policy.quantized else str(jnp.dtype(policy.compute_dtype))
+
+
+def _shared_mask(leaf, blocks, *, lead_axes: int, method: str,
+                 density: float, nm: Tuple[int, int]):
+    """Tile keep-mask for one leaf: scores averaged over any leading
+    scanned-layer axes so the pattern (and therefore the static layout) is
+    layer-invariant."""
+    arr = np.asarray(leaf, np.float32)
+    arr = arr.reshape((-1,) + arr.shape[lead_axes:])
+    scores = np.stack([
+        tile_scores(arr[i], blocks) for i in range(arr.shape[0])
+    ]).mean(axis=0)
+    if method == "magnitude":
+        return magnitude_mask(scores, density)
+    n_keep, m_block = nm
+    return nm_mask(scores, n_keep, m_block)
+
+
+def _leaf_layout(leaf, blocks, *, dtype, lead_axes: int, grouped: bool,
+                 method: str, density: float, nm: Tuple[int, int]
+                 ) -> TileSparseLayout:
+    """The shared static layout for one (stacked/grouped) leaf."""
+    core = leaf
+    for _ in range(lead_axes):
+        core = core[0]
+    bk, bn = blocks
+    k, n, g = _core_dims(core, trans_w=False, grouped=grouped)
+    bk, bn = min(bk, k), min(bn, n)
+    keep = _shared_mask(leaf, (bk, bn), lead_axes=lead_axes,
+                        method=method, density=density, nm=nm)
+    indptr, indices = _keep_to_structure(keep)
+    return TileSparseLayout(
+        k=k, n=n, bk=bk, bn=bn, dtype=str(jnp.dtype(dtype)),
+        orig_dtype=str(jnp.dtype(leaf.dtype)),
+        indptr=indptr, indices=indices, g=g,
+    )
+
+
+def _build_operand(leaf, layout: TileSparseLayout,
+                   lead_axes: int) -> TileSparseOperand:
+    build = lambda w: build_payload(w, layout)  # noqa: E731
+    for _ in range(lead_axes):
+        build = jax.vmap(build)
+    payload, scales = build(leaf)
+    return TileSparseOperand(payload, scales, layout)
+
+
+def sparsify_params(
+    params,
+    *,
+    density: float = 0.5,
+    method: str = "magnitude",
+    nm: Tuple[int, int] = (2, 4),
+    policy="bf16",
+    m_hint: int = 256,
+    blocks: Optional[Tuple[int, int]] = None,
+    cache: Optional[PackedWeightCache] = None,
+    leaves: Optional[Sequence[str]] = None,
+):
+    """Replace eligible GEMM weights in ``params`` with tile-sparse operands.
+
+    ``density`` is the kept-tile fraction for the magnitude method;
+    ``method="nm"`` uses the structured ``nm=(n_keep, m_block)`` pattern
+    instead.  ``m_hint``/``policy`` seed the block planner exactly as in
+    ``pack_params`` (bk/bn — the axes the sparse layout pins — are driven
+    by (N, K, dtype)); ``blocks=(bk, bn)`` overrides the planner — the
+    sparsity GRANULARITY knob: smaller tiles prune finer (better accuracy
+    per dropped FLOP) at the cost of a longer schedule.  Run this on the
+    UNQUANTIZED checkpoint: under the int8 policy the sparsify itself
+    performs per-tile quantization of the surviving tiles.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; valid: {METHODS}")
+    policy = get_policy(policy)
+    dtype = _payload_dtype(policy)
+    a_dtype = "int8" if policy.quantized else policy.compute_dtype
+    eligible = frozenset(leaves) if leaves is not None else QUANT_LEAVES
+    cache = cache if cache is not None else get_pack_cache()
+
+    def _blocks(k: int, n: int):
+        if blocks is not None:
+            return int(blocks[0]), int(blocks[1])
+        plan = plan_gemm(m_hint, n, k, a_dtype, dtype)
+        return plan.bk, plan.bn
+
+    def _leaf(path, leaf):
+        name = _leaf_name(path)
+        if (name not in eligible or not hasattr(leaf, "ndim")
+                or isinstance(leaf, TileSparseOperand)):
+            return leaf
+        if jnp.dtype(leaf.dtype).kind != "f":
+            return leaf
+        stacked = _is_stacked(path)
+        eff_ndim = leaf.ndim - (1 if stacked else 0)
+        if eff_ndim == 2:
+            grouped = False
+        elif eff_ndim == 3 and name in MOE_GROUPED_LEAVES:
+            grouped = True
+        else:
+            return leaf
+        k, n = leaf.shape[-2], leaf.shape[-1]
+        blocks = _blocks(k, n)
+        lead = 1 if stacked else 0
+        layout = _leaf_layout(leaf, blocks, dtype=dtype, lead_axes=lead,
+                              grouped=grouped, method=method,
+                              density=density, nm=nm)
+        if cache is None:
+            return _build_operand(leaf, layout, lead)
+        # The cache key carries the layout tag (blocks, payload dtype, nnz
+        # AND the pattern digest), so the cheap host-side pattern step runs
+        # before the probe; the payload build is what a hit skips.
+        return cache.get_or_build(
+            _path_str(path), leaf, layout,
+            lambda: _build_operand(leaf, layout, lead))
+
+    return jax.tree_util.tree_map_with_path(_leaf, params)
+
+
+def sparse_param_bytes(params) -> int:
+    """Total bytes of sparse payloads in a tree (serving-footprint report)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, TileSparseOperand)):
+        if isinstance(leaf, TileSparseOperand):
+            total += leaf.nbytes
+    return total
+
+
+def sparse_param_density(params) -> float:
+    """nnz / dense tile count over every sparse leaf (1.0 when none)."""
+    nnz = ntiles = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, TileSparseOperand)):
+        if isinstance(leaf, TileSparseOperand):
+            nnz += leaf.layout.nnz
+            ntiles += leaf.layout.ntiles
+    return nnz / ntiles if ntiles else 1.0

@@ -1,0 +1,288 @@
+"""Tile sparsifiers + payload build/densify for the tile-sparse subsystem.
+
+Sparsification is an OFFLINE weight transformation (like packing and static
+quantization): the sparsity pattern must be static so it can live in the
+hashable :class:`~repro.sparse.layout.TileSparseLayout` and steer a
+trace-time-constant Pallas grid.  The scoring/pattern step therefore runs
+on host numpy over concrete weights; the payload build is pure jnp (and
+vmap-safe, for scanned layer stacks).
+
+Two pattern families, both scored by per-tile Frobenius norm on the plan's
+(bk, bn) lattice:
+
+* :func:`sparsify_magnitude` — keep the top ``density`` fraction of tiles
+  (per group, so grouped/MoE operands stay balanced across experts).
+* :func:`sparsify_nm` — structured N:M over the K-tile axis: in every run
+  of ``m_block`` consecutive k-tiles of one output column, keep the
+  ``n_keep`` strongest.  Bounds work per column (uniform schedule depth),
+  the tile-level analogue of 2:4 weight sparsity.
+
+Both drop exactly-zero tiles unconditionally (``prune_zero``): a weight
+already pruned upstream compresses at ``density=1.0`` with no accuracy
+change at all.
+
+The tiling/quantization primitives are REUSED from ``repro.packing.pack``
+(``_pack_dense_ref`` / ``_quantize_tiles_ref``) — a tile-sparse payload is
+a packed payload minus the zero tiles, which is what makes the two layouts
+composable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocking import GemmPlan
+from repro.packing.pack import _pack_dense_ref, _quantize_tiles_ref
+from repro.sparse.layout import TileSparseLayout, TileSparseOperand
+
+
+def _blocks_of(plan_or_blocks) -> Tuple[int, int]:
+    if isinstance(plan_or_blocks, GemmPlan):
+        return plan_or_blocks.bk, plan_or_blocks.bn
+    bk, bn = plan_or_blocks
+    return int(bk), int(bn)
+
+
+def _core_dims(w, *, trans_w: bool, grouped: bool) -> Tuple[int, int, int]:
+    shape = w.shape[1:] if grouped else w.shape
+    if len(shape) != 2:
+        raise ValueError(f"sparsify expects a 2-D (or grouped 3-D) operand, "
+                         f"got {w.shape}")
+    k, n = (shape[1], shape[0]) if trans_w else shape
+    return k, n, (w.shape[0] if grouped else 1)
+
+
+def tile_scores(w, blocks: Tuple[int, int], *, trans_w: bool = False
+                ) -> np.ndarray:
+    """Per-tile Frobenius norms on the (bk, bn) lattice: (g, nkb, nnb) f64.
+
+    Host-side (concrete weights only) — the scores decide the STATIC
+    pattern, so they can never be traced.
+    """
+    bk, bn = blocks
+    grouped = w.ndim == 3
+    k, n, g = _core_dims(w, trans_w=trans_w, grouped=grouped)
+    bk, bn = min(bk, k), min(bn, n)
+    arr = np.asarray(w, np.float64)
+    if not grouped:
+        arr = arr[None]
+    if trans_w:
+        arr = arr.swapaxes(-1, -2)
+    nkb, nnb = -(-k // bk), -(-n // bn)
+    pad = ((0, 0), (0, nkb * bk - k), (0, nnb * bn - n))
+    arr = np.pad(arr, pad)
+    t = arr.reshape(g, nkb, bk, nnb, bn)
+    return np.sqrt((t * t).sum(axis=(2, 4)))
+
+
+def _keep_to_structure(keep: np.ndarray) -> Tuple[Tuple[int, ...],
+                                                  Tuple[int, ...]]:
+    """(g, nkb, nnb) bool mask -> column-major BSR (indptr, indices)."""
+    g, nkb, nnb = keep.shape
+    indptr = [0]
+    indices = []
+    for gi in range(g):
+        for j in range(nnb):
+            col = np.nonzero(keep[gi, :, j])[0]
+            indices.extend(int(kk) for kk in col)
+            indptr.append(len(indices))
+    return tuple(indptr), tuple(indices)
+
+
+def _stored_linear_idx(layout: TileSparseLayout) -> np.ndarray:
+    """(nnz,) linear indices of stored tiles into the flat (g*nkb*nnb)
+    dense tile lattice, in payload (column-major) order."""
+    nkb, nnb = layout.nkb, layout.nnb
+    out = np.empty(layout.nnz, np.int64)
+    for c in range(layout.g * nnb):
+        gi, j = divmod(c, nnb)
+        lo, hi = layout.indptr[c], layout.indptr[c + 1]
+        for t, kk in enumerate(layout.indices[lo:hi]):
+            out[lo + t] = (gi * nkb + kk) * nnb + j
+    return out
+
+
+def build_payload(w, layout: TileSparseLayout):
+    """Stored tiles (+ trailing zero tile) for ``w`` under ``layout``.
+
+    Pure jnp (vmap-safe — scanned stacks vmap this over their layer axis):
+    tile the transpose-resolved, zero-padded weight exactly as the packer
+    would, then GATHER only the stored tiles.  Returns
+    ``(payload, scales | None)``; int8 payloads quantize each stored tile
+    symmetrically with its own f32 scale (the trailing zero tile gets
+    scale 1.0 — its value is irrelevant against all-zero data).
+    """
+    if layout.g != 1:
+        tiles = jax.vmap(lambda x: _pack_dense_ref(x, layout))(w)
+    else:
+        tiles = _pack_dense_ref(w, layout)
+    flat = tiles.reshape(layout.g * layout.nkb * layout.nnb,
+                         layout.bk, layout.bn)
+    stored = flat[jnp.asarray(_stored_linear_idx(layout))]
+    zero_tile = jnp.zeros((1, layout.bk, layout.bn), jnp.float32)
+    if layout.per_tile_scales:
+        q, s = _quantize_tiles_ref(stored)
+        payload = jnp.concatenate([q, zero_tile.astype(jnp.int8)])
+        scales = jnp.concatenate([s, jnp.ones((1,), jnp.float32)])
+        return payload, scales.reshape(-1, 1)
+    dt = jnp.dtype(layout.dtype)
+    return jnp.concatenate([stored.astype(dt), zero_tile.astype(dt)]), None
+
+
+def payload_cotangent(dense_ct, layout: TileSparseLayout):
+    """Mask a DENSE weight cotangent to the stored tiles (the sparse op's
+    custom-VJP weight rule): gather the stored tiles of ``dense_ct``; the
+    trailing zero tile is a structural constant and gets a zero cotangent.
+    ``dense_ct`` is in the logical (k, n) / (g, k, n) orientation (the
+    backward GEMMs resolve the transpose), so the recorded source
+    transpose must not be re-applied."""
+    lay = dataclasses.replace(layout, trans_w=False,
+                              dtype=str(jnp.dtype(dense_ct.dtype)))
+    payload, _ = build_payload(dense_ct, lay)
+    return payload
+
+
+def densify_operand(p: TileSparseOperand, *, dtype=None):
+    """Dense (k, n) (grouped: (g, k, n)) array with zeros at pruned tiles —
+    the XLA-backend fallback and the backward pass's contraction operand.
+    int8 payloads dequantize per stored tile; ``dtype`` defaults to the
+    payload dtype (int8: the source dtype recorded at sparsify time)."""
+    layout = p.layout
+    if dtype is None:
+        dtype = layout.orig_dtype if layout.per_tile_scales else layout.dtype
+    tiles = p.payload[: layout.nnz].astype(jnp.float32)
+    if p.scales is not None:
+        tiles = tiles * p.scales[: layout.nnz].reshape(-1, 1, 1)
+    lattice = jnp.zeros(
+        (layout.g * layout.nkb * layout.nnb, layout.bk, layout.bn),
+        jnp.float32,
+    ).at[jnp.asarray(_stored_linear_idx(layout))].set(tiles)
+    full = lattice.reshape(
+        layout.g, layout.nkb, layout.nnb, layout.bk, layout.bn
+    ).transpose(0, 1, 3, 2, 4).reshape(
+        layout.g, layout.nkb * layout.bk, layout.nnb * layout.bn
+    )[:, : layout.k, : layout.n]
+    full = full.astype(dtype)
+    return full if layout.g != 1 else full[0]
+
+
+# --- pattern -> operand -------------------------------------------------------
+
+def sparsify_with_mask(
+    w,
+    plan_or_blocks: Union[GemmPlan, Tuple[int, int]],
+    keep: np.ndarray,
+    *,
+    trans_w: bool = False,
+    dtype=None,
+) -> TileSparseOperand:
+    """Build a :class:`TileSparseOperand` from an explicit tile keep-mask.
+
+    ``keep`` is (nkb, nnb) bool — or (g, nkb, nnb) for a grouped operand —
+    over the (bk, bn) tile lattice of the transpose-resolved weight.  The
+    general entry point the scored sparsifiers funnel into (an externally
+    computed pattern — e.g. from an upstream pruning run — plugs in here).
+    """
+    bk, bn = _blocks_of(plan_or_blocks)
+    grouped = w.ndim == 3
+    k, n, g = _core_dims(w, trans_w=trans_w, grouped=grouped)
+    bk, bn = min(bk, k), min(bn, n)
+    keep = np.asarray(keep, bool)
+    if keep.ndim == 2:
+        keep = keep[None]
+    nkb, nnb = -(-k // bk), -(-n // bn)
+    if keep.shape != (g, nkb, nnb):
+        raise ValueError(
+            f"keep mask shape {keep.shape} != tile lattice {(g, nkb, nnb)}")
+    indptr, indices = _keep_to_structure(keep)
+    layout = TileSparseLayout(
+        k=k, n=n, bk=bk, bn=bn,
+        dtype=str(jnp.dtype(dtype or w.dtype)),
+        orig_dtype=str(jnp.dtype(w.dtype)),
+        indptr=indptr, indices=indices, trans_w=trans_w, g=g,
+    )
+    payload, scales = build_payload(w, layout)
+    return TileSparseOperand(payload, scales, layout)
+
+
+def magnitude_mask(scores: np.ndarray, density: float,
+                   *, prune_zero: bool = True) -> np.ndarray:
+    """Top-``density`` tile mask per group from (g, nkb, nnb) scores."""
+    if not 0.0 <= density <= 1.0:
+        raise ValueError(f"density must be in [0, 1], got {density}")
+    g, nkb, nnb = scores.shape
+    budget = math.ceil(density * nkb * nnb)
+    keep = np.zeros_like(scores, dtype=bool)
+    for gi in range(g):
+        flat = scores[gi].ravel()
+        order = np.argsort(-flat, kind="stable")[:budget]
+        m = np.zeros(flat.shape, bool)
+        m[order] = True
+        if prune_zero:
+            m &= flat > 0.0
+        keep[gi] = m.reshape(nkb, nnb)
+    return keep
+
+
+def nm_mask(scores: np.ndarray, n_keep: int, m_block: int,
+            *, prune_zero: bool = True) -> np.ndarray:
+    """N:M structured mask over the K-tile axis from (g, nkb, nnb) scores."""
+    if not 0 < n_keep <= m_block:
+        raise ValueError(f"need 0 < n_keep <= m_block, got "
+                         f"{n_keep}:{m_block}")
+    g, nkb, nnb = scores.shape
+    keep = np.zeros_like(scores, dtype=bool)
+    for gi in range(g):
+        for j in range(nnb):
+            col = scores[gi, :, j]
+            for lo in range(0, nkb, m_block):
+                chunk = col[lo: lo + m_block]
+                order = np.argsort(-chunk, kind="stable")[:n_keep]
+                m = np.zeros(chunk.shape, bool)
+                m[order] = True
+                if prune_zero:
+                    m &= chunk > 0.0
+                keep[gi, lo: lo + m_block, j] = m
+    return keep
+
+
+def sparsify_magnitude(
+    w,
+    plan_or_blocks: Union[GemmPlan, Tuple[int, int]],
+    *,
+    density: float,
+    trans_w: bool = False,
+    dtype=None,
+    prune_zero: bool = True,
+) -> TileSparseOperand:
+    """Magnitude tile pruning: keep the top ``density`` fraction of (bk, bn)
+    tiles by Frobenius norm (per group for grouped operands), drop the rest
+    from storage AND from the kernel's tile walk."""
+    bk, bn = _blocks_of(plan_or_blocks)
+    scores = tile_scores(w, (bk, bn), trans_w=trans_w)
+    keep = magnitude_mask(scores, density, prune_zero=prune_zero)
+    return sparsify_with_mask(w, (bk, bn), keep, trans_w=trans_w, dtype=dtype)
+
+
+def sparsify_nm(
+    w,
+    plan_or_blocks: Union[GemmPlan, Tuple[int, int]],
+    *,
+    n_keep: int = 2,
+    m_block: int = 4,
+    trans_w: bool = False,
+    dtype=None,
+    prune_zero: bool = True,
+) -> TileSparseOperand:
+    """Structured N:M tile pruning along K: every ``m_block`` consecutive
+    k-tiles of an output column keep their ``n_keep`` strongest — bounded,
+    uniform-depth schedules (the tile-level analogue of 2:4 sparsity)."""
+    bk, bn = _blocks_of(plan_or_blocks)
+    scores = tile_scores(w, (bk, bn), trans_w=trans_w)
+    keep = nm_mask(scores, n_keep, m_block, prune_zero=prune_zero)
+    return sparsify_with_mask(w, (bk, bn), keep, trans_w=trans_w, dtype=dtype)

@@ -8,7 +8,8 @@ Closes the planning loop around the analytic model in ``core/blocking.py``:
                └─ mp_dot / mpgemm_pallas: lookup_plan() consumes tuned
                   plans transparently, analytic fallback on miss.
 
-Public API: :func:`tune_gemm`, :func:`tune_grouped_gemm`, :func:`sweep`,
+Public API: :func:`tune_gemm`, :func:`tune_grouped_gemm`,
+:func:`tune_sparse_gemm`, :func:`sweep`,
 :func:`sweep_axis`,
 :class:`PlanCache`, :func:`get_plan_cache`, :func:`set_plan_cache`,
 :func:`lookup_plan`, :func:`make_key`,
@@ -18,6 +19,7 @@ See docs/autotuning.md for the workflow.
 from repro.tuning.microbench import (
     Measurement, TuneResult, candidate_plans, measure_grouped_plan,
     measure_plan, sweep, sweep_axis, tune_gemm, tune_grouped_gemm,
+    tune_sparse_gemm,
 )
 from repro.tuning.plan_cache import (
     PlanCache, get_plan_cache, lookup_plan, make_key, set_plan_cache,
@@ -27,6 +29,7 @@ from repro.tuning.report import characterization_report, write_report
 __all__ = [
     "Measurement", "TuneResult", "candidate_plans", "measure_grouped_plan",
     "measure_plan", "sweep", "sweep_axis", "tune_gemm", "tune_grouped_gemm",
+    "tune_sparse_gemm",
     "PlanCache", "get_plan_cache", "lookup_plan", "make_key",
     "set_plan_cache",
     "characterization_report", "write_report",

@@ -464,6 +464,102 @@ def tune_gemm(
     return _persist_best(key, measurements, cache, save)
 
 
+# --- tile-sparse instances ----------------------------------------------------
+
+def tune_sparse_gemm(
+    m: int,
+    a,
+    b_sparse,
+    *,
+    out_dtype=None,
+    trans_a: bool = False,
+    epilogue: Optional[EpilogueSpec] = None,
+    mode: str = "auto",
+    iters: int = 3,
+    warmup: int = 1,
+    hw: HardwareSpec = DEFAULT_HW,
+    cache: Optional[PlanCache] = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """:func:`tune_gemm` for a tile-sparse operand (repro.sparse).
+
+    The stored-tile layout pins (bn, bk) — the payload's tiling IS the
+    block decision — so the sweep walks only the ``bm`` ladder, measuring
+    the actual sparse launch (``mpgemm_pallas(b_sparse=...)`` — grouped
+    operands go through ``mpgemm_grouped_pallas``): the stored-tile
+    schedule, not a dense proxy.  ``epilogue`` makes the sweep launch the
+    fused spec it will serve (extra gated/residual/C operands synthesized,
+    exactly as in :func:`tune_gemm`).  Winners persist under the FULL key
+    the launch-side resolver (``kernels/mpgemm.py::_layout_plan``) reads
+    back — ``make_key(..., g=layout.g, epilogue=tag,
+    sparsity=layout.tag)`` — so a fused or grouped serving launch sees the
+    tuned plan, not just the linear 2-D case.  In ``modeled`` mode
+    candidates are scored by the density-priced roofline.
+    """
+    from repro.core.blocking import grouped_plan_from_2d, plan_with_blocks
+    layout = b_sparse.layout
+    n, k, g = layout.n, layout.k, layout.g
+    a_dtype = a.dtype if a is not None else layout.dtype
+    n_extra = len(epilogue.extra_operands) if epilogue is not None else 0
+    ep_beta = epilogue.beta if epilogue is not None else 0.0
+    base = plan_gemm(m, n, k, a_dtype, layout.dtype, out_dtype,
+                     beta=ep_beta, extra_mn_inputs=n_extra,
+                     density=layout.density, hw=hw)
+    bm_axis, _, _ = enumerate_block_lattice(m, n, k, a_dtype, layout.dtype,
+                                            hw=hw)
+    budget = int(hw.vmem_bytes * 0.75)
+    cands, seen = [], set()
+    for bm in [base.bm] + list(bm_axis):
+        cand = plan_with_blocks(
+            m, n, k, bm, layout.bn, layout.bk, a_dtype, layout.dtype,
+            out_dtype, "float32" if layout.per_tile_scales else None,
+            beta=ep_beta, extra_mn_inputs=n_extra, density=layout.density,
+            hw=hw, notes="tile-sparse tuned")
+        if cand.bm not in seen:
+            seen.add(cand.bm)
+            cands.append(cand)
+    # Same capacity filter as candidate_plans: an over-budget candidate
+    # cannot allocate its VMEM working set on hardware (and must never win
+    # in modeled mode and get persisted as the served plan).  If the
+    # layout-pinned bk·bn puts EVERY ladder point over budget, keep the
+    # smallest working set so the sweep still returns a layout-compatible
+    # plan rather than crashing.
+    plans = [p for p in cands if p.vmem_bytes <= budget] \
+        or [min(cands, key=lambda p: p.vmem_bytes)]
+    if g != 1:
+        plans = [grouped_plan_from_2d(p, g) for p in plans]
+    resolved = _resolve_mode(mode)
+    if resolved == "modeled":
+        measurements = [measure_plan(None, None, p, mode="modeled", hw=hw)
+                        for p in plans]
+    else:
+        from repro.kernels.mpgemm import (
+            mpgemm_grouped_pallas, mpgemm_pallas,
+        )
+        launch = mpgemm_pallas if g == 1 else mpgemm_grouped_pallas
+        ep_kw = _epilogue_kwargs(epilogue, m, n, plans[0], seed,
+                                 g=None if g == 1 else g)
+        measurements = []
+        for p in plans:
+            def run(p=p):
+                return launch(
+                    a, b_sparse=b_sparse, trans_a=trans_a,
+                    out_dtype=p.out_dtype, plan=p,
+                    interpret=(resolved == "interpret"), **ep_kw)
+            measurements.append(Measurement(
+                plan=p, mode=resolved,
+                wall_us=_time_best(run, iters, warmup),
+                modeled_us=_modeled_us(p, hw)))
+    key = make_key(m, n, k, a_dtype, layout.dtype, out_dtype,
+                   trans_a=trans_a, trans_b=False, beta=ep_beta, hw=hw,
+                   g=g, epilogue=epilogue.tag if epilogue is not None else "",
+                   sparsity=layout.tag)
+    return _persist_best(key, measurements, cache, save,
+                         extra_meta={"sparsity": layout.tag,
+                                     "density": layout.density, "g": g})
+
+
 # --- grouped / batched instances ---------------------------------------------
 
 def measure_grouped_plan(

@@ -85,6 +85,7 @@ def make_key(
     g: int = 1,
     layout: str = "",
     epilogue: str = "",
+    sparsity: str = "",
 ) -> str:
     """Canonical cache key for one logical GEMM instance.
 
@@ -104,16 +105,24 @@ def make_key(
     epilogues stream extra (M, N) operands, which changes the measured
     optimum, so fused and unfused tunings must never collide either.  The
     linear family tags as ``""``, keeping pre-registry keys byte-stable.
+
+    ``sparsity`` tags a tile-sparse B operand
+    (``repro.sparse.TileSparseLayout.tag``): the sparse walk replaces the
+    dense K grid with a stored-tile schedule, so its measured optimum is a
+    different animal again — sparse and dense tunings must never collide,
+    and neither must two different sparsity patterns.  Dense keys (the
+    empty tag) stay byte-identical to the existing schema.
     """
     a_dtype, b_dtype, out_dtype, _ = _resolve_dtypes(a_dtype, b_dtype, out_dtype)
     group = f"g{g}|" if g != 1 else ""
     lay = f"|lay={layout}" if layout else ""
     ep = f"|ep={epilogue}" if epilogue else ""
+    sp = f"|sp={sparsity}" if sparsity else ""
     return (
         f"{group}m{m}n{n}k{k}"
         f"|a={a_dtype}|b={b_dtype}|out={out_dtype}"
         f"|ta={int(trans_a)}|tb={int(trans_b)}|beta={int(beta != 0.0)}"
-        f"|hw={hw.name}{lay}{ep}"
+        f"|hw={hw.name}{lay}{ep}{sp}"
     )
 
 
@@ -303,6 +312,7 @@ def lookup_plan(
     g: int = 1,
     layout: str = "",
     epilogue: str = "",
+    sparsity: str = "",
 ) -> Optional[GemmPlan]:
     """Tuned plan for this GEMM instance, or None (miss / cache disabled).
 
@@ -310,7 +320,8 @@ def lookup_plan(
     (``kernels/mpgemm.py::mpgemm_pallas_spec``), through which every
     ``mp_dot`` / ``mp_dot_grouped`` flows.  ``g > 1`` selects the
     grouped-instance namespace; ``layout`` the packed-operand namespace;
-    ``epilogue`` the fused-epilogue namespace (see :func:`make_key`).
+    ``epilogue`` the fused-epilogue namespace; ``sparsity`` the
+    tile-sparse namespace (see :func:`make_key`).
     """
     cache = get_plan_cache()
     if cache is None:
@@ -318,5 +329,5 @@ def lookup_plan(
     return cache.get(make_key(
         m, n, k, a_dtype, b_dtype, out_dtype,
         trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw, g=g,
-        layout=layout, epilogue=epilogue,
+        layout=layout, epilogue=epilogue, sparsity=sparsity,
     ))

@@ -308,6 +308,24 @@ def test_cache_persists_across_instances(rng, tmp_path):
     assert len(fresh) == 0 and key not in PackedWeightCache(path)
 
 
+def test_cache_disk_roundtrip_preserves_bfloat16(rng, tmp_path):
+    """Regression (PR 5): numpy's npz writes extension dtypes (bfloat16)
+    as raw void records, which made every DISK hit of a bf16 payload fail
+    to reconstruct and silently repack.  The layout's recorded dtype must
+    restore the payload losslessly across processes."""
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    path = tmp_path / "packed"
+    p0 = PackedWeightCache(path).get_or_pack("w", w, BLOCKS,
+                                             dtype="bfloat16", backend="xla")
+    fresh = PackedWeightCache(path)           # new process stand-in
+    p1 = fresh.get_or_pack("w", w, BLOCKS, dtype="bfloat16", backend="xla")
+    assert (fresh.hits, fresh.misses) == (1, 0)
+    assert p1.payload.dtype == jnp.bfloat16
+    assert np.array_equal(
+        np.asarray(p0.payload, np.float32), np.asarray(p1.payload,
+                                                       np.float32))
+
+
 # --- pack_params tree walker -------------------------------------------------
 
 def test_pack_params_walks_dense_moe_and_stacked(rng):

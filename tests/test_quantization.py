@@ -1,5 +1,6 @@
 """Static int8 weight quantization (core/quantization.py) + mp_dot
-integration."""
+integration, plus the numeric edge cases: all-zero tensors/tiles (the
+scale-0 guard), subnormal inputs, and round-trips at tile boundaries."""
 import numpy as np
 import pytest
 
@@ -12,6 +13,7 @@ from repro.core.quantization import (
     dequantize_tensor, is_quantized, quantize_params, quantize_tensor,
 )
 from repro.models.transformer import build_model
+from repro.packing import pack_operand, unpack_operand
 
 
 def test_quantize_roundtrip(rng):
@@ -61,3 +63,72 @@ def test_quantized_model_generates(rng):
     assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.5
     d_q, _ = model.decode_step(pq, toks[:, 16:17], c_q, jnp.int32(16))
     assert bool(jnp.all(jnp.isfinite(d_q[:, :cfg.vocab])))
+
+
+# --- numeric edge cases -------------------------------------------------------
+
+def test_all_zero_tensor_scale_guard():
+    """amax == 0 must never produce a 0 (or NaN-generating) scale: the
+    1e-8 floor keeps dequant finite and exactly zero."""
+    wd = quantize_tensor(jnp.zeros((32, 16), jnp.float32))
+    assert float(wd["scale"]) > 0
+    back = dequantize_tensor(wd, jnp.float32)
+    assert np.all(np.asarray(back) == 0)
+    assert bool(jnp.all(jnp.isfinite(back)))
+
+
+def test_all_zero_tile_per_tile_scale_guard(rng):
+    """Per-tile quantization (packing + sparse payloads) hits the same
+    guard PER TILE: a weight with one all-zero tile must quantize with
+    finite positive scales everywhere and dequantize that tile to zero."""
+    w = np.asarray(rng.standard_normal((32, 16)), np.float32)
+    w[0:16, 0:8] = 0.0
+    for backend in ("xla", "interpret"):
+        p = pack_operand(jnp.asarray(w), (16, 8), dtype="int8",
+                         backend=backend)
+        scales = np.asarray(p.scales)
+        assert np.all(scales > 0) and np.all(np.isfinite(scales))
+        u = np.asarray(unpack_operand(p, backend=backend))
+        assert np.all(u[0:16, 0:8] == 0)
+        assert np.all(np.isfinite(u))
+    # the tile-sparse int8 payload path shares the guard
+    from repro.sparse import densify_operand, sparsify_with_mask
+    sp = sparsify_with_mask(jnp.asarray(w), (16, 8),
+                            np.ones((2, 2), bool), dtype="int8")
+    assert np.all(np.asarray(sp.scales) > 0)
+    d = np.asarray(densify_operand(sp))
+    assert np.all(d[0:16, 0:8] == 0) and np.all(np.isfinite(d))
+
+
+def test_subnormal_inputs_quantize_to_zero_not_nan():
+    """Subnormal weights sit below the scale floor: they must flush to
+    zero through the round-trip (never inf/NaN from a denormal divide)."""
+    tiny = np.full((16, 16), 1e-42, np.float32)   # f32 subnormal range
+    wd = quantize_tensor(jnp.asarray(tiny))
+    assert bool(jnp.all(jnp.isfinite(wd["scale"])))
+    back = np.asarray(dequantize_tensor(wd, jnp.float32))
+    assert np.all(np.isfinite(back)) and np.abs(back).max() <= 1e-8
+    # mp_dot on a subnormal-weight dict stays finite
+    x = jnp.ones((4, 16), jnp.bfloat16)
+    y = mp_dot(x, wd, policy="bf16")
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_int8_roundtrip_at_tile_boundaries(rng):
+    """Non-multiple (k, n) shapes: the valid region of every EDGE tile must
+    round-trip within its own tile's quantization step, and the pad region
+    must stay exactly zero (the no-B-predication contract)."""
+    k, n, bk, bn = 33, 17, 16, 8
+    w = np.asarray(rng.standard_normal((k, n)), np.float32)
+    p = pack_operand(jnp.asarray(w), (bk, bn), dtype="int8", backend="xla")
+    u = np.asarray(unpack_operand(p, backend="xla"), np.float32)
+    scales = np.asarray(p.scales)
+    for ti in range(p.layout.nkb):
+        for tj in range(p.layout.nnb):
+            r0, c0 = ti * bk, tj * bn
+            blk = slice(r0, min(r0 + bk, k)), slice(c0, min(c0 + bn, n))
+            step = scales[ti, tj] * 0.51
+            assert np.abs(u[blk] - w[blk]).max() <= step
+    tiles = np.asarray(p.payload)
+    assert np.all(tiles[-1, :, k % bk:, :] == 0)
+    assert np.all(tiles[:, -1, :, n % bn:] == 0)

@@ -1,0 +1,660 @@
+"""Tile-sparse subsystem: layout/schedule invariants, sparsifier patterns,
+sparse-vs-dense-masked parity through mp_dot/mp_dot_grouped (fwd + bwd, all
+policies, every registry epilogue, both backends), the tile-visit trace
+gate, density-aware planning, the sparsity plan-key namespace, the
+packed-weight-cache no-alias regression, and the sparsify_params walker."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import plan_gemm
+from repro.core.gemm import mp_dot, mp_dot_grouped
+from repro.kernels.mpgemm import mpgemm_grouped_pallas, mpgemm_pallas
+from repro.packing import (
+    PackedWeightCache, make_weight_key, pack_operand,
+)
+from repro.sparse import (
+    TileSparseLayout, TileSparseOperand, build_schedule, densify_operand,
+    is_sparse, magnitude_mask, nm_mask, payload_cotangent, sparsify_magnitude,
+    sparsify_nm, sparsify_params, sparsify_with_mask, tile_scores,
+    sparse_param_density,
+)
+from repro.tuning import make_key
+
+G, M, K, N = 3, 24, 40, 24
+BLOCKS = (16, 8)   # (bk, bn) -> lattice (nkb, nnb) = (3, 3)
+
+
+@pytest.fixture
+def ops(rng):
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    return x, w
+
+
+@pytest.fixture
+def gops(rng):
+    x = jnp.asarray(rng.standard_normal((G, M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((G, K, N)), "float32")
+    return x, w
+
+
+def _sp(w, density=0.5, **kw):
+    return sparsify_magnitude(w, BLOCKS, density=density, **kw)
+
+
+# --- layout / schedule invariants --------------------------------------------
+
+def test_layout_properties(ops):
+    _, w = ops
+    sp = _sp(w)
+    lay = sp.layout
+    assert (lay.nkb, lay.nnb) == (3, 3)
+    assert lay.nnz == 5                   # ceil(0.5 * 9)
+    assert lay.ntiles == 9
+    assert lay.density == pytest.approx(5 / 9)
+    assert sp.payload.shape == (lay.nnz + 1, 16, 8)
+    # trailing zero tile is exactly zero
+    assert np.all(np.asarray(sp.payload[-1]) == 0)
+
+
+def test_layout_validation():
+    mk = dict(k=32, n=16, bk=16, bn=8, dtype="float32",
+              orig_dtype="float32")
+    with pytest.raises(ValueError, match="indptr must have"):
+        TileSparseLayout(**mk, indptr=(0, 1), indices=(0,))
+    with pytest.raises(ValueError, match="end at len"):
+        TileSparseLayout(**mk, indptr=(0, 1, 1), indices=())
+    with pytest.raises(ValueError, match="outside"):
+        TileSparseLayout(**mk, indptr=(0, 1, 1), indices=(5,))
+    with pytest.raises(ValueError, match="ascending"):
+        TileSparseLayout(**mk, indptr=(0, 2, 2), indices=(1, 1))
+
+
+def test_schedule_covers_every_column(ops):
+    _, w = ops
+    keep = np.zeros((3, 3), bool)
+    keep[0, 0] = keep[2, 0] = keep[1, 2] = True   # column 1 EMPTY
+    sp = sparsify_with_mask(w, BLOCKS, keep)
+    lay = sp.layout
+    assert lay.nnz == 3 and lay.schedule_len == 4  # +1 anchor
+    s = build_schedule(lay)
+    assert sorted(set(s.jj.tolist())) == [0, 1, 2]  # every column visited
+    # anchor of the empty column points at the zero tile
+    anchor = int(np.nonzero(s.jj == 1)[0][0])
+    assert s.slot[anchor] == lay.nnz
+    # first/last flags partition the walk into per-column runs
+    assert s.first.sum() == s.last.sum() == 3
+
+
+def test_tag_separates_patterns(ops):
+    _, w = ops
+    a = _sp(w, density=0.5)
+    b = _sp(w, density=0.8)
+    keep = np.zeros((3, 3), bool)
+    keep[np.unravel_index(range(5), (3, 3))] = True  # 5 tiles, diff pattern
+    c = sparsify_with_mask(w, BLOCKS, keep)
+    assert a.layout.tag != b.layout.tag
+    assert a.layout.nnz == c.layout.nnz
+    assert a.layout.tag != c.layout.tag   # same nnz, different pattern
+
+
+# --- sparsifiers --------------------------------------------------------------
+
+def test_magnitude_keeps_strongest_tiles(rng):
+    w = np.ones((K, N), np.float32) * 0.01
+    w[16:32, 8:16] = 5.0     # tile (1,1)
+    w[0:16, 16:24] = 3.0     # tile (0,2)
+    sp = sparsify_magnitude(jnp.asarray(w), BLOCKS, density=2 / 9)
+    assert sp.layout.nnz == 2
+    d = np.asarray(densify_operand(sp))
+    assert np.all(d[16:32, 8:16] == 5.0) and np.all(d[0:16, 16:24] == 3.0)
+    assert np.all(d[0:16, 0:8] == 0)
+
+
+def test_magnitude_prunes_hard_zero_tiles(ops):
+    _, w = ops
+    wz = np.asarray(w).copy()
+    wz[0:16, 0:8] = 0.0
+    sp = sparsify_magnitude(jnp.asarray(wz), BLOCKS, density=1.0)
+    assert sp.layout.nnz == 8  # the zero tile dropped even at density 1
+
+
+def test_nm_structure(rng):
+    w = jnp.asarray(rng.standard_normal((64, 16)), "float32")  # nkb=4, nnb=2
+    sp = sparsify_nm(w, BLOCKS, n_keep=1, m_block=2)
+    lay = sp.layout
+    # every column: 2 chunks of 2 k-tiles, 1 kept each -> 2 per column
+    for c in range(lay.nnb):
+        kept = lay.indices[lay.indptr[c]: lay.indptr[c + 1]]
+        assert len(kept) == 2
+        assert sum(1 for kk in kept if kk < 2) == 1  # one per m-block chunk
+    with pytest.raises(ValueError, match="n_keep"):
+        nm_mask(np.ones((1, 4, 2)), 3, 2)
+
+
+def test_densify_equals_masked_reference(ops):
+    _, w = ops
+    keep = magnitude_mask(tile_scores(w, BLOCKS), 0.5)
+    sp = sparsify_with_mask(w, BLOCKS, keep)
+    ref = np.zeros((K, N), np.float32)
+    wnp = np.asarray(w)
+    for kk in range(3):
+        for j in range(3):
+            if keep[0, kk, j]:
+                ref[kk * 16:(kk + 1) * 16, j * 8:(j + 1) * 8] = \
+                    wnp[kk * 16:(kk + 1) * 16, j * 8:(j + 1) * 8]
+    np.testing.assert_array_equal(np.asarray(densify_operand(sp)), ref)
+
+
+def test_trans_w_resolved(ops):
+    x, w = ops
+    wt = jnp.asarray(np.asarray(w).T)              # stored (N, K)
+    sp = sparsify_magnitude(wt, BLOCKS, density=0.6, trans_w=True)
+    y = mp_dot(x, sp, policy="fp32", trans_w=True, backend="interpret")
+    ref = np.asarray(x) @ np.asarray(densify_operand(sp))
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5)
+    with pytest.raises(ValueError, match="trans_w"):
+        mp_dot(x, sp, policy="fp32", trans_w=False, backend="interpret")
+
+
+# --- sparse vs dense-masked parity (fwd) -------------------------------------
+
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+@pytest.mark.parametrize("policy,pdt", [("fp32", "float32"),
+                                        ("bf16", "bfloat16"),
+                                        ("int8", "int8")])
+def test_mp_dot_sparse_matches_masked_dense(ops, policy, pdt, backend):
+    """The acceptance gate: mp_dot(b_sparse=...) == dense mp_dot on the
+    stored tiles, within policy tolerance, forward."""
+    x, w = ops
+    sp = _sp(w, dtype=pdt)
+    wm = densify_operand(sp)
+    y = np.asarray(mp_dot(x, b_sparse=sp, policy=policy, backend=backend),
+                   np.float32)
+    yd = np.asarray(mp_dot(x, wm, policy=policy, backend=backend),
+                    np.float32)
+    ref = np.asarray(x) @ np.asarray(wm, np.float32)
+    if policy == "fp32":
+        np.testing.assert_allclose(y, ref, atol=1e-5)
+    elif policy == "bf16":
+        np.testing.assert_allclose(y, ref, atol=0.15)
+    else:
+        assert np.abs(y - ref).max() < 0.05 * np.abs(ref).max() + 1e-6
+    assert np.abs(y - yd).max() <= max(1e-5, 0.05 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("kind,act", [
+    ("linear", "relu"), ("gated", "silu"), ("residual", "gelu"),
+])
+@pytest.mark.parametrize("grouped", [False, True])
+def test_sparse_epilogue_parity(rng, ops, gops, kind, act, grouped):
+    """Sparse composes with every registry epilogue, 2-D and grouped."""
+    x, w = gops if grouped else ops
+    lead = (G,) if grouped else ()
+    e = jnp.asarray(rng.standard_normal(lead + (M, N)), "float32")
+    sp = _sp(w, density=0.6)
+    wm = densify_operand(sp)
+    kw = {"gate": e} if kind == "gated" else (
+        {"residual": e} if kind == "residual" else {})
+    op = mp_dot_grouped if grouped else mp_dot
+    y = op(x, sp, policy="fp32", backend="interpret", activation=act, **kw)
+    yd = op(x, wm, policy="fp32", backend="interpret", activation=act, **kw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yd), atol=1e-5)
+
+
+def test_kernel_wrapper_epilogue_combo(rng, ops):
+    """mpgemm_pallas(b_sparse=) with bias + beta*C + activation."""
+    x, w = ops
+    sp = _sp(w)
+    wm = np.asarray(densify_operand(sp))
+    bias = jnp.asarray(rng.standard_normal((N,)), "float32")
+    cmat = jnp.asarray(rng.standard_normal((M, N)), "float32")
+    y = mpgemm_pallas(x, b_sparse=sp, c=cmat, bias=bias, beta=0.5,
+                      activation="relu", interpret=True)
+    ref = np.maximum(np.asarray(x) @ wm + np.asarray(bias)[None], 0) \
+        + 0.5 * np.asarray(cmat)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5)
+
+
+def test_empty_column_still_gets_epilogue(rng, ops):
+    """A fully pruned output column must still run bias/activation."""
+    x, w = ops
+    keep = np.ones((3, 3), bool)
+    keep[:, 1] = False
+    sp = sparsify_with_mask(w, BLOCKS, keep)
+    bias = jnp.asarray(rng.standard_normal((N,)), "float32")
+    y = np.asarray(mp_dot(x, sp, bias=bias, policy="fp32",
+                          backend="interpret", activation="relu"))
+    ref = np.maximum(
+        np.asarray(x) @ np.asarray(densify_operand(sp))
+        + np.asarray(bias)[None], 0)
+    np.testing.assert_allclose(y, ref, atol=1e-5)
+    # the empty column is pure epilogue-of-zero
+    np.testing.assert_allclose(
+        y[:, 8:16],
+        np.broadcast_to(np.maximum(np.asarray(bias)[8:16], 0), (M, 8)),
+        atol=1e-6)
+
+
+def test_fully_empty_operand(ops):
+    x, w = ops
+    sp = sparsify_with_mask(w, BLOCKS, np.zeros((3, 3), bool))
+    assert sp.layout.nnz == 0 and sp.layout.schedule_len == 3
+    y = mp_dot(x, sp, policy="fp32", backend="interpret")
+    assert np.all(np.asarray(y) == 0)
+
+
+# --- grouped ------------------------------------------------------------------
+
+def test_grouped_sparse_matches_masked_dense(gops):
+    x, w = gops
+    sp = _sp(w, density=0.4)
+    wm = densify_operand(sp)
+    y = mp_dot_grouped(x, b_sparse=sp, policy="fp32", backend="interpret")
+    ref = np.einsum("gmk,gkn->gmn", np.asarray(x), np.asarray(wm))
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5)
+
+
+def test_grouped_ragged_masking(gops):
+    x, w = gops
+    sp = _sp(w, density=0.4)
+    sizes = jnp.asarray([M, M // 2, 0], jnp.int32)
+    y = np.asarray(mp_dot_grouped(x, sp, policy="fp32", backend="interpret",
+                                  group_sizes=sizes))
+    assert np.all(y[2] == 0) and np.all(y[1, M // 2:] == 0)
+    assert np.any(y[1, : M // 2] != 0)
+
+
+def test_grouped_wrapper_and_group_mismatch(gops):
+    x, w = gops
+    sp = _sp(w, density=0.5)
+    y = mpgemm_grouped_pallas(x, b_sparse=sp, interpret=True)
+    assert y.shape == (G, M, N)
+    with pytest.raises(ValueError, match="group mismatch"):
+        mp_dot_grouped(x[:2], sp, backend="interpret")
+    with pytest.raises(ValueError, match="use mpgemm_grouped_pallas"):
+        mpgemm_pallas(x[0], b_sparse=sp, interpret=True)
+
+
+# --- gradients ----------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,tol", [("fp32", 1e-4), ("bf16", 0.3)])
+def test_grad_masked_to_stored_tiles(ops, policy, tol):
+    """Backward acceptance gate: payload cotangent == dense gradient
+    gathered on the stored tiles; pruned tiles / the anchor tile get none;
+    dx matches the dense path."""
+    x, w = ops
+    pdt = "float32" if policy == "fp32" else "bfloat16"
+    sp = _sp(w, dtype=pdt)
+    wm = densify_operand(sp)
+
+    def loss_sparse(payload, x):
+        op = TileSparseOperand(payload, None, sp.layout)
+        y = mp_dot(x, op, policy=policy, backend="interpret")
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    def loss_dense(wm, x):
+        y = mp_dot(x, wm, policy=policy, backend="interpret")
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    gp, gx = jax.grad(loss_sparse, argnums=(0, 1))(sp.payload, x)
+    gw, gxd = jax.grad(loss_dense, argnums=(0, 1))(wm, x)
+    gw_masked = payload_cotangent(gw.astype(gp.dtype), sp.layout)
+    np.testing.assert_allclose(np.asarray(gp, np.float32),
+                               np.asarray(gw_masked, np.float32), atol=tol)
+    assert np.all(np.asarray(gp[-1]) == 0)          # anchor tile frozen
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gxd), atol=tol)
+
+
+def test_grad_through_gated_epilogue(rng, ops):
+    x, w = ops
+    sp = _sp(w)
+    gate = jnp.asarray(rng.standard_normal((M, N)), "float32")
+    wm = densify_operand(sp)
+
+    def f(op_or_w, gate):
+        return jnp.sum(mp_dot(x, op_or_w, policy="fp32",
+                              backend="interpret", activation="silu",
+                              gate=gate) ** 2)
+
+    gs, ggs = jax.grad(f, argnums=(0, 1))(sp, gate)
+    gd, ggd = jax.grad(f, argnums=(0, 1))(wm, gate)
+    np.testing.assert_allclose(np.asarray(ggs), np.asarray(ggd), atol=1e-4)
+    masked = payload_cotangent(gd, sp.layout)
+    np.testing.assert_allclose(np.asarray(gs.payload), np.asarray(masked),
+                               atol=1e-4)
+
+
+def test_int8_payload_frozen(ops):
+    x, w = ops
+    sp8 = _sp(w, dtype="int8")
+
+    def loss(op, x):
+        return jnp.sum(mp_dot(x, op, policy="bf16",
+                              backend="interpret").astype(jnp.float32))
+
+    g, gx = jax.grad(loss, argnums=(0, 1), allow_int=True)(sp8, x)
+    assert g.payload.dtype == jax.dtypes.float0
+    assert np.all(np.asarray(g.scales) == 0)
+    assert bool(jnp.all(jnp.isfinite(gx)))
+
+
+def test_grouped_grad(gops):
+    x, w = gops
+    sp = _sp(w, density=0.5)
+    wm = densify_operand(sp)
+
+    def f(op_or_w):
+        return jnp.sum(mp_dot_grouped(x, op_or_w, policy="fp32",
+                                      backend="interpret") ** 2)
+
+    gs = jax.grad(f)(sp)
+    gd = jax.grad(f)(wm)
+    masked = payload_cotangent(gd, sp.layout)
+    np.testing.assert_allclose(np.asarray(gs.payload), np.asarray(masked),
+                               atol=1e-4)
+
+
+# --- the tile-visit gate ------------------------------------------------------
+
+def _sparse_grid(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+
+    def find(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                return eqn.params["grid_mapping"].grid
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                g = find(sub)
+                if g is not None:
+                    return g
+        return None
+
+    return find(jaxpr)
+
+
+def test_traced_grid_visits_only_stored_tiles(ops):
+    """The jaxpr proof: the sparse launch's grid is (M/bm, schedule_len) —
+    pruned tiles are not in the iteration space at all."""
+    x, w = ops
+    sp = _sp(w, density=0.5)
+
+    def f(x, payload):
+        op = TileSparseOperand(payload, None, sp.layout)
+        return mp_dot(x, op, policy="fp32", backend="interpret")
+
+    grid = _sparse_grid(f, x, sp.payload)
+    assert grid is not None
+    m_blocks, visits = grid
+    assert visits == sp.layout.schedule_len == 5
+    # dense K grid on the same lattice would visit nkb * nnb = 9 tiles
+    assert visits < sp.layout.ntiles
+
+
+def test_traced_grid_shrinks_with_density(ops):
+    x, w = ops
+    visits = []
+    for d in (1.0, 0.6, 0.3):
+        sp = _sp(w, density=d)
+
+        def f(x, payload, sp=sp):
+            op = TileSparseOperand(payload, None, sp.layout)
+            return mp_dot(x, op, policy="fp32", backend="interpret")
+
+        visits.append(_sparse_grid(f, x, sp.payload)[1])
+    assert visits[0] > visits[1] > visits[2]
+
+
+# --- planning / tuning --------------------------------------------------------
+
+def test_density_priced_plan():
+    dense = plan_gemm(256, 512, 1024, "bfloat16")
+    sparse = plan_gemm(256, 512, 1024, "bfloat16", density=0.25)
+    assert sparse.hbm_bytes < dense.hbm_bytes
+    assert sparse.flops == dense.flops // 4
+    assert "density=0.25" in sparse.notes
+    # default stays byte-stable
+    assert plan_gemm(256, 512, 1024, "bfloat16").hbm_bytes == dense.hbm_bytes
+
+
+def test_make_key_sparsity_namespace(ops):
+    _, w = ops
+    sp = _sp(w)
+    base = make_key(M, N, K, "float32")
+    tagged = make_key(M, N, K, "float32", sparsity=sp.layout.tag)
+    assert tagged != base and tagged.endswith(f"|sp={sp.layout.tag}")
+    assert make_key(M, N, K, "float32", sparsity="") == base
+    other = _sp(w, density=0.8)
+    assert tagged != make_key(M, N, K, "float32", sparsity=other.layout.tag)
+
+
+def test_tune_sparse_gemm_closes_the_loop(ops):
+    """tune_sparse_gemm persists under the sparsity-namespaced key, with
+    blocks pinned to the stored-tile layout, and the launch reads it back
+    (proven by poisoning the analytic planner: a hit never calls it)."""
+    import repro.kernels.mpgemm as km
+    from repro.tuning import PlanCache, set_plan_cache, tune_sparse_gemm
+    x, w = ops
+    sp = _sp(w)
+    cache = PlanCache(None)
+    r = tune_sparse_gemm(M, x, sp, mode="modeled", cache=cache, save=False)
+    assert r.key.endswith(f"|sp={sp.layout.tag}")
+    assert (r.best.plan.bn, r.best.plan.bk) == (sp.layout.bn, sp.layout.bk)
+    assert r.best.plan.flops == int(2 * M * N * K * sp.layout.density)
+    prev = set_plan_cache(cache)
+    real_plan_gemm = km.plan_gemm
+
+    def poisoned(*a, **k):
+        raise AssertionError("analytic planner called despite tuned plan")
+
+    try:
+        km.plan_gemm = poisoned
+        y = mp_dot(x, sp, policy="fp32", backend="interpret")
+        ref = np.asarray(x) @ np.asarray(densify_operand(sp))
+        np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5)
+    finally:
+        km.plan_gemm = real_plan_gemm
+        set_plan_cache(prev)
+
+
+def test_tune_sparse_gemm_fused_and_grouped_keys(rng, ops, gops):
+    """Regression (review): the tuned key must carry the SAME epilogue/g
+    components the launch-side lookup uses — a gated-epilogue or grouped
+    sparse launch must consume its tuned plan, not miss to the analytic
+    fallback."""
+    import repro.kernels.mpgemm as km
+    from repro.core.gemm_spec import EpilogueSpec
+    from repro.tuning import PlanCache, set_plan_cache, tune_sparse_gemm
+    x, w = ops
+    gx, gw = gops
+    gate = jnp.asarray(rng.standard_normal((M, N)), "float32")
+    ep = EpilogueSpec(kind="gated", activation="silu")
+    sp = _sp(w)
+    spg = _sp(gw, density=0.5)
+    cache = PlanCache(None)
+    r_ep = tune_sparse_gemm(M, x, sp, epilogue=ep, mode="modeled",
+                            cache=cache, save=False)
+    assert f"|ep={ep.tag}|" in r_ep.key + "|"
+    assert f"|sp={sp.layout.tag}" in r_ep.key
+    r_g = tune_sparse_gemm(M, gx, spg, mode="modeled", cache=cache,
+                           save=False)
+    assert r_g.key.startswith(f"g{G}|") and r_g.best.plan.g == G
+    prev = set_plan_cache(cache)
+    real_plan_gemm = km.plan_gemm
+
+    def poisoned(*a, **k):
+        raise AssertionError("analytic planner called despite tuned plan")
+
+    yd = mp_dot(x, densify_operand(sp), policy="fp32",
+                backend="interpret", activation="silu", gate=gate)
+    ygd = mp_dot_grouped(gx, densify_operand(spg), policy="fp32",
+                         backend="interpret")
+    try:
+        km.plan_gemm = poisoned   # sparse launches must HIT the cache
+        y = mp_dot(x, sp, policy="fp32", backend="interpret",
+                   activation="silu", gate=gate)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yd), atol=1e-5)
+        yg = mp_dot_grouped(gx, spg, policy="fp32", backend="interpret")
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(ygd),
+                                   atol=1e-5)
+    finally:
+        km.plan_gemm = real_plan_gemm
+        set_plan_cache(prev)
+
+
+def test_sparse_plan_pins_layout_blocks(ops):
+    """A plan incompatible with the stored-tile lattice must be rejected."""
+    x, w = ops
+    sp = _sp(w)
+    bad = plan_gemm(M, N, K, "float32")
+    bad = dataclasses.replace(bad, bn=sp.layout.bn * 2)
+    with pytest.raises(ValueError, match="incompatible"):
+        mpgemm_pallas(x, b_sparse=sp, plan=bad, interpret=True)
+
+
+# --- packed-weight cache: sparse/dense no-alias regression --------------------
+
+def test_cache_key_separates_sparse_and_dense(ops):
+    """Regression (PR 5 satellite): sparse-packed and dense-packed payloads
+    of the SAME weight must have distinct cache keys — the layout tag
+    (incl. the sparsity pattern digest) is part of the key."""
+    _, w = ops
+    packed = pack_operand(w, BLOCKS, backend="xla")
+    sp = _sp(w)
+    kd = make_weight_key("mlp/w_up", w, packed.layout)
+    ks = make_weight_key("mlp/w_up", w, sp.layout)
+    assert kd != ks
+    # and two different patterns of the same weight differ too
+    ks2 = make_weight_key("mlp/w_up", w, _sp(w, density=0.8).layout)
+    assert ks != ks2
+
+
+def test_cache_roundtrips_sparse_operand(tmp_path, ops):
+    _, w = ops
+    cache = PackedWeightCache(tmp_path)
+    sp = _sp(w, dtype="int8")
+    built = cache.get_or_build("mlp/w_up", w, sp.layout, lambda: sp)
+    assert built is sp and cache.misses == 1
+    # same layout -> hit from memory
+    again = cache.get_or_build("mlp/w_up", w, sp.layout, lambda: None)
+    assert again is sp and cache.hits == 1
+    # fresh cache object -> disk round trip, type + layout preserved
+    cold = PackedWeightCache(tmp_path)
+    restored = cold.get_or_build(
+        "mlp/w_up", w, sp.layout,
+        lambda: pytest.fail("disk hit expected, build_fn called"))
+    assert is_sparse(restored)
+    assert restored.layout == sp.layout
+    np.testing.assert_array_equal(np.asarray(restored.payload),
+                                  np.asarray(sp.payload))
+    np.testing.assert_allclose(np.asarray(restored.scales),
+                               np.asarray(sp.scales))
+
+
+def test_cache_dense_and_sparse_coexist(tmp_path, ops):
+    _, w = ops
+    cache = PackedWeightCache(tmp_path)
+    packed = cache.get_or_pack("w", w, BLOCKS, backend="xla")
+    sp = _sp(w)
+    sparse = cache.get_or_build("w", w, sp.layout, lambda: sp)
+    assert len(cache) == 2
+    cold = PackedWeightCache(tmp_path)
+    assert not is_sparse(cold.get(make_weight_key("w", w, packed.layout)))
+    assert is_sparse(cold.get(make_weight_key("w", w, sp.layout)))
+
+
+# --- sparsify_params walker ---------------------------------------------------
+
+def test_sparsify_params_tree(rng):
+    d, f, e, L = 32, 64, 4, 2
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    params = {
+        "stack": {
+            "mlp": {
+                "w_up": jax.random.normal(ks[0], (L, d, f)),
+                "w_down": jax.random.normal(ks[1], (L, f, d)),
+            },
+            "moe": {"w_gate": jax.random.normal(ks[2], (L, e, d, f))},
+            "ln1": {"scale": jnp.zeros((L, d))},
+        },
+        "w_up": jax.random.normal(ks[3], (d, f)),
+        "w_gate": jax.random.normal(ks[4], (e, d, f)),   # MoE grouped
+        "embed": jax.random.normal(ks[5], (64, d)),
+        "router": jax.random.normal(ks[6], (d, e)),
+    }
+    out = sparsify_params(params, density=0.5, policy="bf16", cache=None,
+                          blocks=(16, 16))
+    assert is_sparse(out["w_up"]) and out["w_up"].layout.g == 1
+    assert is_sparse(out["w_gate"]) and out["w_gate"].layout.g == e
+    # stacked leaves: leading layer axis on the payload, shared layout
+    st = out["stack"]["mlp"]["w_up"]
+    assert is_sparse(st) and st.payload.shape[0] == L
+    assert st.payload.shape[1] == st.layout.nnz + 1
+    stm = out["stack"]["moe"]["w_gate"]
+    assert is_sparse(stm) and stm.payload.shape[0] == L \
+        and stm.layout.g == e
+    # non-eligible leaves untouched
+    assert not is_sparse(out["embed"]) and not is_sparse(out["router"])
+    assert not is_sparse(out["stack"]["ln1"]["scale"])
+    assert 0.4 <= sparse_param_density(out) <= 0.6
+
+
+def test_sparsify_params_stacked_scan_slices(rng):
+    """A scan over the stacked payload must hand each layer a consumable
+    2-D sparse operand."""
+    d, f, L = 32, 48, 3
+    w = jax.random.normal(jax.random.PRNGKey(1), (L, d, f))
+    out = sparsify_params({"stack": {"w_up": w}}, density=0.5, policy="bf16",
+                          cache=None, blocks=(16, 16))
+    sp = out["stack"]["w_up"]
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((5, d)),
+                    jnp.float32)
+
+    def body(carry, layer_op):
+        y = mp_dot(carry, layer_op, policy="fp32", backend="interpret")
+        return carry, y
+
+    _, ys = jax.lax.scan(body, x, sp)
+    assert ys.shape == (L, 5, f)
+    for i in range(L):
+        per_layer = TileSparseOperand(
+            sp.payload[i], None if sp.scales is None else sp.scales[i],
+            sp.layout)
+        ref = mp_dot(x, per_layer, policy="fp32", backend="interpret")
+        np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(ref),
+                                   atol=1e-5)
+
+
+def test_sparsify_params_uses_cache(rng, ops):
+    _, w = ops
+    cache = PackedWeightCache(None)
+    tree = {"w_up": w}
+    kw = dict(policy="bf16", cache=cache, blocks=BLOCKS)
+    sparsify_params(tree, density=0.5, **kw)
+    assert cache.misses == 1
+    sparsify_params(tree, density=0.5, **kw)
+    assert cache.hits == 1
+    # a different density is a different key -> miss, never an alias
+    sparsify_params(tree, density=0.8, **kw)
+    assert cache.misses == 2
+
+
+# --- op-level validation ------------------------------------------------------
+
+def test_mp_dot_operand_validation(ops):
+    x, w = ops
+    sp = _sp(w)
+    with pytest.raises(ValueError, match="exactly one"):
+        mp_dot(x, w, b_sparse=sp)
+    with pytest.raises(ValueError, match="exactly one"):
+        mp_dot(x)
+    with pytest.raises(ValueError, match="use mp_dot_grouped"):
+        gw = jnp.asarray(np.random.default_rng(0)
+                         .standard_normal((G, K, N)), "float32")
+        mp_dot(x, _sp(gw, density=0.5))
