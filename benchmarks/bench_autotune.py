@@ -20,7 +20,7 @@ to it (env ``REPRO_TUNE_OUT`` overrides the directory), and the usual
 import os
 import tempfile
 
-from benchmarks.common import PAPER_WORKLOADS, emit
+from benchmarks.common import PAPER_WORKLOADS, emit, record
 from repro.tuning import PlanCache, tune_gemm, write_report
 
 # Table III IDs spanning the three regimes: decode-skinny (1), prefill-wide
@@ -61,11 +61,28 @@ def run(mode: str = None, out_dir: str = None, dtype: str = "bfloat16"):
              f"speedup={r.speedup:.3f};"
              f"blocks={'x'.join(map(str, r.best.blocks))};"
              f"moved={int(r.tuned_differs)};mode={r.best.mode}")
+        # Modeled mode is deterministic (speedup == 1 by construction);
+        # measured modes put the sweep numbers in `noisy` only.
+        deterministic = r.best.mode == "modeled"
+        record(f"autotune_{m}x{n}x{k}_{dtype}", "gemm",
+               kind="model" if deterministic else "wall",
+               workload={"m": m, "n": n, "k": k, "dtype": dtype,
+                         "mode": r.best.mode},
+               metrics={"candidates": float(len(r.measurements)),
+                        **({"modeled_speedup": r.speedup}
+                           if deterministic else {})},
+               noisy={} if deterministic else
+               {"best_wall_us": r.best.wall_us,
+                "analytic_wall_us": r.analytic.wall_us,
+                "speedup": r.speedup})
     cache.save()
     report_path = os.path.join(out_dir, "autotune_report.md")
     write_report(results, report_path)
     emit("autotune_cache", 0.0,
          f"entries={len(cache)};cache={cache.path};report={report_path}")
+    record("autotune_cache", "gemm", kind="trace",
+           workload={"mode": mode},
+           metrics={"cache_entries": float(len(cache))})
     return results
 
 

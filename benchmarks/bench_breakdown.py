@@ -11,7 +11,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import PAPER_WORKLOADS, emit, modeled_time_s
+from benchmarks.common import PAPER_WORKLOADS, emit, modeled_time_s, record
 from repro.core.blocking import naive_plan, plan_gemm
 from repro.core.constants import DEFAULT_HW, HardwareSpec
 
@@ -47,7 +47,16 @@ def run(dtype="float32"):
         emit(f"breakdown_{wid:02d}", 0.0,
              f"partition={t0/t1:.2f};wide_loads={t1/t2:.2f};"
              f"online_pack={t2/t3:.2f};total={t0/t3:.2f}")
+        record(f"breakdown_{wid:02d}", "gemm",
+               workload={"paper_workload": wid, "m": m, "n": n, "k": k},
+               metrics={"partition_gain": t0 / t1,
+                        "wide_loads_gain": t1 / t2,
+                        "online_pack_gain": t2 / t3,
+                        "total_gain": t0 / t3})
     for k_, v in gains.items():
+        record(f"breakdown_geomean_{k_}", "gemm",
+               workload={"stage": k_, "workloads": len(PAPER_WORKLOADS)},
+               metrics={"geomean": float(np.exp(np.mean(np.log(v))))})
         emit(f"breakdown_geomean_{k_}", 0.0,
              f"geomean={np.exp(np.mean(np.log(v))):.3f};"
              f"paper_reference={'1.62' if k_=='partition' else '1.17' if k_=='wide_loads' else '~1.0x(limited)'}")

@@ -45,7 +45,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, modeled_time_s, wall_time_us
+from benchmarks.common import emit, modeled_time_s, record, wall_time_us
 from repro.core import config as cfg
 from repro.models.layers import init_swiglu, swiglu_mlp
 
@@ -115,6 +115,12 @@ def run(smoke: bool = False, rows=None):
              f"g={g or 1};gating_bytes={un_b}->{fu_b};"
              f"modeled_us={un_us:.1f}->{fu_us:.1f};"
              f"saved_frac={1 - fu_b / un_b:.2f}")
+        record(f"epilogue_{name}", "gemm",
+               workload={"g": g or 1, "m": m, "d_model": d, "d_ff": f},
+               metrics={"unfused_gating_bytes": float(un_b),
+                        "fused_gating_bytes": float(fu_b),
+                        "fused_modeled_us": fu_us,
+                        "saved_frac": 1 - fu_b / un_b})
     return rows
 
 
@@ -127,6 +133,11 @@ def run_trace_gate(assert_fused: bool = False):
          f"fused_standalone_gating_ops={fused_gate};"
          f"unfused_pallas_calls={unfused_launches};"
          f"unfused_standalone_gating_ops={unfused_gate}")
+    record("epilogue_trace_swiglu", "gemm", kind="trace",
+           metrics={"fused_launches": float(fused_launches),
+                    "fused_gating_ops": float(fused_gate),
+                    "unfused_launches": float(unfused_launches),
+                    "unfused_gating_ops": float(unfused_gate)})
     if assert_fused:
         assert fused_launches == 3, (
             f"fused SwiGLU MLP must be exactly 3 Pallas launches "
@@ -159,6 +170,10 @@ def run_wall_sanity():
     us_unfused = wall_time_us(make(False), params, x, iters=3)
     emit("epilogue_wall_sanity_64x128x256_bf16", us_fused,
          f"unfused_us={us_unfused:.1f};fused_us={us_fused:.1f}")
+    record("epilogue_wall_sanity_64x128x256_bf16", "gemm", kind="wall",
+           workload={"m": 64, "d_model": 128, "d_ff": 256},
+           noisy={"fused_wall_us": us_fused,
+                  "unfused_wall_us": us_unfused})
     return us_unfused, us_fused
 
 

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (
-    MOE_GROUPED_WORKLOADS, PAPER_WORKLOADS, emit, modeled_time_s,
-    wall_time_us,
+    MOE_GROUPED_WORKLOADS, PAPER_WORKLOADS, emit, modeled_time_s, record,
+    record_plan, wall_time_us,
 )
 from repro.core.blocking import (
     grouped_plan_from_2d, naive_plan, plan_gemm, plan_grouped_gemm,
@@ -44,6 +44,15 @@ def run(dtype="float32", wall: bool = True):
              f"modeled_speedup_vs_naive={speedup:.3f};"
              f"blocks=({plan.bm}x{plan.bn}x{plan.bk});cmr={plan.cmr:.1f};"
              f"modeled_us={t_plan*1e6:.1f}")
+        record_plan(f"gemm_workload_{wid:02d}_{dtype}", "gemm", plan,
+                    workload={"paper_workload": wid},
+                    metrics={"modeled_speedup_vs_naive": speedup,
+                             "naive_hbm_bytes": float(naive.hbm_bytes)},
+                    noisy={"wall_us": us} if us else None)
+    record(f"gemm_workloads_geomean_{dtype}", "gemm",
+           workload={"dtype": dtype, "workloads": len(PAPER_WORKLOADS)},
+           metrics={"modeled_speedup_geomean":
+                    float(np.exp(np.mean(np.log(speedups))))})
     emit(f"gemm_workloads_geomean_{dtype}", 0.0,
          f"modeled_speedup_geomean={np.exp(np.mean(np.log(speedups))):.3f}")
     return speedups
@@ -78,6 +87,14 @@ def run_grouped(dtype="bfloat16", wall: bool = True):
              f"g={g};modeled_speedup_vs_naive={speedup:.3f};"
              f"blocks=({plan.bm}x{plan.bn}x{plan.bk});cmr={plan.cmr:.1f};"
              f"modeled_us={t_plan*1e6:.1f}")
+        record_plan(f"moe_grouped_{name}_{dtype}", "gemm", plan,
+                    metrics={"modeled_speedup_vs_naive": speedup,
+                             "naive_hbm_bytes": float(naive.hbm_bytes)},
+                    noisy={"wall_us": us} if us else None)
+    record(f"moe_grouped_geomean_{dtype}", "gemm",
+           workload={"dtype": dtype, "workloads": len(MOE_GROUPED_WORKLOADS)},
+           metrics={"modeled_speedup_geomean":
+                    float(np.exp(np.mean(np.log(speedups))))})
     emit(f"moe_grouped_geomean_{dtype}", 0.0,
          f"modeled_speedup_geomean={np.exp(np.mean(np.log(speedups))):.3f}")
     return speedups

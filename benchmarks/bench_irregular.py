@@ -8,7 +8,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import emit, modeled_time_s
+from benchmarks.common import emit, modeled_time_s, record, record_plan
 from repro.core.blocking import plan_gemm
 from repro.kernels.mpgemm import mpgemm_pallas
 from repro.kernels.ref import mpgemm_ref
@@ -27,6 +27,9 @@ def run(check_kernel: bool = True):
             emit(f"irregular_{m}x{n}", 0.0,
                  f"pad_overhead={waste:.3f};blocks=({plan.bm},{plan.bn},{plan.bk});"
                  f"modeled_ms={t*1e3:.2f};notes={plan.notes or 'aligned'}")
+            record_plan(f"irregular_{m}x{n}", "gemm", plan,
+                        metrics={"pad_overhead": waste,
+                                 "modeled_padded_ms": t * 1e3})
     if check_kernel:
         m, n, kk = 110, 170, 384   # reduced-K predicated correctness probe
         a = jnp.asarray(rng.standard_normal((m, kk)), "float32")
@@ -35,6 +38,9 @@ def run(check_kernel: bool = True):
             np.asarray(mpgemm_pallas(a, b, interpret=True))
             - np.asarray(mpgemm_ref(a, b)))))
         emit("irregular_kernel_check", 0.0, f"maxerr={err:.2e}")
+        record("irregular_kernel_check", "gemm", kind="trace",
+               workload={"m": m, "n": n, "k": kk},
+               metrics={"interpret_check_failures": float(err >= 1e-3)})
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ time on a reference workload — showing why the planner's >=512B constraint
 (the four-Z-register rule) is binding."""
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record
 from repro.core.blocking import plan_gemm
 from repro.core.constants import DEFAULT_HW
 
@@ -24,9 +24,17 @@ def run():
         emit(f"load_granularity_{row_bytes}B", 0.0,
              f"eff_bw_GBps={bw/1e9:.0f};modeled_mem_time_ms={t*1e3:.2f};"
              f"rel_to_1024B={(row_bytes/(row_bytes+512))/(1024/1536):.2f}")
+        record(f"load_granularity_{row_bytes}B", "gemm",
+               workload={"m": m, "n": n, "k": k, "row_bytes": row_bytes},
+               metrics={"eff_bw_GBps": bw / 1e9,
+                        "modeled_mem_time_ms": t * 1e3})
     # the planner's chosen minor spans honor the constraint
     emit("load_granularity_plan_check", 0.0,
          f"bk_bytes={plan.bk*4};bn_bytes={plan.bn*4};min_required=512")
+    record("load_granularity_plan_check", "gemm",
+           workload={"m": m, "n": n, "k": k},
+           metrics={"bk_row_bytes": plan.bk * 4,
+                    "bn_row_bytes": plan.bn * 4})
 
 
 if __name__ == "__main__":

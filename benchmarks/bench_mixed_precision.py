@@ -6,7 +6,7 @@ achieved fraction of each precision's peak — the paper's 94%-of-peak
 claim (their IDs 14, 18) is the reference point, checked on the same IDs."""
 import numpy as np
 
-from benchmarks.common import PAPER_WORKLOADS, emit, modeled_time_s
+from benchmarks.common import PAPER_WORKLOADS, emit, modeled_time_s, record
 from repro.core.blocking import plan_gemm
 from repro.core.constants import DEFAULT_HW
 
@@ -27,6 +27,15 @@ def run():
              f"peak_frac_f32={frac['float32']:.2f};"
              f"peak_frac_bf16={frac['bfloat16']:.2f};"
              f"peak_frac_int8={frac['int8']:.2f}")
+        record(f"mixed_precision_{wid:02d}", "gemm",
+               workload={"paper_workload": wid, "m": m, "n": n, "k": k},
+               metrics={"bf16_speedup_vs_f32":
+                        times["float32"] / times["bfloat16"],
+                        "int8_speedup_vs_bf16":
+                        times["bfloat16"] / times["int8"],
+                        "peak_frac_f32": frac["float32"],
+                        "peak_frac_bf16": frac["bfloat16"],
+                        "peak_frac_int8": frac["int8"]})
     # paper's 94%-of-peak reference cells
     for wid, m, n, k in [PAPER_WORKLOADS[13], PAPER_WORKLOADS[17]]:
         plan = plan_gemm(m, n, k, "int8")
@@ -34,6 +43,10 @@ def run():
         frac = (2 * m * n * k / t) / peaks["int8"]
         emit(f"mixed_precision_peakcheck_id{wid}", 0.0,
              f"int8_peak_fraction={frac:.3f};paper_reference=0.94")
+        record(f"mixed_precision_peakcheck_id{wid}", "gemm",
+               workload={"paper_workload": wid, "m": m, "n": n, "k": k,
+                         "paper_reference": 0.94},
+               metrics={"int8_peak_frac": frac})
 
 
 if __name__ == "__main__":

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (
-    MOE_GROUPED_WORKLOADS, PAPER_WORKLOADS, emit, wall_time_us,
+    MOE_GROUPED_WORKLOADS, PAPER_WORKLOADS, emit, record, wall_time_us,
 )
 from repro.core.blocking import plan_gemm
 from repro.core.gemm import mp_dot, mp_dot_grouped
@@ -102,10 +102,15 @@ def _shapes(m, n, k, g=None):
 
 
 def run(policy: str = "bf16", *, smoke: bool = False, trans_w: bool = False,
-        rows=None):
-    """-> list of per-workload result dicts (also emitted as CSV)."""
+        rows=None, work=None):
+    """-> list of per-workload result dicts (also emitted as CSV).
+
+    ``work`` overrides the workload list (same tuples as PAPER_WORKLOADS);
+    the emit harness uses it to keep the packed-zeros footprint small.
+    """
     rows = rows if rows is not None else []
-    work = PAPER_WORKLOADS[:3] if smoke else PAPER_WORKLOADS
+    if work is None:
+        work = PAPER_WORKLOADS[:3] if smoke else PAPER_WORKLOADS
     pdt = "int8" if policy == "int8" else "bfloat16"
     for wid, m, n, k in work:
         xs, ws = _shapes(_trace_m(m, n, k), n, k)
@@ -141,12 +146,23 @@ def run(policy: str = "bf16", *, smoke: bool = False, trans_w: bool = False,
              f"prep_bytes_per_call={pb_un}->{pb_pk};"
              f"dma_row_bytes={row_un}->{row_pk};"
              f"pack_breakeven_calls={breakeven:.2f}")
+        record(f"packing_{wid:02d}_{policy}{'_t' if trans_w else ''}",
+               "packing", kind="trace",
+               workload={"paper_workload": wid, "m": m, "n": n, "k": k,
+                         "policy": policy, "trans_w": trans_w},
+               metrics={"prep_bytes_unpacked": float(pb_un),
+                        "prep_bytes_packed": float(pb_pk),
+                        "dma_row_bytes_unpacked": float(row_un),
+                        "dma_row_bytes_packed": float(row_pk),
+                        "breakeven_calls": breakeven})
     return rows
 
 
-def run_grouped(policy: str = "bf16", *, smoke: bool = False, rows=None):
+def run_grouped(policy: str = "bf16", *, smoke: bool = False, rows=None,
+                work=None):
     rows = rows if rows is not None else []
-    work = MOE_GROUPED_WORKLOADS[:2] if smoke else MOE_GROUPED_WORKLOADS
+    if work is None:
+        work = MOE_GROUPED_WORKLOADS[:2] if smoke else MOE_GROUPED_WORKLOADS
     pdt = "int8" if policy == "int8" else "bfloat16"
     for name, g, m, n, k in work:
         xs, ws = _shapes(_trace_m(m, n, k), n, k, g)
@@ -178,6 +194,13 @@ def run_grouped(policy: str = "bf16", *, smoke: bool = False, rows=None):
              f"g={g};prep_bytes_per_call={pb_un}->{pb_pk};"
              f"dma_row_bytes={row_un}->{row_pk};"
              f"pack_breakeven_calls={breakeven:.2f}")
+        record(f"packing_moe_{name}_{policy}", "packing", kind="trace",
+               workload={"g": g, "m": m, "n": n, "k": k, "policy": policy},
+               metrics={"prep_bytes_unpacked": float(pb_un),
+                        "prep_bytes_packed": float(pb_pk),
+                        "dma_row_bytes_unpacked": float(row_un),
+                        "dma_row_bytes_packed": float(row_pk),
+                        "breakeven_calls": breakeven})
     return rows
 
 
@@ -198,6 +221,9 @@ def run_wall_sanity():
     us_pk = wall_time_us(f_pk, x, packed, iters=3)
     emit("packing_wall_sanity_64x256x512_bf16", us_pk,
          f"unpacked_us={us_un:.1f};packed_us={us_pk:.1f}")
+    record("packing_wall_sanity_64x256x512_bf16", "packing", kind="wall",
+           workload={"m": 64, "n": 256, "k": 512},
+           noisy={"unpacked_wall_us": us_un, "packed_wall_us": us_pk})
     return us_un, us_pk
 
 

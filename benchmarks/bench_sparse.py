@@ -36,7 +36,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, modeled_time_s, wall_time_us
+from benchmarks.common import emit, modeled_time_s, record, wall_time_us
 from repro.core.blocking import plan_gemm
 from repro.core.gemm import mp_dot
 from repro.kernels.mpgemm import mpgemm_pallas
@@ -72,6 +72,14 @@ def run(policy: str = "bfloat16", rows=None):
             emit(f"sparse_model_{name}_d{d}", us,
                  f"bytes={plan.hbm_bytes};flops={plan.flops};"
                  f"bytes_vs_dense={plan.hbm_bytes / dense.hbm_bytes:.2f}")
+            record(f"sparse_model_{name}_d{d}", "sparse",
+                   workload={"m": m, "n": n, "k": k, "density": d,
+                             "dtype": policy},
+                   metrics={"hbm_bytes": float(plan.hbm_bytes),
+                            "flops": float(plan.flops),
+                            "modeled_us": us,
+                            "density_saving_frac":
+                            1 - plan.hbm_bytes / dense.hbm_bytes})
     return rows
 
 
@@ -119,6 +127,11 @@ def run_trace_gate(assert_gate: bool = False, m_tokens: int = 128):
                  f"grid={grid};tile_visits={grid[-1]};"
                  f"dense_tiles={dense_tiles};nnz={sp.layout.nnz};"
                  f"schedule={sp.layout.schedule_len}")
+            record(f"sparse_trace_{name}_d{d}", "sparse", kind="trace",
+                   workload={"m": m_tokens, "n": n, "k": k, "density": d},
+                   metrics={"tile_visits": float(grid[-1]),
+                            "dense_tiles": float(dense_tiles),
+                            "schedule_len": float(sp.layout.schedule_len)})
             if assert_gate:
                 assert grid[-1] == sp.layout.schedule_len, (
                     f"{name} d={d}: traced grid visits {grid[-1]} tiles, "
@@ -160,6 +173,10 @@ def run_wall(assert_gate: bool = False, m_tokens: int = 1024,
         emit(f"sparse_wall_{name}_d{d}", us,
              f"m={m_tokens};schedule={sp.layout.schedule_len};"
              f"wall_us={us:.0f}")
+        record(f"sparse_wall_{name}_d{d}", "sparse", kind="wall",
+               workload={"m": m_tokens, "n": n, "k": k, "density": d},
+               metrics={"schedule_len": float(sp.layout.schedule_len)},
+               noisy={"wall_us": us})
     if assert_gate:
         assert walls[1.0] * 1.05 > walls[0.5] and \
             walls[0.5] * 1.05 > walls[0.25], (

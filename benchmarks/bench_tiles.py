@@ -10,7 +10,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import emit, modeled_time_s
+from benchmarks.common import emit, modeled_time_s, record
 from repro.core.blocking import modeled_traffic_bytes, plan_gemm
 
 
@@ -27,6 +27,12 @@ def run():
         emit(f"tiles_residency_{m}x{n}x{k}", 0.0,
              f"traffic_ratio_spill_vs_resident={ratio:.2f};"
              f"modeled_speedup={t_spill/t_res:.2f};ksteps={ksteps}")
+        record(f"tiles_residency_{m}x{n}x{k}", "gemm",
+               workload={"m": m, "n": n, "k": k, "dtype": "float32"},
+               metrics={"resident_hbm_bytes": resident,
+                        "spilled_hbm_bytes": spilled,
+                        "modeled_speedup": t_spill / t_res,
+                        "grid_steps_k": ksteps})
 
 
 if __name__ == "__main__":

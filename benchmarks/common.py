@@ -3,8 +3,15 @@
 CPU wall-clock here is a *sanity signal only* (this container has no TPU);
 the graded numbers are the modeled roofline terms derived from the analytic
 planner and the compiled dry-run artifacts (EXPERIMENTS.md §Methodology).
+
+Besides the CSV ``emit`` lines, every bench function reports its numbers
+through :func:`record`, which forwards to the active
+:class:`repro.perf.trajectory.Recorder` when the harness installed one
+(``benchmarks/run.py --emit``) and is a no-op otherwise — standalone
+``python benchmarks/bench_*.py`` runs stay print-only.
 """
 import time
+from typing import Optional
 
 import numpy as np
 
@@ -61,3 +68,52 @@ def modeled_time_s(flops: float, bytes_: float, dtype: str = "bfloat16",
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+# --- structured-record plumbing ----------------------------------------------
+# The harness (benchmarks/run.py --emit) installs a Recorder; bench modules
+# call record(...) unconditionally and the call no-ops when none is active.
+
+_RECORDER = None
+
+
+def set_recorder(recorder) -> Optional[object]:
+    """Install (or clear, with None) the active Recorder; returns the old."""
+    global _RECORDER
+    old, _RECORDER = _RECORDER, recorder
+    return old
+
+
+def get_recorder():
+    return _RECORDER
+
+
+def record(name: str, area: str, *, kind: str = "model", workload=None,
+           metrics=None, noisy=None, plan=None, phases=None) -> None:
+    """Report one structured benchmark result to the active Recorder.
+
+    ``metrics`` are deterministic (modeled/traced — the diff gates them);
+    ``noisy`` holds wall-clock numbers carried for trajectory plots but
+    never compared.  No-op when no Recorder is installed, so bench modules
+    can call this unconditionally.
+    """
+    if _RECORDER is None:
+        return
+    from repro.perf.metrics import WorkloadRecord
+    _RECORDER.add(WorkloadRecord(
+        name=name, area=area, kind=kind, workload=dict(workload or {}),
+        metrics=dict(metrics or {}), noisy=dict(noisy or {}),
+        plan=plan, phases=phases))
+
+
+def record_plan(name: str, area: str, plan, *, source: str = "analytic",
+                workload=None, metrics=None, noisy=None) -> None:
+    """:func:`record` for a GemmPlan-backed number: the record auto-carries
+    the plan's flops / hbm_bytes / cmr / tile_visits / modeled_us plus its
+    blocking provenance.  No-op without an active Recorder."""
+    if _RECORDER is None:
+        return
+    from repro.perf.metrics import record_from_plan
+    _RECORDER.add(record_from_plan(
+        name, area, plan, source=source, workload=workload,
+        metrics=metrics, noisy=noisy))

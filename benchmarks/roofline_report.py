@@ -3,6 +3,8 @@ table (markdown) and a CSV."""
 import json
 import os
 
+from benchmarks.common import record
+
 DRYRUN_DIR = os.path.abspath(os.path.join(
     os.path.dirname(__file__), "..", "experiments", "dryrun"))
 
@@ -56,6 +58,11 @@ def run():
         err = len(rows) - ok - skip
         print(f"roofline_report_{mesh},0.00,cells={len(rows)};ok={ok};"
               f"skip={skip};error={err}")
+        record(f"roofline_report_{mesh}", "gemm", kind="report",
+               workload={"mesh": mesh},
+               metrics={"cells": float(len(rows)), "cells_ok": float(ok),
+                        "cells_skip": float(skip),
+                        "cells_error": float(err)})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,50 @@
+"""Perf-trajectory subsystem: metrics accounting, versioned BENCH_*.json
+emission, baseline diffing, and the offline plan-cache sweep.
+
+The source paper's contribution is a *measured* one — characterization
+drives every design decision — but measurements that die with the process
+can't catch regressions.  This package makes the repo's perf numbers a
+first-class, versioned, diffable artifact:
+
+* :mod:`repro.perf.metrics` — the accounting core: FLOPs / HBM bytes /
+  tile-visit counts for 2-D, grouped, packed, and density-priced sparse
+  GEMMs (cross-checked against ``core/blocking.py``'s traffic model), the
+  llm-profiler-style per-phase fwd/bwd FLOPs breakdown for a model config,
+  and the :class:`~repro.perf.metrics.WorkloadRecord` every benchmark
+  emits.
+* :mod:`repro.perf.trajectory` — versioned-schema ``BENCH_<area>.json``
+  writer/reader with environment stamping, plus the :class:`Recorder`
+  the benchmark harness streams records through.
+* :mod:`repro.perf.diff` — baseline comparison with per-metric relative
+  tolerances, metric-direction awareness (a *faster* time is an
+  improvement, not a change to fail on), and a markdown regression report.
+* :mod:`repro.perf.sweep` — the offline plan-cache sweep: enumerate every
+  shipped (model config × policy × layout × epilogue) GEMM instance from
+  ``configs/`` and pre-populate the PlanCache so first-call serving never
+  plans cold (``python -m repro.perf.sweep``).
+
+See docs/perf_trajectory.md for the workflow.
+"""
+from repro.perf.diff import (
+    DiffResult, MetricDelta, diff_bench, diff_paths, markdown_report,
+    metric_direction,
+)
+from repro.perf.metrics import (
+    PhaseFlops, WorkloadRecord, gemm_bytes, gemm_flops, modeled_gemm_us,
+    phase_flops, record_from_plan, tile_visits, total_flops,
+)
+from repro.perf.trajectory import (
+    SCHEMA_VERSION, BenchFile, Recorder, bench_path, environment_stamp,
+    read_bench, validate_bench_dict, validate_record_dict, write_bench,
+)
+
+__all__ = [
+    "DiffResult", "MetricDelta", "diff_bench", "diff_paths",
+    "markdown_report", "metric_direction",
+    "PhaseFlops", "WorkloadRecord", "gemm_bytes", "gemm_flops",
+    "modeled_gemm_us", "phase_flops", "record_from_plan", "tile_visits",
+    "total_flops",
+    "SCHEMA_VERSION", "BenchFile", "Recorder", "bench_path",
+    "environment_stamp", "read_bench", "validate_bench_dict",
+    "validate_record_dict", "write_bench",
+]

@@ -1,0 +1,248 @@
+"""Baseline comparison: per-metric relative tolerances + markdown report.
+
+The CI contract (``benchmarks/run.py --diff``): compare the freshly
+emitted BENCH files against the committed baselines and fail ONLY on
+regressions — a metric moving beyond its tolerance in the *bad*
+direction, or a baseline record/metric disappearing.  Improvements and
+newly added metrics/records are reported, never failed, so adding a
+benchmark or making the code faster doesn't require touching tolerances.
+
+Direction is resolved per metric name (:func:`metric_direction`): times,
+bytes, FLOPs, visit counts, and overheads are lower-is-better; speedups,
+CMR, peak fractions, and efficiency terms are higher-is-better.  A metric
+the table can't classify is conservatively two-sided: ANY out-of-tolerance
+move fails, which is the right default for deterministic modeled numbers
+(they should not move at all unless the model changed on purpose).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.perf.trajectory import BenchFile, read_bench
+
+# Default relative tolerance for deterministic metrics.  Modeled/traced
+# numbers are exact re-computations, so the default only absorbs float
+# round-off in the JSON round-trip.
+DEFAULT_REL_TOL = 1e-9
+
+# Suffix/substring → direction.  First match wins; checked longest-first
+# so e.g. "speedup_vs_naive" resolves via "speedup" not "naive".
+_LOWER_IS_BETTER = (
+    "_us", "_s", "_ms", "bytes", "flops", "tile_visits", "visits",
+    "overhead", "waste", "breakeven", "vmem", "grid_steps", "launches",
+    "gating_ops", "prep_", "maxerr", "schedule_len",
+)
+_HIGHER_IS_BETTER = (
+    "speedup", "cmr", "peak_frac", "frac", "geomean", "eff_bw",
+    "useful", "tokens_per_s", "density_saving", "gain",
+)
+
+
+def metric_direction(name: str) -> str:
+    """'lower' | 'higher' | 'both' — which way is worse for ``name``.
+
+    'both' (unknown metric family) means any out-of-tolerance change is a
+    regression: deterministic numbers must not drift silently.
+    """
+    low = name.lower()
+    for pat in _HIGHER_IS_BETTER:
+        if pat in low:
+            return "higher"
+    for pat in _LOWER_IS_BETTER:
+        if pat in low:
+            return "lower"
+    return "both"
+
+
+def _rel_change(baseline: float, current: float) -> float:
+    if baseline == current:
+        return 0.0
+    denom = max(abs(baseline), abs(current), 1e-30)
+    return (current - baseline) / denom
+
+
+def resolve_tolerance(name: str,
+                      tolerances: Optional[Dict[str, float]],
+                      default_rel_tol: float) -> float:
+    """Tolerance for metric ``name``: exact key > substring key > default.
+
+    Substring keys let one entry cover a family (``{"modeled": 0.02}``
+    matches ``modeled_us`` and ``modeled_speedup``); the longest matching
+    key wins so specific entries override broad ones.
+    """
+    if not tolerances:
+        return default_rel_tol
+    if name in tolerances:
+        return tolerances[name]
+    best = None
+    for key in tolerances:
+        if key in name and (best is None or len(key) > len(best)):
+            best = key
+    return tolerances[best] if best is not None else default_rel_tol
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricDelta:
+    """One (record, metric) comparison."""
+
+    record: str
+    metric: str
+    baseline: float
+    current: float
+    rel_change: float
+    tolerance: float
+    direction: str              # lower | higher | both
+    status: str                 # unchanged | within_tol | regression | improvement
+
+    def describe(self) -> str:
+        return (f"{self.record}:{self.metric} {self.baseline:g} -> "
+                f"{self.current:g} ({self.rel_change:+.2%}, "
+                f"tol {self.tolerance:g}, {self.direction}-is-worse)")
+
+
+@dataclasses.dataclass
+class DiffResult:
+    """Outcome of one baseline-vs-current comparison for one area."""
+
+    area: str
+    regressions: List[MetricDelta]
+    improvements: List[MetricDelta]
+    within_tol: List[MetricDelta]
+    unchanged_count: int
+    new_records: List[str]
+    missing_records: List[str]
+    new_metrics: List[Tuple[str, str]]        # (record, metric)
+    missing_metrics: List[Tuple[str, str]]
+
+    @property
+    def ok(self) -> bool:
+        """CI gate: no regressions, nothing from the baseline vanished."""
+        return not (self.regressions or self.missing_records
+                    or self.missing_metrics)
+
+    @property
+    def compared(self) -> int:
+        return (self.unchanged_count + len(self.within_tol)
+                + len(self.regressions) + len(self.improvements))
+
+
+def _classify(delta: MetricDelta) -> str:
+    if delta.rel_change == 0.0:
+        return "unchanged"
+    if abs(delta.rel_change) <= delta.tolerance:
+        return "within_tol"
+    if delta.direction == "both":
+        return "regression"
+    worse = (delta.rel_change > 0) if delta.direction == "lower" \
+        else (delta.rel_change < 0)
+    return "regression" if worse else "improvement"
+
+
+def diff_bench(
+    baseline: BenchFile,
+    current: BenchFile,
+    *,
+    tolerances: Optional[Dict[str, float]] = None,
+    default_rel_tol: float = DEFAULT_REL_TOL,
+) -> DiffResult:
+    """Compare ``current`` against ``baseline`` record-by-record.
+
+    Only ``metrics`` participate; ``noisy`` values (wall clocks) are
+    carried in the files for trajectory plots but never gated.  Records
+    present only in ``current`` are "new" (reported, not failed); records
+    or metrics present only in ``baseline`` are failures — a benchmark
+    silently dropping a number is exactly the regression-blindness this
+    subsystem exists to prevent.
+    """
+    if baseline.area != current.area:
+        raise ValueError(f"area mismatch: baseline {baseline.area!r} vs "
+                         f"current {current.area!r}")
+    base_by = baseline.by_name()
+    cur_by = current.by_name()
+    result = DiffResult(
+        area=current.area, regressions=[], improvements=[], within_tol=[],
+        unchanged_count=0, new_records=sorted(set(cur_by) - set(base_by)),
+        missing_records=sorted(set(base_by) - set(cur_by)),
+        new_metrics=[], missing_metrics=[],
+    )
+    for name in sorted(set(base_by) & set(cur_by)):
+        bm, cm = base_by[name].metrics, cur_by[name].metrics
+        for metric in sorted(set(bm) - set(cm)):
+            result.missing_metrics.append((name, metric))
+        for metric in sorted(set(cm) - set(bm)):
+            result.new_metrics.append((name, metric))
+        for metric in sorted(set(bm) & set(cm)):
+            tol = resolve_tolerance(metric, tolerances, default_rel_tol)
+            delta = MetricDelta(
+                record=name, metric=metric,
+                baseline=float(bm[metric]), current=float(cm[metric]),
+                rel_change=_rel_change(float(bm[metric]),
+                                       float(cm[metric])),
+                tolerance=tol, direction=metric_direction(metric),
+                status="",
+            )
+            status = _classify(delta)
+            delta = dataclasses.replace(delta, status=status)
+            if status == "unchanged":
+                result.unchanged_count += 1
+            elif status == "within_tol":
+                result.within_tol.append(delta)
+            elif status == "improvement":
+                result.improvements.append(delta)
+            else:
+                result.regressions.append(delta)
+    return result
+
+
+def diff_paths(baseline_path, current_path, **kw) -> DiffResult:
+    """:func:`diff_bench` over two on-disk BENCH files."""
+    return diff_bench(read_bench(baseline_path), read_bench(current_path),
+                      **kw)
+
+
+def markdown_report(results: List[DiffResult]) -> str:
+    """Human-readable regression report across areas (CI job summary)."""
+    lines = ["# Perf-trajectory diff", ""]
+    total_reg = sum(len(r.regressions) for r in results)
+    total_missing = sum(len(r.missing_records) + len(r.missing_metrics)
+                        for r in results)
+    verdict = "PASS" if total_reg == 0 and total_missing == 0 else "FAIL"
+    lines.append(f"**{verdict}** — "
+                 f"{sum(r.compared for r in results)} metrics compared, "
+                 f"{total_reg} regressions, "
+                 f"{sum(len(r.improvements) for r in results)} "
+                 f"improvements, {total_missing} missing.")
+    for r in results:
+        lines += ["", f"## area `{r.area}`", ""]
+        lines.append(f"- records: {len(r.new_records)} new, "
+                     f"{len(r.missing_records)} missing; metrics "
+                     f"compared: {r.compared} "
+                     f"({r.unchanged_count} byte-identical)")
+        if r.regressions:
+            lines += ["", "### Regressions", "",
+                      "| record | metric | baseline | current | Δ | tol |",
+                      "|---|---|---|---|---|---|"]
+            for d in r.regressions:
+                lines.append(
+                    f"| {d.record} | {d.metric} | {d.baseline:g} "
+                    f"| {d.current:g} | {d.rel_change:+.2%} "
+                    f"| {d.tolerance:g} |")
+        if r.improvements:
+            lines += ["", "### Improvements (consider refreshing the "
+                          "baseline)", ""]
+            for d in r.improvements:
+                lines.append(f"- {d.describe()}")
+        if r.missing_records:
+            lines += ["", "### Missing records (present in baseline, "
+                          "absent now)", ""]
+            lines += [f"- {n}" for n in r.missing_records]
+        if r.missing_metrics:
+            lines += ["", "### Missing metrics", ""]
+            lines += [f"- {rec}:{m}" for rec, m in r.missing_metrics]
+        if r.new_records:
+            lines += ["", "### New records (not in baseline — refresh to "
+                          "start tracking)", ""]
+            lines += [f"- {n}" for n in r.new_records]
+    lines.append("")
+    return "\n".join(lines)

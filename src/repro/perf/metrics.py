@@ -1,0 +1,306 @@
+"""Metrics-accounting core: the numbers every benchmark record carries.
+
+One definition of the modeled FLOPs / HBM-traffic / tile-visit accounting,
+shared by the benchmark harness (``benchmarks/common.py``), the trajectory
+writer, and the tests that pin the math down.  The GEMM terms mirror
+``core/blocking.py`` exactly (``gemm_bytes`` delegates to
+``modeled_traffic_bytes``; the tests cross-check both on hand-computed
+paper workloads), so a record's modeled terms can never drift from what
+the planner actually optimizes.
+
+The per-phase model accounting (:func:`phase_flops`) follows the
+llm-profiler shape: each phase names one GEMM family of the forward pass
+with its fwd FLOPs and the bwd FLOPs the two backward GEMMs cost
+(``bwd = 2 * fwd`` for every matmul — dL/dx and dL/dW are each another
+GEMM of the same volume).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.blocking import GemmPlan, modeled_traffic_bytes
+from repro.core.constants import DEFAULT_HW, HardwareSpec
+
+# Record kinds: how the metrics were obtained.
+#   model — deterministic analytic/planner terms (diffed tightly)
+#   trace — jaxpr-derived structural facts (exact, diffed tightly)
+#   wall  — wall-clock measurements (noisy; diff ignores them)
+RECORD_KINDS = ("model", "trace", "wall", "report")
+
+
+def _dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+# --- GEMM accounting ---------------------------------------------------------
+
+def gemm_flops(m: int, n: int, k: int, *, g: int = 1,
+               density: float = 1.0) -> int:
+    """MACs×2 for a (possibly grouped, possibly tile-sparse) GEMM.
+
+    Matches ``GemmPlan.flops``: grouped instances scale by G, a
+    tile-sparse B prunes MACs linearly with stored-tile density.
+    """
+    if g < 1:
+        raise ValueError(f"group count must be >= 1, got {g}")
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    return int(2 * g * m * n * k * density)
+
+
+def gemm_bytes(
+    m: int, n: int, k: int, bm: int, bn: int,
+    *,
+    a_dtype="float32", b_dtype=None, out_dtype=None,
+    g: int = 1, beta: float = 0.0, extra_mn_inputs: int = 0,
+    density: float = 1.0,
+) -> int:
+    """Modeled HBM traffic of the K-innermost revisiting grid.
+
+    Delegates the 2-D term to ``core/blocking.py::modeled_traffic_bytes``
+    (the single source of truth the planner optimizes) and lifts it per
+    group — matching ``grouped_plan_from_2d``'s "no cross-group reuse"
+    model.  ``extra_mn_inputs`` counts fused-epilogue (M, N) operands;
+    ``density`` prices a tile-sparse B.
+    """
+    a_dtype = str(jnp.dtype(a_dtype))
+    b_dtype = str(jnp.dtype(b_dtype or a_dtype))
+    out_dtype = str(jnp.dtype(out_dtype or a_dtype))
+    per_group = modeled_traffic_bytes(
+        m, n, k, bm, bn,
+        _dtype_bytes(a_dtype), _dtype_bytes(b_dtype),
+        _dtype_bytes(out_dtype),
+        beta=beta, extra_mn_inputs=extra_mn_inputs, density=density,
+    )
+    return int(per_group * g)
+
+
+def tile_visits(
+    m: int, n: int, k: int, bm: int, bn: int, bk: int,
+    *,
+    g: int = 1, schedule_len: Optional[int] = None,
+) -> int:
+    """Grid steps of the launched kernel — the trace-time fact the sparse
+    benchmarks gate on.
+
+    Dense: ``g * ceil(m/bm) * ceil(n/bn) * ceil(k/bk)`` (the 3-D revisiting
+    grid, group as leading axis).  Tile-sparse (``schedule_len`` given):
+    the grid is ``(m/bm, schedule_len)`` — the stored-tile schedule already
+    contains every (group, kk, j) visit including anchor visits, so the
+    sparse count is ``ceil(m/bm) * schedule_len``.
+    """
+    m_blocks = math.ceil(m / bm)
+    if schedule_len is not None:
+        return m_blocks * schedule_len
+    return g * m_blocks * math.ceil(n / bn) * math.ceil(k / bk)
+
+
+def modeled_gemm_us(flops: float, bytes_: float, dtype: str = "bfloat16",
+                    hw: HardwareSpec = DEFAULT_HW) -> float:
+    """Two-term roofline time in microseconds (same peaks table the
+    benchmarks and the tuner's modeled mode use)."""
+    if jnp.dtype(dtype).kind == "i":
+        peak = hw.peak_ops_int8
+    elif str(jnp.dtype(dtype)) in ("bfloat16", "float16"):
+        peak = hw.peak_flops_bf16
+    else:
+        peak = hw.peak_flops_fp32
+    return max(flops / peak, bytes_ / hw.hbm_bw) * 1e6
+
+
+# --- llm-profiler-style per-phase model accounting ---------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhaseFlops:
+    """One forward-pass phase's GEMM FLOPs, with its backward cost.
+
+    ``bwd = 2 * fwd`` for pure-GEMM phases (each forward matmul costs two
+    backward matmuls of the same volume); phases with no trainable matmul
+    (embedding lookup) carry fwd = bwd = 0.
+    """
+
+    name: str
+    fwd: int
+    bwd: int
+
+    @property
+    def total(self) -> int:
+        return self.fwd + self.bwd
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "fwd": self.fwd, "bwd": self.bwd}
+
+    @staticmethod
+    def from_dict(d: dict) -> "PhaseFlops":
+        return PhaseFlops(name=d["name"], fwd=int(d["fwd"]),
+                          bwd=int(d["bwd"]))
+
+
+def _gemm_phase(name: str, flops: int) -> PhaseFlops:
+    return PhaseFlops(name=name, fwd=int(flops), bwd=int(2 * flops))
+
+
+def phase_flops(cfg, tokens: int, seq_len: int) -> List[PhaseFlops]:
+    """Per-phase fwd/bwd GEMM FLOPs for one step of ``tokens`` tokens.
+
+    The llm-profiler decomposition, instantiated on our ArchConfig: every
+    phase is a named GEMM family, fwd = 2 * tokens * (weight volume), and
+    attention's quadratic terms use ``seq_len`` (scores and output each
+    cost 2*T*s*heads*head_dim).  MoE phases count the per-token ACTIVE
+    experts (router + experts_per_token expert MLPs); the dense/moe/
+    recurrent split follows ``cfg.pattern``.
+    """
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    mlp_mats = 2 if cfg.mlp == "gelu" else 3
+    pattern = cfg.pattern
+    n_attn = sum(1 for kind in pattern
+                 if kind in ("dense", "cross", "attn_local", "moe"))
+    n_dense_mlp = sum(1 for kind in pattern
+                      if kind in ("dense", "cross", "attn_local"))
+    n_moe = sum(1 for kind in pattern if kind == "moe")
+    n_rec = len(pattern) - n_attn  # rwkv / rglru layers
+
+    qkv_w = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads)
+    out_w = cfg.n_heads * hd * d
+    phases = [
+        PhaseFlops("embed", 0, 0),
+        _gemm_phase("attn_qkv", 2 * tokens * qkv_w * n_attn),
+        _gemm_phase("attn_scores",
+                    2 * tokens * seq_len * cfg.n_heads * hd * n_attn),
+        _gemm_phase("attn_values",
+                    2 * tokens * seq_len * cfg.n_heads * hd * n_attn),
+        _gemm_phase("attn_out", 2 * tokens * out_w * n_attn),
+        _gemm_phase("mlp", 2 * tokens * mlp_mats * d * f * n_dense_mlp),
+    ]
+    if n_moe:
+        phases.append(_gemm_phase(
+            "moe_router", 2 * tokens * d * cfg.n_experts * n_moe))
+        phases.append(_gemm_phase(
+            "moe_experts",
+            2 * tokens * mlp_mats * d * f
+            * max(1, cfg.experts_per_token) * n_moe))
+    if n_rec:
+        # Recurrent blocks: the 6 d×d mixing mats + 2 d×f channel-mix mats
+        # + the d×d output mat (ArchConfig.active_params' rwkv model).
+        phases.append(_gemm_phase(
+            "recurrent", 2 * tokens * (7 * d * d + 2 * d * f) * n_rec))
+    phases.append(_gemm_phase("logits", 2 * tokens * d * cfg.vocab))
+    return phases
+
+
+def total_flops(phases: List[PhaseFlops]) -> Dict[str, int]:
+    """{"fwd": Σ, "bwd": Σ, "total": Σ} over a phase list."""
+    fwd = sum(p.fwd for p in phases)
+    bwd = sum(p.bwd for p in phases)
+    return {"fwd": fwd, "bwd": bwd, "total": fwd + bwd}
+
+
+# --- the record every benchmark emits ----------------------------------------
+
+@dataclasses.dataclass
+class WorkloadRecord:
+    """One workload's metrics in one benchmark run.
+
+    ``metrics`` holds deterministic numbers the CI diff compares (modeled
+    roofline terms, traced launch counts, tile visits, FLOPs accounting);
+    ``noisy`` holds wall-clock style measurements that are recorded for
+    the trajectory but never gated on.  ``plan`` is the blocking-decision
+    provenance (which blocks, whose choice, what it modeled); ``phases``
+    the optional per-phase FLOPs breakdown.
+    """
+
+    name: str
+    area: str
+    kind: str = "model"
+    workload: Dict = dataclasses.field(default_factory=dict)
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    noisy: Dict[str, float] = dataclasses.field(default_factory=dict)
+    plan: Optional[Dict] = None
+    phases: Optional[List[PhaseFlops]] = None
+
+    def __post_init__(self):
+        if self.kind not in RECORD_KINDS:
+            raise ValueError(
+                f"record kind {self.kind!r} not in {RECORD_KINDS}")
+        if not self.name:
+            raise ValueError("record name must be non-empty")
+
+    def to_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "area": self.area,
+            "kind": self.kind,
+            "workload": dict(self.workload),
+            "metrics": {k: self.metrics[k] for k in sorted(self.metrics)},
+            "noisy": {k: self.noisy[k] for k in sorted(self.noisy)},
+        }
+        if self.plan is not None:
+            d["plan"] = dict(self.plan)
+        if self.phases is not None:
+            d["phases"] = [p.to_dict() for p in self.phases]
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "WorkloadRecord":
+        return WorkloadRecord(
+            name=d["name"], area=d["area"], kind=d.get("kind", "model"),
+            workload=dict(d.get("workload", {})),
+            metrics=dict(d.get("metrics", {})),
+            noisy=dict(d.get("noisy", {})),
+            plan=dict(d["plan"]) if d.get("plan") is not None else None,
+            phases=[PhaseFlops.from_dict(p) for p in d["phases"]]
+            if d.get("phases") is not None else None,
+        )
+
+
+def plan_provenance(plan: GemmPlan, source: str = "analytic") -> dict:
+    """JSON-safe provenance of a blocking decision: enough to answer "which
+    blocks served this number, and who chose them" when a later diff moves."""
+    return {
+        "blocks": [plan.bm, plan.bn, plan.bk],
+        "grid": list(plan.grid),
+        "g": plan.g,
+        "source": source,
+        "vmem_bytes": plan.vmem_bytes,
+        "notes": plan.notes,
+    }
+
+
+def record_from_plan(
+    name: str, area: str, plan: GemmPlan,
+    *,
+    kind: str = "model",
+    source: str = "analytic",
+    workload: Optional[Dict] = None,
+    metrics: Optional[Dict[str, float]] = None,
+    noisy: Optional[Dict[str, float]] = None,
+    hw: HardwareSpec = DEFAULT_HW,
+) -> WorkloadRecord:
+    """Record carrying a plan's modeled roofline terms + provenance.
+
+    The plan's own flops/hbm_bytes/cmr become the base metrics (so every
+    GEMM record automatically carries the terms the diff gates on);
+    ``metrics`` adds/overrides benchmark-specific ones.
+    """
+    base = {
+        "flops": float(plan.flops),
+        "hbm_bytes": float(plan.hbm_bytes),
+        "cmr": float(plan.cmr),
+        "tile_visits": float(tile_visits(
+            plan.m, plan.n, plan.k, plan.bm, plan.bn, plan.bk, g=plan.g)),
+        "modeled_us": modeled_gemm_us(plan.flops, plan.hbm_bytes,
+                                      plan.a_dtype, hw),
+    }
+    base.update(metrics or {})
+    wl = {"m": plan.m, "n": plan.n, "k": plan.k, "g": plan.g,
+          "a_dtype": plan.a_dtype, "b_dtype": plan.b_dtype,
+          "out_dtype": plan.out_dtype}
+    wl.update(workload or {})
+    return WorkloadRecord(
+        name=name, area=area, kind=kind, workload=wl, metrics=base,
+        noisy=dict(noisy or {}), plan=plan_provenance(plan, source),
+    )

@@ -1,0 +1,370 @@
+"""Offline plan-cache sweep: warm every shipped GEMM instance before serving.
+
+"Hello SME!" (PAPERS.md) shows kernel-search at *deployment* time paying
+off at serve time; this module is that step for the plan cache.  It
+enumerates every (model config × precision policy × operand layout ×
+fused epilogue) GEMM instance the serving stack launches — the exact
+cache keys ``mp_dot`` / ``mpgemm_pallas_spec`` look up — runs the modeled
+(or compiled, on TPU) tuning sweep for each, and persists the winners
+into a :class:`~repro.tuning.plan_cache.PlanCache`.  A serve process
+pointed at the resulting file (``REPRO_PLAN_CACHE=<path>``) never plans a
+shipped GEMM cold.
+
+Instance derivation mirrors the model code (``models/blocks.py`` /
+``models/layers.py``): attention projections, the (fused-epilogue) MLP
+trio, MoE router + grouped expert GEMMs at capacity-factor token counts,
+recurrent mixing mats, and the logits head.  Layouts cover dense and
+packed B (the packed namespace key reuses ``pack_params``'s block
+derivation so the tag matches what load-time packing will produce);
+tile-sparse layouts are content-addressed by the weight's pruning
+pattern, so they cannot be warmed without the checkpoint and are tuned
+at sparsify time instead (``tune_sparse_gemm``).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.perf.sweep --out plans.json \
+        --archs granite-moe-1b-a400m --m-tokens 32 4096
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.configs import base as cb
+from repro.core.blocking import (
+    enumerate_block_lattice, grouped_plan_from_2d, plan_gemm,
+    plan_with_blocks,
+)
+from repro.core.constants import DEFAULT_HW, HardwareSpec
+from repro.core.gemm_spec import EpilogueSpec
+from repro.core.policy import POLICIES, get_policy
+from repro.tuning.microbench import tune_gemm, tune_grouped_gemm
+from repro.tuning.plan_cache import PlanCache, make_key
+
+LAYOUTS = ("dense", "packed")
+
+# Policies the serving entrypoint ships (launch/serve.py --policy choices).
+SERVE_POLICIES = ("bf16", "bf16_serve", "int8")
+
+# pack_params' default planner M hint — the packed layout's (bk, bn) must
+# match what load-time packing derives, or the warmed key never hits.
+PACK_M_HINT = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmInstance:
+    """One logical GEMM the serving stack launches for a config."""
+
+    role: str                       # attn_q / mlp_gate / logits / ...
+    m: int
+    n: int
+    k: int
+    g: int = 1
+    epilogue_kind: str = "linear"
+    activation: Optional[str] = None
+    trans_b: bool = False
+    # Policy overrides (the MoE router always runs fp32; expert dots keep
+    # f32 activations between GEMM and combine).
+    force_policy: Optional[str] = None
+    force_out_dtype: Optional[str] = None
+
+    def epilogue(self) -> Optional[EpilogueSpec]:
+        if self.epilogue_kind == "linear" and self.activation is None:
+            return None
+        return EpilogueSpec(kind=self.epilogue_kind,
+                            activation=self.activation)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShippedCombo:
+    """(config × policy × layout × epilogue) — one plan-cache key."""
+
+    arch: str
+    policy: str
+    layout: str                     # dense | packed
+    instance: GemmInstance
+    key: str                        # the cache key serving will look up
+
+
+@dataclasses.dataclass
+class SweepResult:
+    combos: List[ShippedCombo]
+    warmed: int
+    skipped: int                    # deduplicated keys
+    elapsed_s: float
+
+    def keys(self) -> List[str]:
+        return [c.key for c in self.combos]
+
+
+def enumerate_gemm_instances(cfg, *, m_tokens: int = 32) -> List[GemmInstance]:
+    """The distinct GEMMs one forward pass of ``cfg`` launches for a batch
+    of ``m_tokens`` tokens, with the fused epilogues serving ships.
+
+    Mirrors ``models/blocks.py``: per-head attention projections, the
+    fused SwiGLU/GeGLU MLP (gate GEMM carries the gated epilogue, the
+    down projection the residual fusion), MoE router (fp32) + grouped
+    expert GEMMs at capacity token counts, recurrent mixing mats, and the
+    logits head (transposed when embeddings are tied).
+    """
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    pattern = cfg.pattern
+    kinds = set(pattern)
+    out: List[GemmInstance] = []
+
+    if kinds & {"dense", "cross", "attn_local", "moe"}:
+        out += [
+            GemmInstance("attn_q", m_tokens, cfg.n_heads * hd, d),
+            GemmInstance("attn_kv", m_tokens, cfg.n_kv_heads * hd, d),
+            GemmInstance("attn_out", m_tokens, d, cfg.n_heads * hd),
+        ]
+    if kinds & {"dense", "cross", "attn_local"}:
+        if cfg.mlp == "swiglu":
+            out += [
+                GemmInstance("mlp_up", m_tokens, f, d),
+                GemmInstance("mlp_gate", m_tokens, f, d,
+                             epilogue_kind="gated", activation="silu"),
+                GemmInstance("mlp_down", m_tokens, d, f,
+                             epilogue_kind="residual"),
+            ]
+        else:
+            out += [
+                GemmInstance("mlp_up", m_tokens, f, d, activation="gelu"),
+                GemmInstance("mlp_down", m_tokens, d, f,
+                             epilogue_kind="residual"),
+            ]
+    if "moe" in kinds and cfg.n_experts:
+        e, topk = cfg.n_experts, max(1, cfg.experts_per_token)
+        # moe_mlp's capacity rule (capacity_factor=1.25) — the grouped
+        # GEMM's m is the per-expert buffer extent, not the token count.
+        cap = max(1, int(round(1.25 * topk * m_tokens / e)))
+        out.append(GemmInstance("moe_router", m_tokens, e, d,
+                                force_policy="fp32"))
+        # _expert_dot: f32 outputs between the expert GEMMs and combine;
+        # the SwiGLU gating rides the gate GEMM, up/down stay linear.
+        out += [
+            GemmInstance("moe_up", cap, f, d, g=e,
+                         force_out_dtype="float32"),
+            GemmInstance("moe_gate", cap, f, d, g=e,
+                         epilogue_kind="gated", activation="silu",
+                         force_out_dtype="float32"),
+            GemmInstance("moe_down", cap, d, f, g=e,
+                         force_out_dtype="float32"),
+        ]
+    if kinds & {"rwkv", "rglru"}:
+        out += [
+            GemmInstance("rec_mix", m_tokens, d, d),
+            GemmInstance("rec_ffn_up", m_tokens, f, d),
+            GemmInstance("rec_ffn_down", m_tokens, d, f),
+        ]
+    out.append(GemmInstance("logits", m_tokens, cfg.vocab, d,
+                            trans_b=cfg.tie_embeddings))
+    return out
+
+
+def _instance_dtypes(inst: GemmInstance, policy) -> Tuple[str, str, str]:
+    """(a, b, out) dtype strings at kernel-launch time (core/gemm.py:
+    quantized policies launch int8 operands; out defaults to
+    ``policy.out_dtype`` unless the call site overrides it)."""
+    policy = get_policy(inst.force_policy or policy)
+    cd = "int8" if policy.quantized else policy.compute_dtype
+    out = inst.force_out_dtype or policy.out_dtype
+    return cd, cd, out
+
+
+def _packed_layout_tag(inst: GemmInstance, a_dtype: str, b_dtype: str,
+                       hw: HardwareSpec) -> Tuple[str, Tuple[int, int]]:
+    """(make_key layout tag, pinned (bk, bn)) of the packed payload
+    load-time packing would build — pack_params derives blocks from
+    ``plan_gemm(m_hint, n, k, a_dtype, payload_dtype)``."""
+    plan = plan_gemm(PACK_M_HINT, inst.n, inst.k, a_dtype, b_dtype, hw=hw)
+    return f"packB{plan.bk}x{plan.bn}{b_dtype}", (plan.bk, plan.bn)
+
+
+def _combo_key(inst: GemmInstance, policy: str, layout: str,
+               hw: HardwareSpec) -> str:
+    a_dtype, b_dtype, out_dtype = _instance_dtypes(inst, policy)
+    ep = inst.epilogue()
+    layout_tag = ""
+    trans_b = inst.trans_b
+    if layout == "packed":
+        layout_tag, _ = _packed_layout_tag(inst, a_dtype, b_dtype, hw)
+        trans_b = False     # transposition is resolved at pack time
+    return make_key(
+        inst.m, inst.n, inst.k, a_dtype, b_dtype, out_dtype,
+        trans_a=False, trans_b=trans_b, beta=0.0, hw=hw, g=inst.g,
+        layout=layout_tag, epilogue=ep.tag if ep is not None else "",
+    )
+
+
+def enumerate_shipped_combos(
+    archs: Optional[Sequence[str]] = None,
+    *,
+    policies: Sequence[str] = SERVE_POLICIES,
+    layouts: Sequence[str] = LAYOUTS,
+    m_tokens: Sequence[int] = (32,),
+    smoke: bool = False,
+    hw: HardwareSpec = DEFAULT_HW,
+) -> List[ShippedCombo]:
+    """Every (config × policy × layout × epilogue) combination shipped,
+    deduplicated by cache key (two archs sharing a GEMM shape warm it
+    once)."""
+    for p in policies:
+        if p not in POLICIES:
+            raise ValueError(f"unknown policy {p!r}; valid: "
+                             f"{sorted(POLICIES)}")
+    for lay in layouts:
+        if lay not in LAYOUTS:
+            raise ValueError(f"unknown layout {lay!r}; valid: {LAYOUTS}")
+    combos: List[ShippedCombo] = []
+    seen: set = set()
+    for arch in (archs or cb.ARCH_IDS):
+        cfg = cb.get(arch, smoke=smoke)
+        for m in m_tokens:
+            for inst in enumerate_gemm_instances(cfg, m_tokens=m):
+                for policy in policies:
+                    for layout in layouts:
+                        if layout == "packed" and (
+                                inst.force_policy == "fp32"):
+                            continue  # the fp32 router is never packed
+                        key = _combo_key(inst, policy, layout, hw)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        combos.append(ShippedCombo(
+                            arch=arch, policy=policy, layout=layout,
+                            instance=inst, key=key))
+    return combos
+
+
+def _warm_packed(combo: ShippedCombo, cache: PlanCache,
+                 hw: HardwareSpec) -> None:
+    """Modeled bm-ladder sweep with (bk, bn) pinned to the packed payload
+    layout — the same resolution ``kernels/mpgemm.py::_layout_plan`` falls
+    back to, persisted so the fallback never runs.  The stored plan's
+    (bn, bk) MUST equal the layout's or the read side discards it."""
+    inst = combo.instance
+    a_dtype, b_dtype, out_dtype = _instance_dtypes(inst, combo.policy)
+    ep = inst.epilogue()
+    n_extra = len(ep.extra_operands) if ep is not None else 0
+    acc = "float32" if b_dtype == "int8" else None
+    _, (bk, bn) = _packed_layout_tag(inst, a_dtype, b_dtype, hw)
+    base = plan_gemm(inst.m, inst.n, inst.k, a_dtype, b_dtype, out_dtype,
+                     acc, extra_mn_inputs=n_extra, hw=hw)
+    bm_axis, _, _ = enumerate_block_lattice(inst.m, inst.n, inst.k,
+                                            a_dtype, b_dtype, hw=hw)
+    budget = int(hw.vmem_bytes * 0.75)
+    cands = []
+    for bm in dict.fromkeys([base.bm, *bm_axis]):
+        cands.append(plan_with_blocks(
+            inst.m, inst.n, inst.k, bm, bn, bk, a_dtype, b_dtype,
+            out_dtype, acc, extra_mn_inputs=n_extra, hw=hw,
+            notes="packed-b swept"))
+    plans = [p for p in cands if p.vmem_bytes <= budget] \
+        or [min(cands, key=lambda p: p.vmem_bytes)]
+    best = min(plans, key=lambda p: max(
+        p.flops / hw.peak_flops_bf16, p.hbm_bytes / hw.hbm_bw))
+    if inst.g != 1:
+        best = grouped_plan_from_2d(best, inst.g)
+    cache.put(combo.key, best, meta={
+        "mode": "modeled", "source": "perf.sweep", "layout": "packed",
+        "candidates": len(plans),
+    })
+
+
+def warm_plan_cache(
+    combos: Iterable[ShippedCombo],
+    cache: PlanCache,
+    *,
+    mode: str = "modeled",
+    hw: HardwareSpec = DEFAULT_HW,
+    max_candidates: int = 16,
+) -> SweepResult:
+    """Tune every combo into ``cache``; the dense path reuses
+    ``tune_gemm``/``tune_grouped_gemm`` (so compiled mode works on TPU
+    unchanged), the packed path the pinned-(bk, bn) bm ladder."""
+    t0 = time.perf_counter()
+    combos = list(combos)
+    warmed = skipped = 0
+    for combo in combos:
+        if combo.key in cache:
+            skipped += 1
+            continue
+        inst = combo.instance
+        if combo.layout == "packed":
+            _warm_packed(combo, cache, hw)
+            warmed += 1
+            continue
+        a_dtype, b_dtype, out_dtype = _instance_dtypes(inst, combo.policy)
+        ep = inst.epilogue()
+        kw = dict(mode=mode, cache=cache, save=False, hw=hw,
+                  max_candidates=max_candidates, epilogue=ep)
+        if inst.g == 1:
+            result = tune_gemm(inst.m, inst.n, inst.k, a_dtype, b_dtype,
+                               out_dtype, trans_b=inst.trans_b, **kw)
+        else:
+            result = tune_grouped_gemm(inst.g, inst.m, inst.n, inst.k,
+                                       a_dtype, b_dtype, out_dtype, **kw)
+        if result.key != combo.key:
+            raise AssertionError(
+                f"sweep/tuner key drift for {inst.role}: enumerated "
+                f"{combo.key!r} but tuner persisted {result.key!r}")
+        warmed += 1
+    cache.save()
+    return SweepResult(combos=combos, warmed=warmed, skipped=skipped,
+                       elapsed_s=time.perf_counter() - t0)
+
+
+def verify_warm(combos: Iterable[ShippedCombo],
+                cache: PlanCache) -> List[ShippedCombo]:
+    """Combos whose key does NOT hit ``cache`` ([] == fully warm — the
+    acceptance gate)."""
+    return [c for c in combos if cache.get(c.key) is None]
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Offline plan-cache sweep over every shipped "
+                    "(config × policy × layout × epilogue) GEMM")
+    ap.add_argument("--out", default="sweep_plans.json",
+                    help="PlanCache JSON path to create/extend")
+    ap.add_argument("--archs", nargs="*", default=None,
+                    choices=cb.ARCH_IDS, help="default: all shipped archs")
+    ap.add_argument("--policies", nargs="*", default=list(SERVE_POLICIES),
+                    choices=sorted(POLICIES))
+    ap.add_argument("--layouts", nargs="*", default=list(LAYOUTS),
+                    choices=LAYOUTS)
+    ap.add_argument("--m-tokens", nargs="*", type=int, default=[32, 4096],
+                    help="token-batch sizes to warm (decode + prefill)")
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "compiled", "interpret", "modeled"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced SMOKE configs")
+    args = ap.parse_args(argv)
+
+    combos = enumerate_shipped_combos(
+        args.archs, policies=args.policies, layouts=args.layouts,
+        m_tokens=tuple(args.m_tokens), smoke=args.smoke)
+    cache = PlanCache(args.out)
+    result = warm_plan_cache(combos, cache, mode=args.mode)
+    misses = verify_warm(combos, cache)
+    print(f"[sweep] {len(combos)} shipped combos "
+          f"({result.warmed} tuned, {result.skipped} already cached) "
+          f"in {result.elapsed_s:.1f}s -> {args.out} "
+          f"({len(cache)} entries)")
+    if misses:
+        print(f"[sweep] ERROR: {len(misses)} combos NOT warm after the "
+              f"sweep:")
+        for c in misses[:10]:
+            print(f"  {c.arch} {c.policy} {c.layout} "
+                  f"{c.instance.role}: {c.key}")
+        return 1
+    print("[sweep] every enumerated combo has a PlanCache hit — "
+          "first-call serving never plans cold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,232 @@
+"""Versioned ``BENCH_<area>.json`` writer/reader + the harness Recorder.
+
+The trajectory file is the unit of perf history: one file per benchmark
+area (``gemm`` / ``packing`` / ``sparse``), a versioned schema, an
+environment stamp (metadata only — the diff never compares it), and a
+name-sorted record list so committed baselines produce minimal git diffs.
+
+File schema (version 1)::
+
+    {
+      "schema_version": 1,
+      "area": "gemm",
+      "environment": {"python": ..., "jax": ..., "platform": ...},
+      "records": [WorkloadRecord.to_dict(), ...]   # sorted by name
+    }
+
+Writers are atomic (tmp + rename, same discipline as the PlanCache);
+readers validate and raise on unknown schema versions rather than
+silently mis-diffing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import sys
+import tempfile
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.perf.metrics import RECORD_KINDS, WorkloadRecord
+
+SCHEMA_VERSION = 1
+
+AREAS = ("gemm", "packing", "sparse")
+
+
+def bench_path(directory, area: str) -> Path:
+    """The canonical ``BENCH_<area>.json`` path under ``directory``."""
+    return Path(directory) / f"BENCH_{area}.json"
+
+
+def environment_stamp() -> Dict[str, str]:
+    """Where these numbers came from — metadata, never compared by diff."""
+    try:
+        import jax
+        jax_version = jax.__version__
+        backend = jax.default_backend()
+    except Exception:  # pragma: no cover - jax always present in-tree
+        jax_version, backend = "unavailable", "unavailable"
+    return {
+        "python": platform.python_version(),
+        "jax": jax_version,
+        "backend": backend,
+        "platform": sys.platform,
+        "machine": platform.machine(),
+    }
+
+
+# --- validation --------------------------------------------------------------
+
+def validate_record_dict(d: dict) -> List[str]:
+    """Schema problems of one record dict ([] == valid)."""
+    problems = []
+    if not isinstance(d, dict):
+        return [f"record is not a dict: {type(d).__name__}"]
+    for field in ("name", "area"):
+        if not isinstance(d.get(field), str) or not d.get(field):
+            problems.append(f"record field {field!r} missing or empty")
+    if d.get("kind", "model") not in RECORD_KINDS:
+        problems.append(f"record kind {d.get('kind')!r} not in "
+                        f"{RECORD_KINDS}")
+    for field in ("metrics", "noisy", "workload"):
+        val = d.get(field, {})
+        if not isinstance(val, dict):
+            problems.append(f"record field {field!r} is not a dict")
+    metrics = d.get("metrics", {})
+    if isinstance(metrics, dict):
+        for key, val in metrics.items():
+            if not isinstance(val, (int, float)) or isinstance(val, bool):
+                problems.append(
+                    f"metric {key!r} is not numeric: {val!r}")
+    phases = d.get("phases")
+    if phases is not None:
+        if not isinstance(phases, list):
+            problems.append("record field 'phases' is not a list")
+        else:
+            for p in phases:
+                if not isinstance(p, dict) or not {"name", "fwd",
+                                                   "bwd"} <= set(p):
+                    problems.append(f"malformed phase entry: {p!r}")
+    return problems
+
+
+def validate_bench_dict(d: dict) -> List[str]:
+    """Schema problems of a whole BENCH file dict ([] == valid)."""
+    problems = []
+    if not isinstance(d, dict):
+        return [f"bench file is not a dict: {type(d).__name__}"]
+    if d.get("schema_version") != SCHEMA_VERSION:
+        problems.append(
+            f"schema_version {d.get('schema_version')!r} != "
+            f"{SCHEMA_VERSION}")
+    if not isinstance(d.get("area"), str) or not d.get("area"):
+        problems.append("area missing or empty")
+    records = d.get("records")
+    if not isinstance(records, list):
+        return problems + ["records is not a list"]
+    seen = set()
+    for i, rec in enumerate(records):
+        for p in validate_record_dict(rec):
+            problems.append(f"records[{i}]: {p}")
+        name = rec.get("name") if isinstance(rec, dict) else None
+        if name in seen:
+            problems.append(f"records[{i}]: duplicate record name {name!r}")
+        seen.add(name)
+        if isinstance(rec, dict) and rec.get("area") not in (None,
+                                                             d.get("area")):
+            problems.append(
+                f"records[{i}]: area {rec.get('area')!r} != file area "
+                f"{d.get('area')!r}")
+    return problems
+
+
+# --- file I/O ----------------------------------------------------------------
+
+@dataclasses.dataclass
+class BenchFile:
+    """One parsed BENCH_<area>.json."""
+
+    area: str
+    schema_version: int
+    environment: Dict[str, str]
+    records: List[WorkloadRecord]
+
+    def by_name(self) -> Dict[str, WorkloadRecord]:
+        return {r.name: r for r in self.records}
+
+
+def write_bench(directory, area: str, records: List[WorkloadRecord],
+                *, environment: Optional[Dict[str, str]] = None) -> Path:
+    """Atomically write ``BENCH_<area>.json``; returns the path.
+
+    Records are sorted by name and serialized with sorted keys + trailing
+    newline, so re-emitting identical numbers produces a byte-identical
+    file (the property the committed-baseline workflow depends on).
+    """
+    path = bench_path(directory, area)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    dup = [r.name for r in records
+           if sum(1 for o in records if o.name == r.name) > 1]
+    if dup:
+        raise ValueError(f"duplicate record names in area {area!r}: "
+                         f"{sorted(set(dup))}")
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "area": area,
+        "environment": environment if environment is not None
+        else environment_stamp(),
+        "records": [r.to_dict() for r in
+                    sorted(records, key=lambda r: r.name)],
+    }
+    problems = validate_bench_dict(payload)
+    if problems:
+        raise ValueError(f"refusing to write invalid bench file: "
+                         f"{problems}")
+    text = json.dumps(payload, indent=1, sort_keys=True) + "\n"
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def read_bench(path) -> BenchFile:
+    """Parse + validate one BENCH file; raises ValueError on bad schema."""
+    raw = json.loads(Path(path).read_text())
+    problems = validate_bench_dict(raw)
+    if problems:
+        raise ValueError(f"{path}: invalid bench file: {problems[:5]}")
+    return BenchFile(
+        area=raw["area"],
+        schema_version=raw["schema_version"],
+        environment=dict(raw.get("environment", {})),
+        records=[WorkloadRecord.from_dict(r) for r in raw["records"]],
+    )
+
+
+# --- the harness recorder ----------------------------------------------------
+
+class Recorder:
+    """Collects WorkloadRecords across benchmark modules, grouped by area.
+
+    The benchmark harness installs one via ``benchmarks.common
+    .set_recorder``; every ``common.record(...)`` call lands here.  Later
+    records with a name already recorded in the same area REPLACE the
+    earlier one (a re-run of a bench function is an update, not a
+    duplicate).
+    """
+
+    def __init__(self):
+        self._by_area: Dict[str, Dict[str, WorkloadRecord]] = {}
+
+    def add(self, record: WorkloadRecord) -> None:
+        problems = validate_record_dict(record.to_dict())
+        if problems:
+            raise ValueError(f"invalid record {record.name!r}: {problems}")
+        self._by_area.setdefault(record.area, {})[record.name] = record
+
+    def areas(self) -> List[str]:
+        return sorted(self._by_area)
+
+    def records(self, area: str) -> List[WorkloadRecord]:
+        return sorted(self._by_area.get(area, {}).values(),
+                      key=lambda r: r.name)
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._by_area.values())
+
+    def write_all(self, directory,
+                  *, environment: Optional[Dict[str, str]] = None
+                  ) -> Dict[str, Path]:
+        """One BENCH_<area>.json per recorded area; {area: path}."""
+        return {area: write_bench(directory, area, self.records(area),
+                                  environment=environment)
+                for area in self.areas()}

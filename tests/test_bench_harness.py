@@ -1,0 +1,148 @@
+"""Harness-level tests: every bench module imports clean, the run.py
+--smoke/--emit/--only/--diff paths work end to end, and every emitted
+record validates against the BENCH schema."""
+import importlib
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+BENCH_MODULES = [
+    "benchmarks.common",
+    "benchmarks.bench_autotune",
+    "benchmarks.bench_breakdown",
+    "benchmarks.bench_epilogue",
+    "benchmarks.bench_gemm_workloads",
+    "benchmarks.bench_irregular",
+    "benchmarks.bench_loads",
+    "benchmarks.bench_mixed_precision",
+    "benchmarks.bench_packing",
+    "benchmarks.bench_sparse",
+    "benchmarks.bench_tiles",
+    "benchmarks.roofline_report",
+    "benchmarks.run",
+]
+
+
+@pytest.mark.parametrize("mod", BENCH_MODULES)
+def test_smoke_import(mod):
+    importlib.import_module(mod)
+
+
+def test_run_sys_path_idempotent():
+    """Re-importing the harness must not grow sys.path (satellite fix:
+    the old insert-always version stacked duplicates)."""
+    import benchmarks.run as run
+    before = list(sys.path)
+    importlib.reload(run)
+    importlib.reload(run)
+    added = [p for p in sys.path if p not in before]
+    assert added == [], f"sys.path grew on re-import: {added}"
+
+
+def test_run_areas_cover_registry():
+    import benchmarks.run as run
+    assert set(run.AREA_RUNNERS) == set(run.AREAS) == \
+        {"gemm", "packing", "sparse"}
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    """One full --smoke --emit across all areas (shared by the tests)."""
+    import benchmarks.run as run
+    out = tmp_path_factory.mktemp("bench_out")
+    rc = run.main(["--smoke", "--emit", "--out", str(out)])
+    assert rc == 0
+    return out
+
+
+class TestEmit(object):
+    def test_writes_every_area(self, emitted):
+        for area in ("gemm", "packing", "sparse"):
+            assert (emitted / f"BENCH_{area}.json").exists()
+
+    def test_emitted_files_schema_valid(self, emitted):
+        from repro.perf.trajectory import read_bench, validate_bench_dict
+        for area in ("gemm", "packing", "sparse"):
+            path = emitted / f"BENCH_{area}.json"
+            raw = json.loads(path.read_text())
+            assert validate_bench_dict(raw) == []
+            bf = read_bench(path)          # raises on schema violations
+            assert bf.area == area
+            assert len(bf.records) > 0
+            for rec in bf.records:
+                assert rec.area == area
+                for key, val in rec.metrics.items():
+                    assert isinstance(val, (int, float)), (rec.name, key)
+
+    def test_known_anchors_present(self, emitted):
+        """Representative records from each bench family made it through."""
+        from repro.perf.trajectory import read_bench
+        gemm = read_bench(emitted / "BENCH_gemm.json").by_name()
+        assert "gemm_workload_01_float32" in gemm
+        assert "epilogue_trace_swiglu" in gemm
+        assert "breakdown_geomean_partition" in gemm
+        packing = read_bench(emitted / "BENCH_packing.json").by_name()
+        assert any(n.startswith("packing_01_bf16") for n in packing)
+        sparse = read_bench(emitted / "BENCH_sparse.json").by_name()
+        assert "sparse_trace_llama-w19_d0.5" in sparse
+
+    def test_paper_workload_metrics_match_accounting(self, emitted):
+        """The emitted Table III records carry the metrics core's numbers."""
+        from repro.core.blocking import plan_gemm
+        from repro.perf.metrics import gemm_flops
+        from repro.perf.trajectory import read_bench
+        gemm = read_bench(emitted / "BENCH_gemm.json").by_name()
+        rec = gemm["gemm_workload_01_float32"]
+        plan = plan_gemm(64, 2112, 7168, "float32")
+        assert rec.metrics["flops"] == float(gemm_flops(64, 2112, 7168))
+        assert rec.metrics["hbm_bytes"] == float(plan.hbm_bytes)
+        assert rec.plan["blocks"] == [plan.bm, plan.bn, plan.bk]
+
+    def test_packed_prep_bytes_zero_in_records(self, emitted):
+        """The packing area's headline fact survives into the artifact."""
+        from repro.perf.trajectory import read_bench
+        packing = read_bench(emitted / "BENCH_packing.json")
+        prep = [r.metrics["prep_bytes_packed"] for r in packing.records
+                if "prep_bytes_packed" in r.metrics]
+        assert prep and all(v == 0.0 for v in prep)
+
+    def test_diff_self_is_clean_and_perturbed_fails(self, emitted,
+                                                    tmp_path):
+        import benchmarks.run as run
+        # self-diff: exit 0 (byte-identical emission)
+        rc = run.main(["--smoke", "--emit", "--only", "sparse",
+                       "--out", str(tmp_path / "cur"),
+                       "--diff", str(emitted)])
+        assert rc == 0
+        # perturb one deterministic metric beyond tolerance: exit 1
+        bad_dir = tmp_path / "bad_base"
+        bad_dir.mkdir()
+        raw = json.loads((emitted / "BENCH_sparse.json").read_text())
+        for rec in raw["records"]:
+            if rec["metrics"]:
+                key = sorted(rec["metrics"])[0]
+                rec["metrics"][key] = rec["metrics"][key] * 2 + 1
+                break
+        (bad_dir / "BENCH_sparse.json").write_text(json.dumps(raw))
+        rc = run.main(["--smoke", "--emit", "--only", "sparse",
+                       "--out", str(tmp_path / "cur2"),
+                       "--diff", str(bad_dir)])
+        assert rc == 1
+
+    def test_recorder_uninstalled_after_run(self, emitted):
+        from benchmarks import common
+        assert common.get_recorder() is None
+
+
+def test_committed_baselines_valid():
+    """The baselines shipped in-tree parse and cover every area."""
+    from repro.perf.trajectory import read_bench
+    base = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines")
+    for area in ("gemm", "packing", "sparse"):
+        bf = read_bench(os.path.join(base, f"BENCH_{area}.json"))
+        assert bf.area == area and len(bf.records) > 0

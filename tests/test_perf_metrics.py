@@ -1,0 +1,419 @@
+"""Tests for the perf-trajectory metrics core (repro.perf).
+
+Pins the accounting down: FLOPs / HBM-bytes / tile-visit counts for 2-D,
+grouped, packed, and density-priced sparse GEMMs — cross-checked against
+``core/blocking.py``'s ``modeled_traffic_bytes`` AND hand-computed values
+for the paper's Table III workloads 1, 13, 19 — plus the BENCH file
+schema round-trip and the diff's tolerance/direction logic.
+"""
+import math
+
+import pytest
+
+from repro.core.blocking import modeled_traffic_bytes, plan_gemm, plan_grouped_gemm
+from repro.core.constants import DEFAULT_HW
+from repro.perf.diff import (
+    DEFAULT_REL_TOL, diff_bench, markdown_report, metric_direction,
+    resolve_tolerance,
+)
+from repro.perf.metrics import (
+    PhaseFlops, WorkloadRecord, gemm_bytes, gemm_flops, modeled_gemm_us,
+    phase_flops, plan_provenance, record_from_plan, tile_visits, total_flops,
+)
+from repro.perf.trajectory import (
+    SCHEMA_VERSION, BenchFile, Recorder, bench_path, read_bench,
+    validate_bench_dict, validate_record_dict, write_bench,
+)
+
+# Paper Table III reference workloads: decode-skinny (1), square training
+# (13), and the LLaMA low-rank shape (19).
+W1 = (64, 2112, 7168)
+W13 = (4096, 2112, 7168)
+W19 = (4096, 256, 4096)
+
+
+# --- FLOPs accounting --------------------------------------------------------
+
+class TestGemmFlops:
+    def test_hand_computed_paper_workloads(self):
+        # 2*m*n*k, computed by hand for the three reference shapes
+        assert gemm_flops(*W1) == 2 * 64 * 2112 * 7168 == 1_937_768_448
+        assert gemm_flops(*W13) == 2 * 4096 * 2112 * 7168 == 124_017_180_672
+        assert gemm_flops(*W19) == 2 * 4096 * 256 * 4096 == 8_589_934_592
+
+    def test_grouped_scales_by_g(self):
+        assert gemm_flops(*W19, g=8) == 8 * gemm_flops(*W19)
+
+    def test_density_prices_sparse(self):
+        assert gemm_flops(*W19, density=0.25) == gemm_flops(*W19) // 4
+
+    def test_matches_planner(self):
+        for (m, n, k) in (W1, W13, W19):
+            plan = plan_gemm(m, n, k, "bfloat16")
+            assert gemm_flops(m, n, k) == plan.flops
+
+    def test_grouped_matches_planner(self):
+        m, n, k, g = 480, 1408, 2048, 64
+        plan = plan_grouped_gemm(g, m, n, k, "bfloat16")
+        assert gemm_flops(m, n, k, g=g) == plan.flops
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            gemm_flops(64, 64, 64, g=0)
+        with pytest.raises(ValueError):
+            gemm_flops(64, 64, 64, density=0.0)
+        with pytest.raises(ValueError):
+            gemm_flops(64, 64, 64, density=1.5)
+
+
+# --- HBM-bytes accounting ----------------------------------------------------
+
+class TestGemmBytes:
+    def test_hand_computed_w1(self):
+        # K-innermost revisiting grid: A re-read per column block, B per
+        # row block, C written once.  With blocks (bm, bn) covering the
+        # whole extent, every operand moves exactly once.
+        m, n, k = W1
+        got = gemm_bytes(m, n, k, bm=m, bn=n,
+                         a_dtype="bfloat16", out_dtype="bfloat16")
+        assert got == (m * k + k * n + m * n) * 2
+
+    def test_hand_computed_w13_with_reread(self):
+        # bm = 1024, bn = 1056 -> 4 row blocks x 2 column blocks
+        m, n, k = W13
+        bm, bn = 1024, 1056
+        expect = (m * k * 2) * 2 + (k * n * 2) * 4 + m * n * 2
+        assert gemm_bytes(m, n, k, bm=bm, bn=bn, a_dtype="bfloat16") == expect
+
+    def test_cross_check_modeled_traffic(self):
+        # Must delegate EXACTLY to core/blocking's model for any blocks.
+        for (m, n, k) in (W1, W13, W19):
+            plan = plan_gemm(m, n, k, "bfloat16")
+            assert gemm_bytes(m, n, k, bm=plan.bm, bn=plan.bn,
+                              a_dtype="bfloat16") == plan.hbm_bytes
+            assert gemm_bytes(m, n, k, bm=plan.bm, bn=plan.bn,
+                              a_dtype="bfloat16") == modeled_traffic_bytes(
+                m, n, k, plan.bm, plan.bn, 2, 2, 2)
+
+    def test_packed_mixed_dtypes(self):
+        # Packed int8 payload under a bf16 activation: B moves 1 byte/elem.
+        m, n, k = W19
+        got = gemm_bytes(m, n, k, bm=m, bn=n,
+                         a_dtype="bfloat16", b_dtype="int8",
+                         out_dtype="bfloat16")
+        assert got == m * k * 2 + k * n * 1 + m * n * 2
+
+    def test_grouped_lift(self):
+        m, n, k = W19
+        one = gemm_bytes(m, n, k, bm=512, bn=256, a_dtype="bfloat16")
+        assert gemm_bytes(m, n, k, bm=512, bn=256, a_dtype="bfloat16",
+                          g=8) == 8 * one
+
+    def test_density_priced_sparse(self):
+        # A and B terms shrink with density; the C write does not.
+        m, n, k = W19
+        bm, bn = 512, 256
+        dense = gemm_bytes(m, n, k, bm=bm, bn=bn, a_dtype="bfloat16")
+        half = gemm_bytes(m, n, k, bm=bm, bn=bn, a_dtype="bfloat16",
+                          density=0.5)
+        c_term = m * n * 2
+        assert half - c_term == pytest.approx((dense - c_term) / 2)
+        # and agrees with the planner's density-priced plan
+        plan = plan_gemm(m, n, k, "bfloat16", density=0.5)
+        assert gemm_bytes(m, n, k, bm=plan.bm, bn=plan.bn,
+                          a_dtype="bfloat16", density=0.5) == plan.hbm_bytes
+
+    def test_epilogue_operands_and_beta(self):
+        m, n, k = W19
+        base = gemm_bytes(m, n, k, bm=m, bn=n, a_dtype="bfloat16")
+        gated = gemm_bytes(m, n, k, bm=m, bn=n, a_dtype="bfloat16",
+                           extra_mn_inputs=1)
+        assert gated - base == m * n * 2       # one streamed (M, N) operand
+        with_c = gemm_bytes(m, n, k, bm=m, bn=n, a_dtype="bfloat16",
+                            beta=1.0)
+        assert with_c - base == m * n * 2      # C read once more
+
+
+# --- tile-visit accounting ---------------------------------------------------
+
+class TestTileVisits:
+    def test_dense_2d(self):
+        m, n, k = W19
+        plan = plan_gemm(m, n, k, "bfloat16")
+        expect = (math.ceil(m / plan.bm) * math.ceil(n / plan.bn)
+                  * math.ceil(k / plan.bk))
+        assert tile_visits(m, n, k, plan.bm, plan.bn, plan.bk) == expect
+        # cross-check against the plan's own grid
+        assert expect == plan.grid[0] * plan.grid[1] * plan.grid[2]
+
+    def test_grouped(self):
+        assert tile_visits(128, 256, 512, 64, 128, 128, g=8) \
+            == 8 * tile_visits(128, 256, 512, 64, 128, 128)
+
+    def test_sparse_schedule(self):
+        # Sparse grid is (m/bm, schedule_len): visits follow the schedule,
+        # not the dense lattice.
+        assert tile_visits(4096, 256, 4096, 512, 256, 512,
+                           schedule_len=4) == 8 * 4
+        dense = tile_visits(4096, 256, 4096, 512, 256, 512)
+        assert dense == 8 * 1 * 8
+
+
+# --- roofline time + per-phase model accounting ------------------------------
+
+class TestModeledTime:
+    def test_roofline_max_of_terms(self):
+        hw = DEFAULT_HW
+        flops, bytes_ = 1e12, 1e9
+        t = modeled_gemm_us(flops, bytes_, "bfloat16", hw)
+        assert t == pytest.approx(
+            max(flops / hw.peak_flops_bf16, bytes_ / hw.hbm_bw) * 1e6)
+
+    def test_int8_uses_int8_peak(self):
+        hw = DEFAULT_HW
+        assert modeled_gemm_us(1e12, 1, "int8", hw) == pytest.approx(
+            1e12 / hw.peak_ops_int8 * 1e6)
+
+
+class TestPhaseFlops:
+    def test_dense_decomposition(self):
+        from repro.configs import base as cb
+        cfg = cb.get("h2o-danube3-4b", smoke=True)
+        tokens, seq = 128, 128
+        phases = phase_flops(cfg, tokens, seq)
+        by = {p.name: p for p in phases}
+        d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+        L = len(cfg.pattern)
+        qkv_w = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads)
+        assert by["attn_qkv"].fwd == 2 * tokens * qkv_w * L
+        assert by["mlp"].fwd == 2 * tokens * 3 * d * f * L  # swiglu: 3 mats
+        assert by["logits"].fwd == 2 * tokens * d * cfg.vocab
+        assert by["embed"].fwd == 0 and by["embed"].bwd == 0
+        # bwd = 2x fwd for every GEMM phase
+        for p in phases:
+            if p.fwd:
+                assert p.bwd == 2 * p.fwd
+
+    def test_moe_counts_active_experts(self):
+        from repro.configs import base as cb
+        cfg = cb.get("granite-moe-1b-a400m", smoke=True)
+        phases = {p.name: p for p in phase_flops(cfg, 64, 64)}
+        assert "moe_router" in phases and "moe_experts" in phases
+        L = len(cfg.pattern)
+        assert phases["moe_router"].fwd == \
+            2 * 64 * cfg.d_model * cfg.n_experts * L
+        assert phases["moe_experts"].fwd == \
+            2 * 64 * 3 * cfg.d_model * cfg.d_ff * cfg.experts_per_token * L
+
+    def test_totals(self):
+        phases = [PhaseFlops("a", 10, 20), PhaseFlops("b", 1, 2)]
+        assert total_flops(phases) == {"fwd": 11, "bwd": 22, "total": 33}
+
+    def test_round_trip(self):
+        p = PhaseFlops("mlp", 123, 246)
+        assert PhaseFlops.from_dict(p.to_dict()) == p
+
+
+# --- record + schema round-trip ----------------------------------------------
+
+class TestRecordSchema:
+    def test_record_round_trip(self):
+        rec = WorkloadRecord(
+            name="w1", area="gemm", kind="model",
+            workload={"m": 64, "n": 2112, "k": 7168},
+            metrics={"flops": 1.9e9, "modeled_us": 12.5},
+            noisy={"wall_us": 1234.5},
+            phases=[PhaseFlops("mlp", 10, 20)],
+        )
+        back = WorkloadRecord.from_dict(rec.to_dict())
+        assert back.to_dict() == rec.to_dict()
+        assert validate_record_dict(rec.to_dict()) == []
+
+    def test_record_from_plan_carries_roofline_terms(self):
+        plan = plan_gemm(*W19, "bfloat16")
+        rec = record_from_plan("w19", "gemm", plan)
+        assert rec.metrics["flops"] == plan.flops
+        assert rec.metrics["hbm_bytes"] == plan.hbm_bytes
+        assert rec.metrics["cmr"] == pytest.approx(plan.cmr)
+        assert rec.metrics["tile_visits"] == \
+            plan.grid[0] * plan.grid[1] * plan.grid[2]
+        assert rec.plan["blocks"] == [plan.bm, plan.bn, plan.bk]
+        assert rec.plan["source"] == "analytic"
+
+    def test_invalid_kind_rejected(self):
+        with pytest.raises(ValueError):
+            WorkloadRecord(name="x", area="gemm", kind="vibes")
+
+    def test_validate_catches_bad_metrics(self):
+        bad = {"name": "x", "area": "gemm", "kind": "model",
+               "metrics": {"us": "fast"}, "noisy": {}, "workload": {}}
+        assert any("not numeric" in p for p in validate_record_dict(bad))
+
+    def test_bench_file_round_trip(self, tmp_path):
+        recs = [
+            record_from_plan("w19", "gemm", plan_gemm(*W19, "bfloat16")),
+            WorkloadRecord(name="aaa_first", area="gemm",
+                           metrics={"x": 1.0}),
+        ]
+        path = write_bench(tmp_path, "gemm", recs,
+                           environment={"host": "test"})
+        assert path == bench_path(tmp_path, "gemm")
+        bf = read_bench(path)
+        assert isinstance(bf, BenchFile)
+        assert bf.schema_version == SCHEMA_VERSION
+        assert bf.area == "gemm"
+        # records come back name-sorted
+        assert [r.name for r in bf.records] == ["aaa_first", "w19"]
+        assert bf.by_name()["w19"].metrics["flops"] == \
+            float(gemm_flops(*W19))
+
+    def test_write_is_deterministic(self, tmp_path):
+        recs = [WorkloadRecord(name="a", area="gemm", metrics={"x": 1.5})]
+        p1 = write_bench(tmp_path / "one", "gemm", recs,
+                         environment={"e": "1"})
+        p2 = write_bench(tmp_path / "two", "gemm", recs,
+                         environment={"e": "1"})
+        assert p1.read_bytes() == p2.read_bytes()
+
+    def test_duplicate_names_rejected(self, tmp_path):
+        recs = [WorkloadRecord(name="a", area="gemm"),
+                WorkloadRecord(name="a", area="gemm")]
+        with pytest.raises(ValueError, match="duplicate"):
+            write_bench(tmp_path, "gemm", recs)
+
+    def test_read_rejects_bad_schema_version(self, tmp_path):
+        path = write_bench(tmp_path, "gemm",
+                           [WorkloadRecord(name="a", area="gemm")])
+        import json
+        raw = json.loads(path.read_text())
+        raw["schema_version"] = 99
+        path.write_text(json.dumps(raw))
+        assert validate_bench_dict(raw)
+        with pytest.raises(ValueError, match="schema_version"):
+            read_bench(path)
+
+    def test_recorder_replaces_same_name(self, tmp_path):
+        rec = Recorder()
+        rec.add(WorkloadRecord(name="a", area="gemm", metrics={"x": 1.0}))
+        rec.add(WorkloadRecord(name="a", area="gemm", metrics={"x": 2.0}))
+        rec.add(WorkloadRecord(name="b", area="sparse"))
+        assert len(rec) == 2
+        assert rec.records("gemm")[0].metrics["x"] == 2.0
+        paths = rec.write_all(tmp_path)
+        assert sorted(paths) == ["gemm", "sparse"]
+
+
+# --- diff tolerance / direction logic ----------------------------------------
+
+def _bench(metrics, area="gemm", name="w"):
+    return BenchFile(area=area, schema_version=SCHEMA_VERSION,
+                     environment={},
+                     records=[WorkloadRecord(name=name, area=area,
+                                             metrics=metrics)])
+
+
+class TestDiff:
+    def test_direction_table(self):
+        assert metric_direction("modeled_us") == "lower"
+        assert metric_direction("hbm_bytes") == "lower"
+        assert metric_direction("tile_visits") == "lower"
+        assert metric_direction("modeled_speedup_vs_naive") == "higher"
+        assert metric_direction("cmr") == "higher"
+        assert metric_direction("peak_frac_int8") == "higher"
+        assert metric_direction("mystery_number") == "both"
+
+    def test_unchanged_passes(self):
+        r = diff_bench(_bench({"modeled_us": 10.0}),
+                       _bench({"modeled_us": 10.0}))
+        assert r.ok and r.unchanged_count == 1 and not r.regressions
+
+    def test_regression_in_bad_direction(self):
+        r = diff_bench(_bench({"modeled_us": 10.0}),
+                       _bench({"modeled_us": 11.0}))
+        assert not r.ok
+        assert r.regressions[0].metric == "modeled_us"
+        assert r.regressions[0].status == "regression"
+
+    def test_improvement_not_failed(self):
+        r = diff_bench(_bench({"modeled_us": 10.0}),
+                       _bench({"modeled_us": 9.0}))
+        assert r.ok and len(r.improvements) == 1
+
+    def test_higher_is_better_direction(self):
+        worse = diff_bench(_bench({"speedup": 2.0}),
+                           _bench({"speedup": 1.5}))
+        assert not worse.ok
+        better = diff_bench(_bench({"speedup": 2.0}),
+                            _bench({"speedup": 2.5}))
+        assert better.ok and len(better.improvements) == 1
+
+    def test_within_tolerance(self):
+        r = diff_bench(_bench({"modeled_us": 100.0}),
+                       _bench({"modeled_us": 101.0}),
+                       tolerances={"modeled_us": 0.02})
+        assert r.ok and len(r.within_tol) == 1 and not r.regressions
+
+    def test_beyond_tolerance_fails(self):
+        r = diff_bench(_bench({"modeled_us": 100.0}),
+                       _bench({"modeled_us": 103.0}),
+                       tolerances={"modeled_us": 0.02})
+        assert not r.ok
+
+    def test_unknown_metric_two_sided(self):
+        # deterministic unknown metrics must not drift in EITHER direction
+        for cur in (0.9, 1.1):
+            r = diff_bench(_bench({"mystery_number": 1.0}),
+                           _bench({"mystery_number": cur}))
+            assert not r.ok
+
+    def test_new_metric_reported_not_failed(self):
+        r = diff_bench(_bench({"a_us": 1.0}),
+                       _bench({"a_us": 1.0, "b_us": 2.0}))
+        assert r.ok and r.new_metrics == [("w", "b_us")]
+
+    def test_missing_metric_fails(self):
+        r = diff_bench(_bench({"a_us": 1.0, "b_us": 2.0}),
+                       _bench({"a_us": 1.0}))
+        assert not r.ok and r.missing_metrics == [("w", "b_us")]
+
+    def test_missing_record_fails_new_record_does_not(self):
+        base = _bench({"a_us": 1.0})
+        cur = BenchFile(area="gemm", schema_version=SCHEMA_VERSION,
+                        environment={},
+                        records=[WorkloadRecord(name="other", area="gemm",
+                                                metrics={"a_us": 1.0})])
+        r = diff_bench(base, cur)
+        assert not r.ok and r.missing_records == ["w"]
+        assert r.new_records == ["other"]
+
+    def test_noisy_never_gated(self):
+        base = _bench({"a_us": 1.0})
+        base.records[0].noisy = {"wall_us": 100.0}
+        cur = _bench({"a_us": 1.0})
+        cur.records[0].noisy = {"wall_us": 9999.0}
+        assert diff_bench(base, cur).ok
+
+    def test_area_mismatch_raises(self):
+        with pytest.raises(ValueError, match="area mismatch"):
+            diff_bench(_bench({}, area="gemm"), _bench({}, area="sparse"))
+
+    def test_tolerance_resolution(self):
+        tols = {"modeled": 0.05, "modeled_us": 0.01}
+        assert resolve_tolerance("modeled_us", tols, 0.0) == 0.01  # exact
+        assert resolve_tolerance("modeled_speedup", tols, 0.0) == 0.05
+        assert resolve_tolerance("other", tols, 0.0) == 0.0
+        assert resolve_tolerance("x", None, DEFAULT_REL_TOL) \
+            == DEFAULT_REL_TOL
+
+    def test_markdown_report_verdicts(self):
+        ok = diff_bench(_bench({"a_us": 1.0}), _bench({"a_us": 1.0}))
+        assert "**PASS**" in markdown_report([ok])
+        bad = diff_bench(_bench({"a_us": 1.0}), _bench({"a_us": 2.0}))
+        text = markdown_report([bad])
+        assert "**FAIL**" in text and "a_us" in text
+
+
+def test_plan_provenance_json_safe():
+    import json
+    plan = plan_gemm(*W1, "bfloat16")
+    json.dumps(plan_provenance(plan))  # must not raise

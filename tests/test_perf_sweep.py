@@ -1,0 +1,182 @@
+"""Offline plan-cache sweep (repro.perf.sweep): enumeration fidelity and
+the acceptance gate — every enumerated (config × policy × layout ×
+epilogue) combo must leave a PlanCache hit."""
+import pytest
+
+from repro.configs import base as cb
+from repro.core.blocking import plan_gemm
+from repro.perf.sweep import (
+    LAYOUTS, PACK_M_HINT, SERVE_POLICIES, enumerate_gemm_instances,
+    enumerate_shipped_combos, verify_warm, warm_plan_cache,
+)
+from repro.tuning.plan_cache import PlanCache, make_key
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return PlanCache(str(tmp_path / "plans.json"))
+
+
+# One dense arch, one MoE arch, one recurrent arch — covers every
+# instance-derivation branch without sweeping all ten configs.
+ARCH_SAMPLE = ("h2o-danube3-4b", "granite-moe-1b-a400m", "rwkv6-1.6b")
+
+
+class TestEnumeration:
+    def test_dense_arch_instances(self):
+        cfg = cb.get("h2o-danube3-4b", smoke=True)
+        roles = {i.role for i in enumerate_gemm_instances(cfg, m_tokens=32)}
+        assert {"attn_q", "attn_kv", "attn_out", "mlp_up", "mlp_gate",
+                "mlp_down", "logits"} <= roles
+        assert not any(r.startswith("moe") for r in roles)
+
+    def test_moe_arch_gets_grouped_experts(self):
+        cfg = cb.get("granite-moe-1b-a400m", smoke=True)
+        insts = {i.role: i for i in enumerate_gemm_instances(cfg,
+                                                            m_tokens=32)}
+        assert insts["moe_up"].g == cfg.n_experts
+        assert insts["moe_router"].force_policy == "fp32"
+        assert insts["moe_gate"].epilogue_kind == "gated"
+        assert insts["moe_gate"].activation == "silu"
+        # moe_mlp keeps f32 activations between expert GEMMs and combine
+        assert insts["moe_up"].force_out_dtype == "float32"
+        # capacity rule: ceil-ish round of 1.25 * topk * T / E
+        expect = max(1, int(round(
+            1.25 * cfg.experts_per_token * 32 / cfg.n_experts)))
+        assert insts["moe_up"].m == expect
+
+    def test_recurrent_arch_instances(self):
+        cfg = cb.get("rwkv6-1.6b", smoke=True)
+        roles = {i.role for i in enumerate_gemm_instances(cfg, m_tokens=32)}
+        assert "rec_mix" in roles and "attn_q" not in roles
+
+    def test_swiglu_epilogues(self):
+        cfg = cb.get("h2o-danube3-4b", smoke=True)
+        insts = {i.role: i for i in enumerate_gemm_instances(cfg,
+                                                            m_tokens=32)}
+        assert insts["mlp_gate"].epilogue().tag == "gated-silu"
+        assert insts["mlp_down"].epilogue().tag == "residual"
+        assert insts["mlp_up"].epilogue() is None
+
+    def test_combos_deduplicated(self):
+        combos = enumerate_shipped_combos(ARCH_SAMPLE, m_tokens=(32,),
+                                          smoke=True)
+        keys = [c.key for c in combos]
+        assert len(keys) == len(set(keys))
+        assert combos, "no combos enumerated"
+
+    def test_combo_axes_covered(self):
+        combos = enumerate_shipped_combos(ARCH_SAMPLE, m_tokens=(32,),
+                                          smoke=True)
+        # bf16_serve keys collide with bf16 (same launch dtypes) and are
+        # deduplicated away — only distinctly-keyed policies survive.
+        assert {c.policy for c in combos} == {"bf16", "int8"}
+        assert {c.layout for c in combos} == set(LAYOUTS)
+        # fused-epilogue namespaces present among the enumerated keys
+        assert any("|ep=gated-silu" in c.key for c in combos)
+        assert any("|ep=residual" in c.key for c in combos)
+        assert any("|lay=packB" in c.key for c in combos)
+        assert any(c.key.startswith("g") for c in combos)   # grouped MoE
+
+    def test_int8_policy_quantizes_operand_dtypes(self):
+        combos = enumerate_shipped_combos(("h2o-danube3-4b",),
+                                          policies=("int8",),
+                                          layouts=("dense",),
+                                          m_tokens=(32,), smoke=True)
+        assert all("|a=int8|b=int8|" in c.key for c in combos
+                   if c.instance.force_policy is None)
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="unknown policy"):
+            enumerate_shipped_combos(("h2o-danube3-4b",),
+                                     policies=("fp64",), smoke=True)
+
+
+class TestWarm:
+    def test_every_combo_hits_after_sweep(self, cache):
+        """THE acceptance gate: repro.perf.sweep leaves a PlanCache hit
+        for every shipped combination it enumerates."""
+        combos = enumerate_shipped_combos(ARCH_SAMPLE,
+                                          m_tokens=(32, 4096), smoke=True)
+        result = warm_plan_cache(combos, cache, mode="modeled")
+        assert result.warmed == len(combos)
+        assert verify_warm(combos, cache) == []
+
+    def test_sweep_idempotent(self, cache):
+        combos = enumerate_shipped_combos(("h2o-danube3-4b",),
+                                          m_tokens=(32,), smoke=True)
+        first = warm_plan_cache(combos, cache, mode="modeled")
+        second = warm_plan_cache(combos, cache, mode="modeled")
+        assert first.warmed == len(combos)
+        assert second.warmed == 0 and second.skipped == len(combos)
+
+    def test_packed_plan_blocks_pinned_to_layout(self, cache):
+        """A swept packed plan must carry the payload layout's (bn, bk) —
+        kernels/mpgemm.py::_layout_plan DISCARDS mismatched plans."""
+        combos = [c for c in enumerate_shipped_combos(
+            ("h2o-danube3-4b",), policies=("bf16",), m_tokens=(32,),
+            smoke=True) if c.layout == "packed"]
+        warm_plan_cache(combos, cache, mode="modeled")
+        for c in combos:
+            plan = cache.get(c.key)
+            layout_plan = plan_gemm(PACK_M_HINT, c.instance.n, c.instance.k,
+                                    "bfloat16", "bfloat16")
+            assert (plan.bn, plan.bk) == (layout_plan.bn, layout_plan.bk), \
+                c.key
+
+    def test_launch_resolver_accepts_swept_packed_plan(self, cache):
+        """End to end: pack a weight the way load-time packing does, and
+        the launch-side resolver must return the SWEPT plan, not fall back
+        to the analytic solve."""
+        import jax.numpy as jnp
+        from repro.kernels.mpgemm import _layout_plan
+        from repro.packing import pack_operand
+        combos = [c for c in enumerate_shipped_combos(
+            ("h2o-danube3-4b",), policies=("bf16",), m_tokens=(32,),
+            smoke=True)
+            if c.layout == "packed" and c.instance.g == 1
+            and c.instance.epilogue() is None][:1]
+        assert combos
+        c = combos[0]
+        warm_plan_cache(combos, cache, mode="modeled")
+        from repro.tuning import plan_cache as pc
+        old = pc.set_plan_cache(cache)
+        try:
+            inst = c.instance
+            lp = plan_gemm(PACK_M_HINT, inst.n, inst.k, "bfloat16",
+                           "bfloat16")
+            packed = pack_operand(jnp.zeros((inst.k, inst.n), jnp.float32),
+                                  (lp.bk, lp.bn), dtype="bfloat16",
+                                  backend="xla")
+            got = _layout_plan(inst.m, inst.k, inst.n, packed.layout,
+                               "bfloat16", "bfloat16", False, 0.0,
+                               sparse=False, g=1, epilogue_tag="")
+            want = cache.get(c.key)
+            assert (got.bm, got.bn, got.bk) == (want.bm, want.bn, want.bk)
+        finally:
+            pc.set_plan_cache(old)
+
+    def test_dense_keys_match_tuner_keys(self, cache):
+        """Enumerated keys must be byte-identical to what the tuner
+        persists (warm_plan_cache raises on drift; this pins one example)."""
+        combos = [c for c in enumerate_shipped_combos(
+            ("h2o-danube3-4b",), policies=("bf16",), layouts=("dense",),
+            m_tokens=(32,), smoke=True) if c.instance.role == "mlp_gate"]
+        assert combos
+        c = combos[0]
+        inst = c.instance
+        assert c.key == make_key(
+            inst.m, inst.n, inst.k, "bfloat16", "bfloat16", "bfloat16",
+            epilogue="gated-silu")
+        warm_plan_cache(combos, cache, mode="modeled")
+        assert cache.get(c.key) is not None
+
+
+def test_cli_smoke(tmp_path, capsys):
+    from repro.perf.sweep import main
+    rc = main(["--out", str(tmp_path / "plans.json"),
+               "--archs", "h2o-danube3-4b", "--m-tokens", "32",
+               "--mode", "modeled", "--smoke"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "every enumerated combo has a PlanCache hit" in out
