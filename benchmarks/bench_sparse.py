@@ -167,7 +167,7 @@ def run_wall(assert_gate: bool = False, m_tokens: int = 1024,
     for d in (1.0, 0.5, 0.25):
         sp = sparsify_magnitude(w, WALL_BLOCKS, density=d, dtype="bfloat16")
         f = jax.jit(
-            lambda x, sp=sp: mpgemm_pallas(x, b_sparse=sp, interpret=True))
+            lambda x, sp=sp: mpgemm_pallas(x, sp, interpret=True))
         us = wall_time_us(f, x, iters=iters, warmup=1)
         walls[d] = us
         emit(f"sparse_wall_{name}_d{d}", us,

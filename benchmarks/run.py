@@ -11,7 +11,8 @@ Beyond the CSV, the harness owns the perf-trajectory artifacts
                     ``BENCH_<area>.json`` per area to --out
   --diff DIR        compare the emitted files against the baselines in DIR
                     (benchmarks/baselines in CI); exit 1 on any regression
-  --only AREA [...] run only the named areas (gemm / packing / sparse)
+  --only AREA [...] run only the named areas (gemm / packing / sparse /
+                    serve)
   --smoke           reduced workloads (small shapes, no wall clocks) — the
                     configuration the committed baselines are built from,
                     so ``--smoke --emit --diff benchmarks/baselines`` is
@@ -29,7 +30,7 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-AREAS = ("gemm", "packing", "sparse")
+AREAS = ("gemm", "packing", "sparse", "serve")
 
 
 def run_gemm(smoke: bool = False) -> None:
@@ -80,10 +81,18 @@ def run_sparse(smoke: bool = False) -> None:
         bench_sparse.run_wall()
 
 
+def run_serve(smoke: bool = False) -> None:
+    from benchmarks import bench_serve
+    bench_serve.run()                      # beyond-paper: paged vs dense KV
+    bench_serve.run_trace_gate(assert_gate=smoke)
+    bench_serve.run_e2e(assert_gate=smoke)
+
+
 AREA_RUNNERS = {
     "gemm": run_gemm,
     "packing": run_packing,
     "sparse": run_sparse,
+    "serve": run_serve,
 }
 
 

@@ -47,7 +47,7 @@ print("loss:", trainer.metrics_log[0]["loss"], "->",
 # ------------------------------------------------------------- 3. serve it
 from repro.serve.engine import Request, ServeEngine
 
-eng = ServeEngine(model, params, batch_size=2, max_len=96)
+eng = ServeEngine(model, params, max_batch=2, max_len=96)
 reqs = [Request(uid=i, prompt=rng.integers(2, cfg.vocab, (12,)).astype(np.int32),
                 max_new_tokens=8) for i in range(3)]
 print("generated:", {k: v[:8] for k, v in eng.generate(reqs).items()})

@@ -1,6 +1,6 @@
 """Batched serving example: mixed-precision policies side by side.
 
-Prefill + multi-wave continuous-ish batching, comparing the bf16 and int8
+Continuous batching with a paged KV cache, comparing the bf16 and int8
 serving policies (the paper's Section V surface) on the same prompts.
 
     PYTHONPATH=src python examples/serve_batch.py
@@ -28,15 +28,18 @@ def main():
     for policy in ("bf16", "int8"):
         model = build_model(cfg, policy=policy, remat=False)
         params = model.init(jax.random.PRNGKey(0))
-        eng = ServeEngine(model, params, batch_size=4, max_len=128)
+        eng = ServeEngine(model, params, max_batch=4, max_len=128,
+                          page_size=16)
         reqs = [Request(uid=i, prompt=p, max_new_tokens=12)
                 for i, p in enumerate(prompts)]
         t0 = time.time()
         out = eng.generate(reqs)
         dt = time.time() - t0
         n_tok = sum(len(v) for v in out.values())
-        print(f"[{policy:5s}] {len(reqs)} requests in 2 waves, "
-              f"{n_tok} tokens, {dt:.1f}s")
+        steps = eng.step_telemetry
+        peak = max((t.pages_in_use for t in steps), default=0)
+        print(f"[{policy:5s}] {len(reqs)} requests in {len(steps)} steps, "
+              f"{n_tok} tokens, peak {peak} KV pages, {dt:.1f}s")
         for uid in sorted(out)[:2]:
             print(f"   req{uid}: {out[uid]}")
     print("OK")

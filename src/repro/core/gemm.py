@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -106,8 +107,9 @@ def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
     interp = backend == "interpret"
 
     def _kernel(a, b, wp, scale, ws=None):
+        op = b if b is not None else wp if wp is not None else ws
         return mpgemm_pallas_spec(
-            a, b, b_packed=wp, b_sparse=ws, bias=bias, scale=scale,
+            a, op, bias=bias, scale=scale,
             extras=extras, spec=spec, epilogue=epilogue,
             out_dtype=out_dtype, interpret=interp)
 
@@ -380,11 +382,34 @@ def _dequant_static(w, policy):
         else jnp.dtype(policy.compute_dtype))
 
 
+def _resolve_operand(name, b, w, b_sparse):
+    """Collapse the legacy ``w=``/``b_sparse=`` keywords into the
+    polymorphic ``b`` operand (dense array / PackedOperand /
+    TileSparseOperand — dispatch is by type).  The keywords survive only
+    as DeprecationWarning shims."""
+    if sum(x is not None for x in (b, w, b_sparse)) != 1:
+        raise ValueError(f"{name}: exactly one of b / w / b_sparse "
+                         "is required")
+    if w is not None:
+        warnings.warn(
+            f"{name}(w=...) is deprecated; pass the operand positionally "
+            "as `b`", DeprecationWarning, stacklevel=3)
+        return w
+    if b_sparse is not None:
+        warnings.warn(
+            f"{name}(b_sparse=...) is deprecated; pass the operand as the "
+            "polymorphic `b` argument (dispatch is by operand type)",
+            DeprecationWarning, stacklevel=3)
+        return b_sparse
+    return b
+
+
 def mp_dot(
     x: jax.Array,
-    w: Optional[jax.Array] = None,
+    b: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     *,
+    w: Optional[jax.Array] = None,
     b_sparse: Optional[TileSparseOperand] = None,
     policy="bf16",
     trans_w: bool = False,
@@ -396,7 +421,7 @@ def mp_dot(
     epilogue: Optional[EpilogueSpec] = None,
     epilogue_operands: Optional[dict] = None,
 ) -> jax.Array:
-    """y[..., n] = tail(x[..., k] @ (w[n, k]ᵀ if trans_w else w[k, n]) + bias).
+    """y[..., n] = tail(x[..., k] @ (b[n, k]ᵀ if trans_w else b[k, n]) + bias).
 
     ``tail`` is the registry epilogue: ``activation`` alone fuses an
     activation into the GEMM's store; ``gate`` fuses ``act(·) · gate`` (the
@@ -406,27 +431,28 @@ def mp_dot(
     the registry's backward rules.
 
     ``trans_w=True`` is the on-the-fly-transposition path — used e.g. for
-    tied-embedding logits (w stored (vocab, d_model)).
+    tied-embedding logits (weights stored (vocab, d_model)).
 
-    ``w`` may be a :class:`repro.packing.PackedOperand` (pre-packed at
-    parameter-load time): the forward then reads the tiled payload directly
-    — no per-call cast/dequant/transposition — and ``trans_w`` must match
-    the orientation recorded at pack time (the transpose is already
-    resolved inside the payload).
+    ``b`` is POLYMORPHIC — dispatch is by operand type, not by keyword:
 
-    ``w`` may also be a :class:`repro.sparse.TileSparseOperand` — or passed
-    explicitly as ``b_sparse=`` with ``w`` omitted: the forward then visits
-    ONLY the stored tiles (grid = stored-tile schedule, scalar-prefetched
-    index maps), the custom VJP masks the weight cotangent to the stored
-    tiles (pruned tiles have no tangent space — a fixed pattern can never
-    be resurrected by training), and ``dx`` contracts against the
-    densified weight.  Composes with every registry epilogue and precision
-    policy; int8 payloads are frozen via float0 like packed int8.
+    * a dense array — the plain mixed-precision GEMM;
+    * a :class:`repro.packing.PackedOperand` (pre-packed at parameter-load
+      time): the forward then reads the tiled payload directly — no
+      per-call cast/dequant/transposition — and ``trans_w`` must match the
+      orientation recorded at pack time (the transpose is already resolved
+      inside the payload);
+    * a :class:`repro.sparse.TileSparseOperand`: the forward then visits
+      ONLY the stored tiles (grid = stored-tile schedule, scalar-prefetched
+      index maps), the custom VJP masks the weight cotangent to the stored
+      tiles (pruned tiles have no tangent space — a fixed pattern can never
+      be resurrected by training), and ``dx`` contracts against the
+      densified weight.  Composes with every registry epilogue and
+      precision policy; int8 payloads are frozen via float0 like packed
+      int8.
+
+    ``w=`` and ``b_sparse=`` are deprecated keyword aliases for ``b``.
     """
-    if (w is None) == (b_sparse is None):
-        raise ValueError("exactly one of w / b_sparse is required")
-    if b_sparse is not None:
-        w = b_sparse
+    w = _resolve_operand("mp_dot", b, w, b_sparse)
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
     lead = x.shape[:-1]
@@ -463,9 +489,10 @@ def mp_dot(
 
 def mp_dot_grouped(
     x: jax.Array,
-    w: Optional[jax.Array] = None,
+    b: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     *,
+    w: Optional[jax.Array] = None,
     b_sparse: Optional[TileSparseOperand] = None,
     policy="bf16",
     trans_w: bool = False,
@@ -478,7 +505,7 @@ def mp_dot_grouped(
     epilogue: Optional[EpilogueSpec] = None,
     epilogue_operands: Optional[dict] = None,
 ) -> jax.Array:
-    """y[g, m, n] = tail(x[g, m, k] @ (w[g, n, k]ᵀ if trans_w else w[g, k, n]) + bias[g, n]).
+    """y[g, m, n] = tail(x[g, m, k] @ (b[g, n, k]ᵀ if trans_w else b[g, k, n]) + bias[g, n]).
 
     The grouped sibling of :func:`mp_dot`: G independent GEMMs — MoE expert
     blocks, batched projections — in ONE kernel launch with the group as the
@@ -497,19 +524,17 @@ def mp_dot_grouped(
     activations between the expert GEMMs and the combine, matching the
     accumulator precision.
 
-    ``w`` may be a grouped :class:`repro.packing.PackedOperand` or a
-    grouped :class:`repro.sparse.TileSparseOperand` (also accepted as the
-    explicit ``b_sparse=`` kwarg): the sparse form walks only the union
-    of every group's stored tiles — per-expert tile pruning shrinks the
-    launch grid itself — with the same masked-cotangent VJP as
-    :func:`mp_dot`.
+    ``b`` is polymorphic like :func:`mp_dot`'s: a dense (G, K, N) array, a
+    grouped :class:`repro.packing.PackedOperand`, or a grouped
+    :class:`repro.sparse.TileSparseOperand` — the sparse form walks only
+    the union of every group's stored tiles — per-expert tile pruning
+    shrinks the launch grid itself — with the same masked-cotangent VJP as
+    :func:`mp_dot`.  ``w=`` and ``b_sparse=`` are deprecated keyword
+    aliases for ``b``.
     """
     if x.ndim != 3:
         raise ValueError(f"mp_dot_grouped expects x of rank 3, got {x.shape}")
-    if (w is None) == (b_sparse is None):
-        raise ValueError("exactly one of w / b_sparse is required")
-    if b_sparse is not None:
-        w = b_sparse
+    w = _resolve_operand("mp_dot_grouped", b, w, b_sparse)
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
     epilogue, extras = _build_epilogue(epilogue, activation, gate, residual,

@@ -29,6 +29,7 @@ are thin argument-to-spec adapters kept as the public entry points.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -46,8 +47,41 @@ from repro.core.blocking import (
 from repro.core.gemm_spec import (
     EpilogueSpec, GemmSpec, apply_epilogue, get_epilogue, resolve_epilogue,
 )
-from repro.packing.layout import PackedOperand
-from repro.sparse.layout import TileSparseOperand, build_schedule
+from repro.packing.layout import PackedOperand, is_packed
+from repro.sparse.layout import TileSparseOperand, build_schedule, is_sparse
+
+
+def resolve_b_operand(
+    name: str,
+    b,
+    b_packed: Optional[PackedOperand] = None,
+    b_sparse: Optional[TileSparseOperand] = None,
+    *,
+    stacklevel: int = 3,
+):
+    """Collapse the legacy ``b_packed=``/``b_sparse=`` keywords into the
+    polymorphic ``b`` operand.
+
+    Returns a normalized ``(b, b_packed, b_sparse)`` triple with exactly one
+    entry set, dispatched on the OPERAND'S TYPE (dense array / PackedOperand
+    / TileSparseOperand) rather than on which keyword carried it.  Passing
+    the operand through ``b_packed=``/``b_sparse=`` still works but emits a
+    DeprecationWarning — the keywords survive only as migration shims.
+    """
+    if sum(x is not None for x in (b, b_packed, b_sparse)) != 1:
+        raise ValueError("exactly one of b / b_packed / b_sparse is required")
+    if b_packed is not None or b_sparse is not None:
+        kw = "b_packed" if b_packed is not None else "b_sparse"
+        warnings.warn(
+            f"{name}({kw}=...) is deprecated; pass the operand as the "
+            "polymorphic `b` argument (dispatch is by operand type)",
+            DeprecationWarning, stacklevel=stacklevel)
+    op = b if b is not None else b_packed if b_packed is not None else b_sparse
+    if is_packed(op):
+        return None, op, None
+    if is_sparse(op):
+        return None, None, op
+    return op, None, None
 
 
 def _mask_contract(x, axis: int, valid):
@@ -442,8 +476,8 @@ def mpgemm_pallas_spec(
     are never DMA'd or multiplied.
     """
     grouped = spec.grouped
-    if sum(x is not None for x in (b, b_packed, b_sparse)) != 1:
-        raise ValueError("exactly one of b / b_packed / b_sparse is required")
+    b, b_packed, b_sparse = resolve_b_operand(
+        "mpgemm_pallas_spec", b, b_packed, b_sparse)
     layout = b_packed.layout if b_packed is not None else None
     slayout = b_sparse.layout if b_sparse is not None else None
     # Normalize packed/sparse/tile_scaled from the ACTUAL operand, not the
@@ -666,6 +700,8 @@ def mpgemm_pallas(
     maps.  ``b``/``b_packed``/``b_sparse`` are mutually exclusive, and the
     pre-packed forms exclude ``trans_b`` (resolved at pack/sparsify time).
     """
+    b, b_packed, b_sparse = resolve_b_operand(
+        "mpgemm_pallas", b, b_packed, b_sparse)
     layout = (b_packed.layout if b_packed is not None
               else b_sparse.layout if b_sparse is not None else None)
     if layout is not None and layout.g != 1:
@@ -680,8 +716,10 @@ def mpgemm_pallas(
         trans_a=trans_a,
         trans_b=False if layout is not None else trans_b,
     )
+    op = (b if b is not None
+          else b_packed if b_packed is not None else b_sparse)
     return mpgemm_pallas_spec(
-        a, b, b_packed=b_packed, b_sparse=b_sparse, c=c, bias=bias,
+        a, op, c=c, bias=bias,
         scale=scale, extras=extras, spec=spec, epilogue=epilogue,
         out_dtype=out_dtype, plan=plan, interpret=interpret,
     )
@@ -728,6 +766,8 @@ def mpgemm_grouped_pallas(
     launch walks exactly the union of every expert's nonzero tiles
     (pruned experts cost nothing — the tile-sparse MoE configuration).
     """
+    b, b_packed, b_sparse = resolve_b_operand(
+        "mpgemm_grouped_pallas", b, b_packed, b_sparse)
     layout = (b_packed.layout if b_packed is not None
               else b_sparse.layout if b_sparse is not None else None)
     if layout is not None and layout.g == 1:
@@ -742,8 +782,10 @@ def mpgemm_grouped_pallas(
         trans_a=trans_a,
         trans_b=False if layout is not None else trans_b,
     )
+    op = (b if b is not None
+          else b_packed if b_packed is not None else b_sparse)
     return mpgemm_pallas_spec(
-        a, b, b_packed=b_packed, b_sparse=b_sparse, c=c, bias=bias,
+        a, op, c=c, bias=bias,
         scale=scale, extras=extras, spec=spec, epilogue=epilogue,
         out_dtype=out_dtype, plan=plan, interpret=interpret,
     )

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Optional
 
 import jax
@@ -9,6 +10,43 @@ import jax.numpy as jnp
 
 from repro.kernels import mpgemm as _mpgemm
 from repro.kernels import ref as _ref
+
+_log = logging.getLogger(__name__)
+_FALLBACKS_LOGGED = set()
+
+
+def _note_fallback(op: str, reason: str) -> None:
+    """Log the FIRST implicit reference fallback per op; later ones are
+    silent (the wrapper is jit'd — this fires at trace time, so a hot loop
+    never spams the log)."""
+    if op not in _FALLBACKS_LOGGED:
+        _FALLBACKS_LOGGED.add(op)
+        _log.warning(
+            "%s: tracing the XLA reference path instead of the Pallas "
+            "kernel (%s)", op, reason)
+
+
+def flash_attention_fallback_reason(
+    q_dtype, k_dtype, v_dtype, *, interpret: bool, backend: str,
+) -> Optional[str]:
+    """Why :func:`flash_attention` will trace the XLA reference instead of
+    the Pallas kernel — None means the kernel path is taken.
+
+    The predicate is deliberately public: callers (and tests) can ask it
+    BEFORE tracing, and the wrapper's dispatch uses exactly this function,
+    so the answer can never drift from the behavior.
+    """
+    if backend == "xla":
+        return "backend='xla' requested"
+    for name, dt in (("q", q_dtype), ("k", k_dtype), ("v", v_dtype)):
+        if not jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+            return (f"non-float {name} dtype {jnp.dtype(dt).name} "
+                    "(the kernel's online softmax needs float operands)")
+    if not interpret:
+        from repro.kernels import flash_attention as _fa_mod
+        if _fa_mod.pltpu is None:
+            return "Pallas TPU backend unavailable and interpret=False"
+    return None
 
 
 @functools.partial(
@@ -62,8 +100,21 @@ def flash_attention(
     interpret: bool = False,
     backend: str = "pallas",
 ):
-    """Blocked online-softmax attention; q (B,H,Tq,D), k/v (B,Hkv,Tk,D)."""
-    if backend == "xla":
+    """Blocked online-softmax attention; q (B,H,Tq,D), k/v (B,Hkv,Tk,D).
+
+    Dispatch is explicit: :func:`flash_attention_fallback_reason` decides
+    whether this call traces the Pallas kernel or the XLA reference, and an
+    IMPLICIT fallback (anything other than ``backend="xla"``) is logged
+    once per process.
+    """
+    if q.shape[1] % k.shape[1]:
+        raise ValueError(
+            f"GQA requires H % Hkv == 0, got {q.shape[1]} % {k.shape[1]}")
+    reason = flash_attention_fallback_reason(
+        q.dtype, k.dtype, v.dtype, interpret=interpret, backend=backend)
+    if reason is not None:
+        if backend != "xla":
+            _note_fallback("flash_attention", reason)
         kr = jnp.repeat(k, q.shape[1] // k.shape[1], axis=1)
         vr = jnp.repeat(v, q.shape[1] // v.shape[1], axis=1)
         return _ref.flash_attention_ref(q, kr, vr, causal=causal,

@@ -1,11 +1,16 @@
-"""Serving entrypoint: batched generation with the ServeEngine.
+"""Serving entrypoint: continuous-batching generation with the ServeEngine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
         --smoke --requests 6 --policy int8
+
+The default ``--engine continuous`` runs the paged-KV continuous-batching
+engine (requests admitted/retired every step, chunked prefill, prefix
+sharing); ``--engine wave`` keeps the legacy static-batch wave engine.
 """
 import argparse
 import os
 import time
+import warnings
 
 import numpy as np
 
@@ -24,7 +29,26 @@ def main():
     ap.add_argument("--policy", default="bf16",
                     choices=["bf16", "bf16_serve", "int8"])
     ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "wave"],
+                    help="continuous: paged-KV continuous batching "
+                         "(admit/retire every step); wave: the legacy "
+                         "static-batch wave engine")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="concurrent sequence slots (default 2)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="DEPRECATED alias for --max-batch (with the old "
+                         "wave-engine default semantics; prefer --max-batch"
+                         " and, if you want waves, --engine wave)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens (continuous engine)")
+    ap.add_argument("--max-pages", type=int, default=None,
+                    help="KV pool size in pages incl. the scratch page "
+                         "(default: dense-equivalent capacity; smaller "
+                         "values exercise preemption)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens prefilled per step (continuous "
+                         "engine; default max(page_size, 8))")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--pack", action="store_true",
@@ -55,6 +79,13 @@ def main():
                          "baseline benchmarks/bench_epilogue.py measures")
     args = ap.parse_args()
 
+    if args.batch is not None:
+        print("[serve] --batch is deprecated; use --max-batch "
+              "(and --engine wave for the legacy wave engine)")
+        if args.max_batch is None:
+            args.max_batch = args.batch
+    max_batch = args.max_batch if args.max_batch is not None else 2
+
     if args.no_fuse:
         # Read lazily at trace time by models/layers.py via
         # core.config.fused_epilogues(), so setting it before build works.
@@ -73,7 +104,7 @@ def main():
     if args.pack:
         from repro.packing import pack_params, packed_param_bytes
         params = pack_params(params, policy=args.policy,
-                             m_hint=args.batch * 32)
+                             m_hint=max_batch * 32)
         print(f"[serve] packed static weights: "
               f"{packed_param_bytes(params)/2**20:.1f} MiB payload")
     if args.sparsity > 0:
@@ -94,7 +125,7 @@ def main():
                                  method=args.sparsity_method,
                                  nm=(n_keep, m_block),
                                  blocks=args.sparsity_blocks,
-                                 policy=args.policy, m_hint=args.batch * 32)
+                                 policy=args.policy, m_hint=max_batch * 32)
         density = sparse_param_density(params)
         print(f"[serve] tile-sparse static weights: "
               f"{sparse_param_bytes(params)/2**20:.1f} MiB payload, "
@@ -106,8 +137,18 @@ def main():
                   f"weight shapes (pruning is per whole tile). Pass "
                   f"--sparsity-blocks with smaller BK BN for finer "
                   f"granularity.")
-    eng = ServeEngine(model, params, batch_size=args.batch,
-                      max_len=args.max_len)
+    if args.engine == "wave":
+        with warnings.catch_warnings():
+            # The CLI chose the wave engine explicitly; the constructor's
+            # deprecation warning targets programmatic batch_size= callers.
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = ServeEngine(model, params, batch_size=max_batch,
+                              max_len=args.max_len)
+    else:
+        eng = ServeEngine(model, params, max_len=args.max_len,
+                          max_batch=max_batch, page_size=args.page_size,
+                          max_pages=args.max_pages,
+                          prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(2, cfg.vocab,
@@ -121,10 +162,29 @@ def main():
     n_tok = sum(len(v) for v in out.values())
     print(f"[serve] {args.requests} requests, {n_tok} tokens, {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s CPU, policy={args.policy})")
-    for t in eng.telemetry:
-        print(f"  wave{t.wave}: {t.requests} reqs, {t.tokens} tok, "
-              f"{t.tokens_per_s:.1f} tok/s, occupancy {t.slot_occupancy:.2f},"
-              f" queue {t.queue_depth}")
+    if args.engine == "wave":
+        for t in eng.telemetry:
+            print(f"  wave{t.wave}: {t.requests} reqs, {t.tokens} tok, "
+                  f"{t.tokens_per_s:.1f} tok/s, occupancy "
+                  f"{t.slot_occupancy:.2f}, queue {t.queue_depth}")
+    else:
+        steps = eng.step_telemetry
+        peak_pages = max((s.pages_in_use for s in steps), default=0)
+        peak_kv = max((s.kv_bytes for s in steps), default=0)
+        dense_kv = steps[0].kv_bytes_dense if steps else 0
+        preempt = sum(s.preemptions for s in steps)
+        shared = steps[-1].prefix_hit_tokens if steps else 0
+        print(f"  {len(steps)} steps "
+              f"({sum(1 for s in steps if s.phase != 'decode')} with "
+              f"prefill), peak {peak_pages} pages "
+              f"({peak_kv/2**20:.2f} MiB KV vs {dense_kv/2**20:.2f} MiB "
+              f"dense), {preempt} preemptions, {shared} prompt tokens "
+              f"prefix-shared")
+        for s in steps[-3:]:
+            print(f"  step{s.step}: {s.phase}, live {s.live}, "
+                  f"queue {s.queue_depth}, {s.tokens} tok, "
+                  f"pages {s.pages_in_use} ({s.page_occupancy:.2f}), "
+                  f"{s.tokens_per_s:.1f} tok/s")
     for uid in sorted(out):
         print(f"  req{uid}: {out[uid][:10]}")
 

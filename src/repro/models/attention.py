@@ -421,3 +421,98 @@ def attention_core(
     if t <= 2048:
         return dense_attention(q, k, v, causal=causal, window=window, scale=scale)
     return chunked_attention(q, k, v, causal=causal, scale=scale)
+
+
+# --------------------------------------------------------------------------
+# Paged attention (continuous-batching serving; docs/serving.md)
+#
+# KV lives in a pooled page array (P, Hkv, page_size, D); each request's
+# logical KV stream is the concatenation of the pages its block-table row
+# names.  Positions in the math below are LOGICAL (page j, offset o ->
+# j*page_size + o); which physical page backs them is irrelevant to masking.
+# --------------------------------------------------------------------------
+
+
+def paged_kv_write(k_pages, v_pages, k_new, v_new, block_tables, q_start,
+                   n_valid):
+    """Scatter a (B, C) chunk of fresh K/V rows into the page pool.
+
+    ``k_new``/``v_new``: (B, Hkv, C, D); token i of request b lands at
+    logical position ``q_start[b] + i`` -> physical page
+    ``block_tables[b, pos // ps]``, offset ``pos % ps``.  Rows with
+    ``i >= n_valid[b]`` are dead: they are routed to the reserved scratch
+    page 0 (slot ``(b*C + i) % ps`` — scratch content is never read as
+    valid, the attention mask kills it).
+    """
+    b, hkv, c, d = k_new.shape
+    ps = k_pages.shape[2]
+    w = block_tables.shape[1]
+    pos = q_start[:, None] + jnp.arange(c)[None, :]            # (B, C)
+    page = jnp.take_along_axis(
+        block_tables, jnp.clip(pos // ps, 0, w - 1), axis=1)   # (B, C)
+    offset = pos % ps
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]
+    scratch_off = (jnp.arange(c)[None, :] + jnp.arange(b)[:, None] * c) % ps
+    page = jnp.where(valid, page, 0)
+    offset = jnp.where(valid, offset, scratch_off)
+    pg = page.reshape(-1)
+    off = offset.reshape(-1)
+    k_rows = k_new.transpose(0, 2, 1, 3).reshape(b * c, hkv, d)
+    v_rows = v_new.transpose(0, 2, 1, 3).reshape(b * c, hkv, d)
+    k_pages = k_pages.at[pg, :, off].set(k_rows.astype(k_pages.dtype))
+    v_pages = v_pages.at[pg, :, off].set(v_rows.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, q_start, lengths,
+                        *, causal=True, window=None, scale=None):
+    """Pure-XLA paged attention: gather the block-table pages into a dense
+    per-request KV stream, then masked grouped-GQA softmax.  Numerically
+    the oracle for the Pallas kernel and the CPU serving path."""
+    b, h, tq, d = q.shape
+    p_pages, hkv, ps, _ = k_pages.shape
+    w = block_tables.shape[1]
+    g = h // hkv
+    s_max = w * ps
+    scale = scale if scale is not None else 1.0 / d ** 0.5
+    tok = (block_tables[:, :, None] * ps
+           + jnp.arange(ps)[None, None, :]).reshape(b, s_max)   # (B, S)
+    kf = k_pages.transpose(0, 2, 1, 3).reshape(p_pages * ps, hkv, d)
+    vf = v_pages.transpose(0, 2, 1, 3).reshape(p_pages * ps, hkv, d)
+    k = kf[tok].transpose(0, 2, 1, 3)                           # (B, Hkv, S, D)
+    v = vf[tok].transpose(0, 2, 1, 3)
+    qg = q.reshape(b, hkv, g, tq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qi = q_start[:, None] + jnp.arange(tq)[None, :]             # (B, Tq)
+    ki = jnp.arange(s_max)
+    mask = ki[None, None, :] < lengths[:, None, None]           # (B, 1, S)
+    if causal:
+        mask = mask & (ki[None, None, :] <= qi[:, :, None])     # (B, Tq, S)
+    if window is not None:
+        mask = mask & (ki[None, None, :] > qi[:, :, None] - window)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-30)
+    return o.reshape(b, h, tq, d).astype(q.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, q_start, lengths, *,
+                    causal=True, window: Optional[int] = None, scale=None,
+                    backend: Optional[str] = None):
+    """Serving dispatch for paged KV: Pallas block-table kernel on TPU,
+    XLA gather reference elsewhere (same math, same logical masking)."""
+    backend = backend or cfg.get_gemm_backend()
+    if backend in ("pallas", "interpret"):
+        from repro.kernels.flash_attention import paged_flash_attention
+        return paged_flash_attention(
+            q, k_pages, v_pages, block_tables, q_start, lengths,
+            causal=causal, window=window, scale=scale,
+            interpret=(backend == "interpret"))
+    return paged_attention_ref(
+        q, k_pages, v_pages, block_tables, q_start, lengths,
+        causal=causal, window=window, scale=scale)

@@ -170,6 +170,38 @@ def attn_decode(params, x, cache, ctx):
     return out, {"k": kc, "v": vc}
 
 
+def attn_paged_init_cache(cfg, num_pages, page_size, dtype=jnp.bfloat16):
+    """Pooled KV pages shared by every request (serve/kv_cache.py owns the
+    allocation of the leading page axis; page 0 is reserved scratch)."""
+    shape = (num_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def attn_paged_step(params, x, cache, ctx, window=None):
+    """x: (B, C, d) normed chunk -> (attn output, updated page pool).
+
+    One code path serves both decode (C == 1) and chunked prefill (C ==
+    chunk): rows past ctx["paged"]["n_valid"][b] are dead padding, routed
+    to the scratch page on write and masked out of the softmax by the
+    logical-position bounds."""
+    cfg = ctx["cfg"]
+    pg = ctx["paged"]
+    q, k, v = attn_qkv(params, x, cfg, ctx)
+    if ctx.get("rope") is not None:
+        cos, sin = ctx["rope"]
+        q = apply_rope(q, cos, sin, ctx["positions"])
+        k = apply_rope(k, cos, sin, ctx["positions"])
+    kc, vc = attn.paged_kv_write(
+        cache["k_pages"], cache["v_pages"], k, v,
+        pg["block_tables"], pg["q_start"], pg["n_valid"])
+    o = attn.paged_attention(
+        q, kc, vc, pg["block_tables"], pg["q_start"], pg["lengths"],
+        window=window, backend=ctx.get("backend"))
+    out = mp_dot(_merge_heads(o), params["wo"], policy=ctx["policy"])
+    return out, {"k_pages": kc, "v_pages": vc}
+
+
 # =============================== dense =========================================
 
 def init_dense(key, cfg):
@@ -199,6 +231,16 @@ def dense_fwd(params, x, ctx, *, window=None):
 def dense_decode(params, x, cache, ctx):
     cfg = ctx["cfg"]
     o, cache = attn_decode(params["attn"], norm(params["ln1"], x, cfg), cache, ctx)
+    x = x + o
+    x = _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"],
+             residual=x)
+    return x, cache
+
+
+def dense_paged_step(params, x, cache, ctx, *, window=None):
+    cfg = ctx["cfg"]
+    o, cache = attn_paged_step(params["attn"], norm(params["ln1"], x, cfg),
+                               cache, ctx, window=window)
     x = x + o
     x = _mlp(params["mlp"], norm(params["ln2"], x, cfg), cfg, ctx["policy"],
              residual=x)
@@ -412,6 +454,16 @@ def moe_fwd(params, x, ctx, *, window=None):
 def moe_decode(params, x, cache, ctx):
     cfg = ctx["cfg"]
     o, cache = attn_decode(params["attn"], norm(params["ln1"], x, cfg), cache, ctx)
+    x = x + o
+    y, _ = moe_mlp(params, norm(params["ln2"], x, cfg), cfg, ctx["policy"],
+                   capacity_factor=ctx.get("moe_capacity", 1.25))
+    return x + y, cache
+
+
+def moe_paged_step(params, x, cache, ctx, *, window=None):
+    cfg = ctx["cfg"]
+    o, cache = attn_paged_step(params["attn"], norm(params["ln1"], x, cfg),
+                               cache, ctx, window=window)
     x = x + o
     y, _ = moe_mlp(params, norm(params["ln2"], x, cfg), cfg, ctx["policy"],
                    capacity_factor=ctx.get("moe_capacity", 1.25))

@@ -92,6 +92,24 @@ def block_init_cache(kind, cfg, batch, max_len, dtype=jnp.bfloat16):
     raise ValueError(kind)
 
 
+# Block kinds the paged-KV serving path supports (recurrent state and
+# cross-attention caches are not paged — those archs serve via the wave
+# engine; see docs/serving.md).
+PAGED_KINDS = ("dense", "attn_local", "moe")
+
+
+def block_paged_step(kind, params, x, cache, ctx):
+    cfg = ctx["cfg"]
+    if kind in ("dense", "attn_local"):
+        return B.dense_paged_step(params, x, cache, ctx,
+                                  window=_kind_window(cfg, kind))
+    if kind == "moe":
+        return B.moe_paged_step(params, x, cache, ctx, window=cfg.window)
+    raise ValueError(
+        f"block kind {kind!r} has no paged-KV step (supported: "
+        f"{PAGED_KINDS}); serve this arch with the wave engine")
+
+
 def segment_pattern(pattern: Tuple[str, ...]):
     """-> (unit, n_units, remainder): smallest unit P<=8 such that the
     pattern is unit-periodic with a unit-prefix remainder."""
@@ -346,6 +364,99 @@ class LM:
             x, c = block_decode(kind, params["tail"][i], x,
                                 caches["tail"][i], ctx)
             new_tail.append(c)
+        x = self._final_hidden(params, x)
+        head, tied = self._head(params)
+        logits = self._mask_logits(
+            logits_from_hidden(x, head, tied=tied, policy=self.policy))
+        return logits[:, 0], {"stack": new_stack, "tail": new_tail}
+
+    # ------------------------- paged serving (continuous batching) ----------
+
+    def paged_unsupported_reason(self) -> Optional[str]:
+        """None if every block kind has a paged-KV step, else why not."""
+        bad = sorted({k for k in (*self.unit, *self.rem)
+                      if k not in PAGED_KINDS})
+        if bad:
+            return (f"block kinds {bad} have no paged-KV step (supported: "
+                    f"{PAGED_KINDS}); serve this arch with the wave engine")
+        return None
+
+    def init_paged_caches(self, num_pages: int, page_size: int):
+        """Pooled KV pages, one (num_pages, Hkv, page_size, hd) pair per
+        layer; block tables are shared across layers so the layer axis
+        lives here, exactly like init_caches stacks ring caches."""
+        reason = self.paged_unsupported_reason()
+        if reason:
+            raise ValueError(reason)
+        caches_stack = []
+        for _kind in self.unit:
+            one = B.attn_paged_init_cache(self.cfg, num_pages, page_size,
+                                          self.act_dtype)
+            caches_stack.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (self.n_units,) + a.shape),
+                one))
+        tail = [B.attn_paged_init_cache(self.cfg, num_pages, page_size,
+                                        self.act_dtype) for _ in self.rem]
+        return {"stack": caches_stack, "tail": tail}
+
+    def paged_step(self, params, tokens, caches, block_tables, q_start,
+                   n_valid):
+        """One continuous-batching step over paged KV.
+
+        tokens: (B, C) int32 — C == 1 is a pure decode step, C > 1 a
+        chunked-prefill step (decode rows just use one valid column).
+        block_tables: (B, W) int32 physical page ids (0 = scratch pad);
+        q_start: (B,) absolute position of each row's first token;
+        n_valid: (B,) valid tokens per row (0 = idle slot).
+        -> (logits (B, V) at each row's LAST valid token, new caches).
+        """
+        cfg = self.cfg
+        b, c = tokens.shape
+        ps = caches["stack"][0]["k_pages"].shape[-2] if caches["stack"] \
+            else caches["tail"][0]["k_pages"].shape[-2]
+        w = block_tables.shape[1]
+        max_pos = w * ps
+        positions = jnp.clip(
+            q_start[:, None] + jnp.arange(c)[None, :], 0, max_pos - 1)
+        x = params["embed"][tokens].astype(self.act_dtype)
+        if cfg.pos_embed == "learned":
+            pe = params["pos_embed"]
+            x = x + pe[jnp.minimum(positions, pe.shape[0] - 1)].astype(
+                self.act_dtype)
+        rope_rows = None
+        if cfg.pos_embed == "rope":
+            rope_rows = rope_frequencies(cfg.head_dim, max_pos,
+                                         cfg.rope_theta)
+        ctx = self._ctx(c, rope_rows=rope_rows)
+        ctx["positions"] = positions
+        ctx["moe_capacity"] = 4.0   # serve-time: effectively dropless
+        ctx["paged"] = {
+            "block_tables": block_tables.astype(jnp.int32),
+            "q_start": q_start.astype(jnp.int32),
+            "n_valid": n_valid.astype(jnp.int32),
+            "lengths": (q_start + n_valid).astype(jnp.int32),
+        }
+
+        def body(x, xs):
+            unit_params, unit_caches = xs
+            new = []
+            for p, kind in enumerate(self.unit):
+                x, cc = block_paged_step(kind, unit_params[p], x,
+                                         unit_caches[p], ctx)
+                new.append(cc)
+            return x, new
+
+        x, new_stack = jax.lax.scan(
+            body, x, (params["stack"], caches["stack"]))
+        new_tail = []
+        for i, kind in enumerate(self.rem):
+            x, cc = block_paged_step(kind, params["tail"][i], x,
+                                     caches["tail"][i], ctx)
+            new_tail.append(cc)
+        # Each row's next-token logits live at its LAST valid position
+        # (idle rows clamp to column 0 — the engine ignores them).
+        idx = jnp.clip(n_valid - 1, 0, c - 1)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B, 1, d)
         x = self._final_hidden(params, x)
         head, tied = self._head(params)
         logits = self._mask_logits(

@@ -16,7 +16,7 @@ materialization).
             ▼
     mp_dot / mp_dot_grouped (x, PackedOperand)
             ▼
-    kernels/mpgemm.py  mpgemm_pallas(b_packed=...)  — identity tile reads
+    kernels/mpgemm.py  mpgemm_pallas(a, packed)  — identity tile reads
 
 Public API: :func:`pack_operand`, :func:`unpack_operand`,
 :func:`pack_params`, :class:`PackedOperand`, :class:`PackedLayout`,

@@ -14,7 +14,7 @@ This module defines the TPU form of that layout:
 
 Every (bk, bn) tile is **contiguous in HBM** and sits exactly where the
 kernel's (kk, j) grid step needs it, so the pack-aware MPGEMM path
-(``kernels/mpgemm.py::mpgemm_pallas(b_packed=...)``) reads it with an
+(``kernels/mpgemm.py::mpgemm_pallas(a, packed)``) reads it with an
 *identity* BlockSpec index map — no strided DMA, no on-the-fly
 transposition, no per-call dequant/cast materialization.
 

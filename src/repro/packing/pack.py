@@ -264,7 +264,7 @@ def pack_operand(
     ``"int8"`` stores per-tile symmetrically-quantized tiles plus f32
     scales.  Defaults to the source dtype.  The result is a
     :class:`PackedOperand` consumable by ``mp_dot(x, packed)`` /
-    ``mpgemm_pallas(a, b_packed=packed)``.
+    ``mpgemm_pallas(a, packed)``.
     """
     bk, bn = _blocks_of(plan_or_blocks)
     grouped = w.ndim == 3

@@ -1,27 +1,41 @@
-"""Serving engine: batched prefill + decode with KV caches.
+"""Serving engine: continuous batching over a paged KV cache.
 
-Continuous-batching-lite: requests are grouped into a fixed batch; each
-decode step advances every live sequence one token; finished sequences
-(EOS or length) free their slot for queued requests (slot reuse keeps the
-compiled decode_step's shapes static — the production pattern).
+The engine admits and retires requests every decode step:
 
-``generate()`` emits per-wave telemetry (:class:`WaveTelemetry`:
-tokens/s, slot occupancy, queue depth) into ``engine.telemetry`` — the
-first observability surface toward production serving: occupancy says
-whether the static batch is sized right, queue depth whether admission is
-falling behind, tokens/s is the throughput SLO number.  An optional
-``on_wave`` callback streams each record as it completes (metrics
-export)."""
+  * ``add_request()`` queues work; ``step()`` runs ONE forward — a pure
+    decode step (chunk width 1) or, when a prompt is still being prefilled,
+    a mixed chunked-prefill step where decode rows ride along with one
+    valid column — and returns the requests that finished;
+  * ``generate()`` is the compatibility wrapper: add everything, step until
+    drained, return ``{uid: tokens}`` exactly like the old wave engine.
+
+KV lives in fixed-size pages (``serve/kv_cache.py``): admission allocates
+pages for the prompt (reusing prefix-shared pages), decode grows one page
+at a time, and when the pool runs dry the most recently admitted request
+is preempted (pages freed, request requeued for recompute) so older work
+keeps flowing — no head-of-line blocking, O(actual-length) KV memory.
+
+Every step emits a :class:`StepTelemetry` record (``engine.step_telemetry``,
+streamed through ``on_step``).  The old per-wave records survive as an
+aggregation: :class:`WaveTelemetry` is built FROM the step records by the
+deprecated wave path (``batch_size=`` — a shim that keeps the original
+left-padded static-batch loop for archs without a paged path and for
+existing callers/tests).
+"""
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
+from collections import deque
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.serve.kv_cache import PagedKVCache, cdiv
 
 
 @dataclasses.dataclass
@@ -33,15 +47,40 @@ class Request:
 
 
 @dataclasses.dataclass(frozen=True)
-class WaveTelemetry:
-    """Observability record for ONE wave of batched generation.
+class StepTelemetry:
+    """Observability record for ONE engine step (or one wave phase).
 
-    ``wall_s`` (and therefore ``tokens_per_s``) covers prefill + decode —
-    and, for the FIRST wave after process start or a shape change, the
-    jax.jit compilation of the prefill/decode executables.  ``prefill_s``
-    isolates the prefill(+compile) portion so metrics consumers can
-    baseline steady-state decode throughput (``tokens / (wall_s -
-    prefill_s)``) or drop the wave-0 outlier.
+    ``kv_bytes`` is the modeled KV footprint actually held (allocated pages
+    x page bytes across layers); ``kv_bytes_dense`` is what the wave
+    engine's per-slot max-length allocation would hold for the same batch
+    width — the paged-vs-dense memory story per step.
+    """
+
+    step: int                # 0-based step index within this generate()/run
+    phase: str               # "prefill" | "mixed" | "decode"
+    live: int                # occupied slots doing useful work this step
+    queue_depth: int         # requests waiting for a slot after this step
+    tokens: int              # tokens emitted (sampled) this step
+    preemptions: int         # requests preempted (requeued) this step
+    pages_in_use: int        # KV pages held after this step
+    page_occupancy: float    # pages_in_use / allocatable pages
+    kv_bytes: int            # modeled bytes held in KV pages (all layers)
+    kv_bytes_dense: int      # modeled bytes a dense max-len batch would hold
+    prefix_hit_tokens: int   # cumulative prompt tokens skipped via sharing
+    wall_s: float            # step wall time (incl. compile on first shapes)
+    tokens_per_s: float      # tokens / wall_s
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveTelemetry:
+    """Aggregated observability for ONE wave of the deprecated wave engine.
+
+    Since the continuous-batching redesign this is a thin aggregation over
+    the per-step :class:`StepTelemetry` records (see :meth:`from_steps`);
+    the fields and semantics are unchanged from the original per-wave
+    implementation.  ``wall_s`` covers prefill + decode — and, for the
+    FIRST wave after process start or a shape change, jax.jit compilation.
+    ``prefill_s`` isolates the prefill(+compile) portion.
     """
 
     wave: int                # 0-based wave index within this generate() call
@@ -54,47 +93,323 @@ class WaveTelemetry:
     slot_occupancy: float    # mean live-slot fraction over decode steps
     queue_depth: int         # requests still queued when the wave finished
 
+    @classmethod
+    def from_steps(cls, wave: int, requests: int, queue_depth: int,
+                   steps: List[StepTelemetry], wall_s: float,
+                   batch: int) -> "WaveTelemetry":
+        """Fold one wave's StepTelemetry stream into the legacy record."""
+        emits = [s for s in steps if s.phase != "prefill"]
+        n_tok = sum(s.tokens for s in steps)
+        prefill_s = sum(s.wall_s for s in steps if s.phase == "prefill")
+        occ = (sum(s.live / batch for s in emits) / len(emits)
+               if emits else 0.0)
+        return cls(
+            wave=wave, requests=requests, tokens=n_tok,
+            decode_steps=sum(1 for s in emits if s.phase == "decode"),
+            wall_s=wall_s, prefill_s=prefill_s,
+            tokens_per_s=n_tok / wall_s if wall_s > 0 else 0.0,
+            slot_occupancy=occ, queue_depth=queue_depth,
+        )
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    length: int                  # tokens written into the KV pages
+    pending: np.ndarray          # prompt tokens not yet prefilled
+    next_token: Optional[int]    # sampled, not yet written (decode input)
+    out: List[int]
+    admitted: int                # admission order (preemption picks max)
+
+
+def _kv_token_bytes(model) -> int:
+    """Modeled KV bytes ONE token holds across all attention layers."""
+    from repro.models.transformer import PAGED_KINDS
+    cfg = model.cfg
+    layers = sum(1 for k in cfg.pattern if k in PAGED_KINDS)
+    itemsize = jnp.dtype(model.act_dtype).itemsize
+    return 2 * cfg.n_kv_heads * cfg.head_dim * itemsize * max(layers, 1)
+
 
 class ServeEngine:
-    def __init__(self, model, params, *, batch_size: int, max_len: int,
+    """Continuous-batching engine (paged KV).  The deprecated ``batch_size=``
+    keyword selects the legacy wave engine (static batch, ring caches)."""
+
+    def __init__(self, model, params, *, max_len: int,
+                 max_batch: Optional[int] = None, page_size: int = 16,
+                 max_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  eos_id: int = 1, greedy: bool = True,
-                 on_wave: Optional[Callable[[WaveTelemetry], None]] = None):
+                 on_step: Optional[Callable[[StepTelemetry], None]] = None,
+                 on_wave: Optional[Callable[[WaveTelemetry], None]] = None,
+                 batch_size: Optional[int] = None):
         self.model = model
         self.params = params
-        self.batch_size = batch_size
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
+        self.on_step = on_step
         self.on_wave = on_wave
         self.telemetry: List[WaveTelemetry] = []
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len=max_len))
-        self._decode = jax.jit(model.decode_step)
+        self.step_telemetry: List[StepTelemetry] = []
+        self._token_bytes = _kv_token_bytes(model)
+        self._wave_mode = batch_size is not None
+        if self._wave_mode:
+            warnings.warn(
+                "ServeEngine(batch_size=) selects the deprecated wave "
+                "engine; use max_batch= for continuous batching",
+                DeprecationWarning, stacklevel=2)
+            self.batch_size = batch_size
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, max_len=max_len))
+            self._decode = jax.jit(model.decode_step)
+            return
+        # ----------------------- continuous engine -----------------------
+        reason = model.paged_unsupported_reason()
+        if reason:
+            raise ValueError(
+                f"continuous batching unavailable: {reason} "
+                f"(construct with batch_size= for the wave engine)")
+        self.max_batch = max_batch if max_batch is not None else 8
+        self.batch_size = self.max_batch   # observability-compat alias
+        self.page_size = page_size
+        self.bt_width = cdiv(max_len, page_size)
+        # Default pool: dense-equivalent capacity (+ the scratch page), so
+        # preemption only kicks in when the caller shrinks max_pages.
+        self.max_pages = (max_pages if max_pages is not None
+                          else self.max_batch * self.bt_width + 1)
+        self.kv = PagedKVCache(self.max_pages, page_size)
+        self.prefill_chunk = (prefill_chunk if prefill_chunk is not None
+                              else max(page_size, 8))
+        self.caches = model.init_paged_caches(self.max_pages, page_size)
+        self._step_fn = jax.jit(model.paged_step)
+        self._slots: List[Optional[_Slot]] = [None] * self.max_batch
+        self._queue: deque = deque()
+        self._admit_counter = 0
+        self._step_counter = 0
+        self._uid_counter = 0
+
+    # ------------------------- continuous API ----------------------------
+
+    def _require_continuous(self, what: str):
+        if self._wave_mode:
+            raise RuntimeError(
+                f"{what} requires the continuous engine; this instance was "
+                f"built with the deprecated batch_size= (wave) shim")
+
+    def add_request(self, prompt, max_new_tokens: int = 16,
+                    uid: Optional[int] = None) -> int:
+        """Queue a request; returns its uid.  Also accepts a Request."""
+        self._require_continuous("add_request()")
+        if isinstance(prompt, Request):
+            req = prompt
+        else:
+            if uid is None:
+                uid = self._uid_counter
+                self._uid_counter += 1
+            req = Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                          max_new_tokens=max_new_tokens)
+        self._uid_counter = max(self._uid_counter, req.uid + 1)
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(f"prompt length {len(req.prompt)} >= max_len "
+                             f"{self.max_len}")
+        worst = cdiv(min(len(req.prompt) + req.max_new_tokens, self.max_len),
+                     self.page_size)
+        if worst > self.max_pages - 1:
+            raise ValueError(
+                f"request {req.uid} needs up to {worst} pages, pool has "
+                f"{self.max_pages - 1} allocatable — raise max_pages")
+        self._queue.append(req)
+        return req.uid
+
+    def _admit(self) -> None:
+        """FIFO admission into free slots while prompt pages fit."""
+        for i in range(self.max_batch):
+            if not self._queue or self._slots[i] is not None:
+                continue
+            req = self._queue[0]
+            shared_pages, shared_tokens = self.kv.match_prefix(req.prompt)
+            self.kv.allocate(req.uid, shared_pages, shared_tokens)
+            if not self.kv.ensure(req.uid, len(req.prompt)):
+                self.kv.free_seq(req.uid)     # head doesn't fit; wait
+                break
+            self._queue.popleft()
+            self._slots[i] = _Slot(
+                req=req, length=shared_tokens,
+                pending=np.asarray(req.prompt[shared_tokens:], np.int32),
+                next_token=None, out=[], admitted=self._admit_counter)
+            self._admit_counter += 1
+
+    def _evict_slot(self, i: int) -> None:
+        """Preempt slot i: free its pages, requeue its request at the head
+        (recompute semantics — generated tokens are discarded)."""
+        s = self._slots[i]
+        self.kv.free_seq(s.req.uid)
+        self._queue.appendleft(s.req)
+        self._slots[i] = None
+        self._preempted_now += 1
+
+    def _reserve(self, slot: _Slot, n_new: int) -> bool:
+        """Grow slot's table for n_new tokens, preempting newer requests
+        under page pressure.  False if the slot itself got preempted."""
+        while not self.kv.ensure(slot.req.uid, slot.length + n_new):
+            others = [i for i, s in enumerate(self._slots)
+                      if s is not None and s is not slot]
+            if others:
+                j = max(others, key=lambda i: self._slots[i].admitted)
+                if self._slots[j].admitted > slot.admitted:
+                    self._evict_slot(j)
+                    continue
+            # slot is itself the newest — preempt it instead
+            self._evict_slot(
+                next(i for i, s in enumerate(self._slots) if s is slot))
+            return False
+        return True
+
+    def step(self) -> List[Request]:
+        """Run one engine step; returns the requests that finished."""
+        self._require_continuous("step()")
+        t0 = time.perf_counter()
+        self._preempted_now = 0
+        self._admit()
+        live = [s for s in self._slots if s is not None]
+        if not live:
+            if self._queue:
+                raise RuntimeError(
+                    "queued requests but nothing admitted — pool cannot "
+                    "hold any queued prompt")
+            return []
+        # Chunk width: mixed prefill step if any prompt is still pending.
+        chunk = max((min(self.prefill_chunk, len(s.pending))
+                     for s in live if len(s.pending)), default=0)
+        c = max(chunk, 1)
+        phase = ("prefill" if chunk and all(s.next_token is None
+                                            for s in live)
+                 else "mixed" if chunk else "decode")
+        # Reserve pages for this step's writes (may preempt).
+        for s in list(live):
+            n_new = min(c, len(s.pending)) if len(s.pending) else 1
+            self._reserve(s, n_new)
+        live = [s for s in self._slots if s is not None]
+        if not live:
+            raise RuntimeError("every live request was preempted — pool "
+                               "cannot make progress")
+        b = self.max_batch
+        tokens = np.zeros((b, c), np.int32)
+        q_start = np.zeros((b,), np.int32)
+        n_valid = np.zeros((b,), np.int32)
+        bt = np.zeros((b, self.bt_width), np.int32)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            if len(s.pending):
+                n = min(c, len(s.pending))
+                tokens[i, :n] = s.pending[:n]
+            else:
+                n = 1
+                tokens[i, 0] = s.next_token
+            q_start[i] = s.length
+            n_valid[i] = n
+            bt[i] = self.kv.block_table_row(s.req.uid, self.bt_width)
+        logits, self.caches = self._step_fn(
+            self.params, jnp.asarray(tokens), self.caches, jnp.asarray(bt),
+            jnp.asarray(q_start), jnp.asarray(n_valid))
+        logits = np.asarray(logits)       # blocks until device done
+        sampled = np.argmax(logits, axis=-1)
+        finished: List[Request] = []
+        emitted = 0
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            n = int(n_valid[i])
+            s.length += n
+            if len(s.pending):
+                s.pending = s.pending[n:]
+                if len(s.pending):
+                    continue              # mid-prefill: logits unused
+                self.kv.register_prefix(s.req.uid, s.req.prompt)
+            else:
+                pass                      # decode: next_token now in cache
+            tok = int(sampled[i])
+            s.out.append(tok)
+            emitted += 1
+            done = (tok == self.eos_id
+                    or len(s.out) >= s.req.max_new_tokens
+                    or s.length >= self.max_len - 1)
+            if done:
+                s.req.out_tokens = list(s.out)
+                finished.append(s.req)
+                self.kv.free_seq(s.req.uid)
+                self._slots[i] = None
+            else:
+                s.next_token = tok
+        wall = time.perf_counter() - t0
+        pages = self.kv.pages_in_use
+        rec = StepTelemetry(
+            step=self._step_counter, phase=phase, live=len(live),
+            queue_depth=len(self._queue), tokens=emitted,
+            preemptions=self._preempted_now, pages_in_use=pages,
+            page_occupancy=self.kv.occupancy,
+            kv_bytes=pages * self.page_size * self._token_bytes,
+            kv_bytes_dense=self.max_batch * self.max_len * self._token_bytes,
+            prefix_hit_tokens=self.kv.stats.prefix_hit_tokens,
+            wall_s=wall, tokens_per_s=emitted / wall if wall > 0 else 0.0)
+        self.step_telemetry.append(rec)
+        if self.on_step is not None:
+            self.on_step(rec)
+        self._step_counter += 1
+        return finished
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished (queued + occupying a slot)."""
+        return len(self._queue) + sum(s is not None for s in self._slots)
 
     def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Static-batch generation with slot reuse between waves.
+        """Compatibility wrapper: run everything to completion.
 
-        Resets and repopulates ``self.telemetry`` with one
-        :class:`WaveTelemetry` per wave (and streams each record through
-        ``on_wave`` when configured).
+        Resets the telemetry streams.  On the continuous engine this is
+        add_request() + step()-until-drained; with the deprecated
+        ``batch_size=`` shim it runs the legacy wave loop (identical
+        behaviour and WaveTelemetry records to the pre-paging engine).
         """
+        if self._wave_mode:
+            return self._generate_waves(requests)
+        self.step_telemetry = []
+        self._step_counter = 0
+        for r in requests:
+            self.add_request(r)
+        results: Dict[int, List[int]] = {}
+        budget = sum(len(r.prompt) + r.max_new_tokens for r in requests)
+        budget = 4 * budget + 64          # preemption/chunking slack
+        for _ in range(budget):
+            for req in self.step():
+                results[req.uid] = list(req.out_tokens)
+            if not self.pending:
+                return results
+        raise RuntimeError(f"generate() exceeded its step budget with "
+                           f"{self.pending} requests unfinished")
+
+    # ----------------- deprecated wave engine (batch_size=) --------------
+
+    def _generate_waves(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Static-batch generation with slot reuse between waves."""
         results: Dict[int, List[int]] = {}
         queue = list(requests)
         self.telemetry = []
+        self.step_telemetry = []
+        self._wave_step = 0
         wave_idx = 0
         while queue:
             wave = queue[: self.batch_size]
             queue = queue[self.batch_size:]
             t0 = time.perf_counter()
-            out, steps, occupancy, prefill_s = self._run_wave(wave)
+            n_steps0 = len(self.step_telemetry)
+            out = self._run_wave(wave, len(queue))
             wall = time.perf_counter() - t0
-            n_tok = sum(len(v) for v in out.values())
-            record = WaveTelemetry(
-                wave=wave_idx, requests=len(wave), tokens=n_tok,
-                decode_steps=steps, wall_s=wall, prefill_s=prefill_s,
-                tokens_per_s=n_tok / wall if wall > 0 else 0.0,
-                slot_occupancy=occupancy, queue_depth=len(queue),
-            )
+            record = WaveTelemetry.from_steps(
+                wave_idx, len(wave), len(queue),
+                self.step_telemetry[n_steps0:], wall, self.batch_size)
             self.telemetry.append(record)
             if self.on_wave is not None:
                 self.on_wave(record)
@@ -102,7 +417,21 @@ class ServeEngine:
             wave_idx += 1
         return results
 
-    def _run_wave(self, wave: List[Request]):
+    def _wave_record(self, phase: str, live: int, queue_depth: int,
+                     tokens: int, wall: float) -> None:
+        dense = self.batch_size * self.max_len * self._token_bytes
+        rec = StepTelemetry(
+            step=self._wave_step, phase=phase, live=live,
+            queue_depth=queue_depth, tokens=tokens, preemptions=0,
+            pages_in_use=0, page_occupancy=0.0,
+            kv_bytes=dense, kv_bytes_dense=dense, prefix_hit_tokens=0,
+            wall_s=wall, tokens_per_s=tokens / wall if wall > 0 else 0.0)
+        self.step_telemetry.append(rec)
+        if self.on_step is not None:
+            self.on_step(rec)
+        self._wave_step += 1
+
+    def _run_wave(self, wave: List[Request], queue_depth: int):
         b = self.batch_size
         plen = max(len(r.prompt) for r in wave)
         toks = np.zeros((b, plen), np.int32)
@@ -120,33 +449,37 @@ class ServeEngine:
         t_pf = time.perf_counter()
         logits, caches = self._prefill(self.params, batch)
         jax.block_until_ready(logits)
-        prefill_s = time.perf_counter() - t_pf
+        self._wave_record("prefill", len(wave), queue_depth, 0,
+                          time.perf_counter() - t_pf)
         out = {r.uid: [] for r in wave}
         live = np.array([True] * len(wave) + [False] * (b - len(wave)))
         token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         max_new = max(r.max_new_tokens for r in wave)
         pos = plen
-        occ_sum = 0.0
-        emit_steps = 0
-        decode_steps = 0
         for step in range(max_new):
-            # Slot occupancy is sampled at emission time: live slots doing
-            # useful work this step over the static batch width.
-            occ_sum += float(live.sum()) / b
-            emit_steps += 1
+            # Emission: live slots doing useful work this step over the
+            # static batch width (the occupancy sample).
+            t_it = time.perf_counter()
+            n_live = int(live.sum())
+            emitted = 0
             tok_np = np.asarray(token[:, 0])
             for i, r in enumerate(wave):
                 if live[i]:
                     out[r.uid].append(int(tok_np[i]))
+                    emitted += 1
                     if (int(tok_np[i]) == self.eos_id
                             or len(out[r.uid]) >= r.max_new_tokens):
                         live[i] = False
             if not live.any() or pos >= self.max_len - 1:
+                # Final flush: tokens emitted, no decode ran.
+                self._wave_record("emit", n_live, queue_depth, emitted,
+                                  time.perf_counter() - t_it)
                 break
             logits, caches = self._decode(self.params, token, caches,
                                           jnp.int32(pos))
-            decode_steps += 1
+            jax.block_until_ready(logits)
             token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             pos += 1
-        occupancy = occ_sum / emit_steps if emit_steps else 0.0
-        return out, decode_steps, occupancy, prefill_s
+            self._wave_record("decode", n_live, queue_depth, emitted,
+                              time.perf_counter() - t_it)
+        return out

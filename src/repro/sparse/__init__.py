@@ -15,9 +15,9 @@ HBM bytes nor an MXU pass.
             │  payload cache: repro.packing.PackedWeightCache (the layout
             │                 tag — pattern digest included — keys it)
             ▼
-    mp_dot / mp_dot_grouped (x, TileSparseOperand)  |  mp_dot(b_sparse=...)
+    mp_dot / mp_dot_grouped (x, TileSparseOperand) — polymorphic b operand
             ▼
-    kernels/mpgemm.py  mpgemm_pallas(b_sparse=...) — grid (M/bm, nnz),
+    kernels/mpgemm.py  mpgemm_pallas(a, sparse) — grid (M/bm, nnz),
                        scalar-prefetched index maps, zero tiles never
                        visited (the jaxpr-verifiable tile-visit gate)
 

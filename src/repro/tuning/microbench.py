@@ -486,7 +486,7 @@ def tune_sparse_gemm(
 
     The stored-tile layout pins (bn, bk) — the payload's tiling IS the
     block decision — so the sweep walks only the ``bm`` ladder, measuring
-    the actual sparse launch (``mpgemm_pallas(b_sparse=...)`` — grouped
+    the actual sparse launch (``mpgemm_pallas(a, sparse)`` — grouped
     operands go through ``mpgemm_grouped_pallas``): the stored-tile
     schedule, not a dense proxy.  ``epilogue`` makes the sweep launch the
     fused spec it will serve (extra gated/residual/C operands synthesized,
@@ -544,7 +544,7 @@ def tune_sparse_gemm(
         for p in plans:
             def run(p=p):
                 return launch(
-                    a, b_sparse=b_sparse, trans_a=trans_a,
+                    a, b_sparse, trans_a=trans_a,
                     out_dtype=p.out_dtype, plan=p,
                     interpret=(resolved == "interpret"), **ep_kw)
             measurements.append(Measurement(

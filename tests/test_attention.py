@@ -90,3 +90,72 @@ def test_decode_matches_dense(rng):
                               causal=False)
         np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref[0]),
                                    atol=1e-5)
+
+
+# --- ops.py wrapper: explicit, logged-once ref fallback ----------------------
+
+def _traced_pallas_call(fn, *args, **kwargs):
+    """Does tracing fn(*args, **kwargs) reach a pallas_call primitive?"""
+    import functools as _ft
+    jaxpr = jax.make_jaxpr(_ft.partial(fn, **kwargs))(*args)
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                return True
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                if walk(sub):
+                    return True
+        return False
+
+    return walk(jaxpr.jaxpr)
+
+
+def test_ops_flash_attention_path_traced(rng, caplog):
+    import logging
+
+    from repro.kernels import ops
+
+    q, k, v = _qkv(rng, 1, 4, 2, 16, 16, 64)
+
+    # Kernel path: the traced computation contains the pallas_call.
+    assert _traced_pallas_call(ops.flash_attention, q, k, v, interpret=True)
+    # Explicit XLA request: reference path, and NOT an implicit fallback.
+    ops._FALLBACKS_LOGGED.discard("flash_attention")
+    with caplog.at_level(logging.WARNING, logger="repro.kernels.ops"):
+        assert not _traced_pallas_call(ops.flash_attention, q, k, v,
+                                       backend="xla")
+    assert not caplog.records
+
+    # Implicit fallback (non-float operands): reference path, logged ONCE.
+    qi = jnp.zeros(q.shape, jnp.int32)
+    ki = jnp.zeros(k.shape, jnp.int32)
+    vi = jnp.zeros(v.shape, jnp.int32)
+    reason = ops.flash_attention_fallback_reason(
+        qi.dtype, ki.dtype, vi.dtype, interpret=True, backend="pallas")
+    assert reason is not None and "non-float" in reason
+    with caplog.at_level(logging.WARNING, logger="repro.kernels.ops"):
+        assert not _traced_pallas_call(ops.flash_attention, qi, ki, vi,
+                                       interpret=True)
+        assert not _traced_pallas_call(ops.flash_attention, qi, ki, vi,
+                                       interpret=True, causal=False)
+    fallback_logs = [r for r in caplog.records if "reference path" in r.message]
+    assert len(fallback_logs) == 1  # logged once, later fallbacks silent
+
+
+def test_ops_flash_attention_fallback_matches_kernel(rng):
+    from repro.kernels import ops
+
+    q, k, v = _qkv(rng, 1, 4, 2, 16, 16, 64)
+    y_kernel = ops.flash_attention(q, k, v, interpret=True)
+    y_ref = ops.flash_attention(q, k, v, backend="xla")
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_flash_attention_gqa_mismatch_raises(rng):
+    from repro.kernels import ops
+
+    q, k, v = _qkv(rng, 1, 4, 2, 16, 16, 64)
+    with pytest.raises(ValueError, match="GQA requires"):
+        ops.flash_attention(q[:, :3], k, v, interpret=True)

@@ -20,6 +20,7 @@ BENCH_MODULES = [
     "benchmarks.bench_loads",
     "benchmarks.bench_mixed_precision",
     "benchmarks.bench_packing",
+    "benchmarks.bench_serve",
     "benchmarks.bench_sparse",
     "benchmarks.bench_tiles",
     "benchmarks.roofline_report",
@@ -46,7 +47,7 @@ def test_run_sys_path_idempotent():
 def test_run_areas_cover_registry():
     import benchmarks.run as run
     assert set(run.AREA_RUNNERS) == set(run.AREAS) == \
-        {"gemm", "packing", "sparse"}
+        {"gemm", "packing", "sparse", "serve"}
 
 
 @pytest.fixture(scope="module")
@@ -61,12 +62,12 @@ def emitted(tmp_path_factory):
 
 class TestEmit(object):
     def test_writes_every_area(self, emitted):
-        for area in ("gemm", "packing", "sparse"):
+        for area in ("gemm", "packing", "sparse", "serve"):
             assert (emitted / f"BENCH_{area}.json").exists()
 
     def test_emitted_files_schema_valid(self, emitted):
         from repro.perf.trajectory import read_bench, validate_bench_dict
-        for area in ("gemm", "packing", "sparse"):
+        for area in ("gemm", "packing", "sparse", "serve"):
             path = emitted / f"BENCH_{area}.json"
             raw = json.loads(path.read_text())
             assert validate_bench_dict(raw) == []
@@ -89,6 +90,9 @@ class TestEmit(object):
         assert any(n.startswith("packing_01_bf16") for n in packing)
         sparse = read_bench(emitted / "BENCH_sparse.json").by_name()
         assert "sparse_trace_llama-w19_d0.5" in sparse
+        serve = read_bench(emitted / "BENCH_serve.json").by_name()
+        assert "serve_trace_w4" in serve
+        assert "serve_e2e_smoke" in serve
 
     def test_paper_workload_metrics_match_accounting(self, emitted):
         """The emitted Table III records carry the metrics core's numbers."""
@@ -143,6 +147,6 @@ def test_committed_baselines_valid():
     from repro.perf.trajectory import read_bench
     base = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "baselines")
-    for area in ("gemm", "packing", "sparse"):
+    for area in ("gemm", "packing", "sparse", "serve"):
         bf = read_bench(os.path.join(base, f"BENCH_{area}.json"))
         assert bf.area == area and len(bf.records) > 0

@@ -84,3 +84,84 @@ def test_mp_einsum_policy_dtypes(rng):
     assert out.dtype == jnp.bfloat16
     out32 = mp_einsum("bij,bjk->bik", a, b, policy="fp32")
     assert out32.dtype == jnp.float32
+
+
+# --- polymorphic operand + deprecation shims ---------------------------------
+
+def test_polymorphic_b_dispatches_by_type(rng):
+    from repro.core.blocking import plan_gemm
+    from repro.core.gemm import mp_dot_grouped
+    from repro.packing.pack import pack_operand
+    from repro.sparse.sparsify import sparsify_magnitude
+
+    x = jnp.asarray(rng.standard_normal((8, 64)), "float32")
+    w = jnp.asarray(rng.standard_normal((64, 32)), "float32")
+    dense = mp_dot(x, w, policy="fp32")
+
+    pk = pack_operand(w, plan_gemm(8, 32, 64, "float32", "float32"))
+    sp = sparsify_magnitude(w, (32, 32), density=1.0)
+    y_pk = mp_dot(x, pk, policy="fp32", backend="interpret")
+    y_sp = mp_dot(x, sp, policy="fp32", backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_pk), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_sp), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+    xg = jnp.asarray(rng.standard_normal((2, 8, 64)), "float32")
+    wg = jnp.asarray(rng.standard_normal((2, 64, 32)), "float32")
+    ref = jnp.einsum("gmk,gkn->gmn", xg, wg)
+    got = mp_dot_grouped(xg, wg, policy="fp32")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_legacy_keywords_warn_and_match(rng):
+    from repro.core.gemm import mp_dot_grouped
+    from repro.sparse.sparsify import sparsify_magnitude
+
+    x = jnp.asarray(rng.standard_normal((8, 64)), "float32")
+    w = jnp.asarray(rng.standard_normal((64, 32)), "float32")
+    sp = sparsify_magnitude(w, (32, 32), density=0.5)
+
+    with pytest.warns(DeprecationWarning, match=r"mp_dot\(w=\.\.\.\)"):
+        y_w = mp_dot(x, w=w, policy="fp32")
+    np.testing.assert_allclose(np.asarray(y_w),
+                               np.asarray(mp_dot(x, w, policy="fp32")))
+
+    with pytest.warns(DeprecationWarning, match=r"mp_dot\(b_sparse=\.\.\.\)"):
+        y_s = mp_dot(x, b_sparse=sp, policy="fp32", backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(y_s),
+        np.asarray(mp_dot(x, sp, policy="fp32", backend="interpret")))
+
+    xg = jnp.asarray(rng.standard_normal((2, 8, 64)), "float32")
+    wg = jnp.asarray(rng.standard_normal((2, 64, 32)), "float32")
+    with pytest.warns(DeprecationWarning, match="mp_dot_grouped"):
+        g_w = mp_dot_grouped(xg, w=wg, policy="fp32")
+    np.testing.assert_allclose(np.asarray(g_w),
+                               np.asarray(mp_dot_grouped(xg, wg, policy="fp32")))
+
+
+def test_mpgemm_wrapper_legacy_keywords_warn(rng):
+    from repro.core.blocking import plan_gemm
+    from repro.kernels.mpgemm import mpgemm_pallas
+    from repro.packing.pack import pack_operand
+    from repro.sparse.sparsify import sparsify_magnitude
+
+    x = jnp.asarray(rng.standard_normal((8, 64)), "float32")
+    w = jnp.asarray(rng.standard_normal((64, 32)), "float32")
+    pk = pack_operand(w, plan_gemm(8, 32, 64, "float32", "float32"))
+    sp = sparsify_magnitude(w, (32, 32), density=0.5)
+
+    new_pk = mpgemm_pallas(x, pk, interpret=True)
+    with pytest.warns(DeprecationWarning, match=r"b_packed=\.\.\."):
+        old_pk = mpgemm_pallas(x, b_packed=pk, interpret=True)
+    np.testing.assert_allclose(np.asarray(new_pk), np.asarray(old_pk))
+
+    new_sp = mpgemm_pallas(x, sp, interpret=True)
+    with pytest.warns(DeprecationWarning, match=r"b_sparse=\.\.\."):
+        old_sp = mpgemm_pallas(x, b_sparse=sp, interpret=True)
+    np.testing.assert_allclose(np.asarray(new_sp), np.asarray(old_sp))
+
+    with pytest.raises(ValueError, match="exactly one"):
+        mpgemm_pallas(x, w, b_packed=pk, interpret=True)
