@@ -232,6 +232,7 @@ class ServeEngine:
             self.kv.allocate(req.uid, shared_pages, shared_tokens)
             if not self.kv.ensure(req.uid, len(req.prompt)):
                 self.kv.free_seq(req.uid)     # head doesn't fit; wait
+                self.kv.rollback_prefix_hits(len(shared_pages), shared_tokens)
                 break
             self._queue.popleft()
             self._slots[i] = _Slot(
@@ -251,7 +252,11 @@ class ServeEngine:
 
     def _reserve(self, slot: _Slot, n_new: int) -> bool:
         """Grow slot's table for n_new tokens, preempting newer requests
-        under page pressure.  False if the slot itself got preempted."""
+        under page pressure.  False if the slot itself got preempted (or
+        already was: an earlier _reserve() this step may have evicted it,
+        in which case its pages are gone and ensure() must not run)."""
+        if not any(s is slot for s in self._slots):
+            return False
         while not self.kv.ensure(slot.req.uid, slot.length + n_new):
             others = [i for i, s in enumerate(self._slots)
                       if s is not None and s is not slot]
@@ -286,8 +291,14 @@ class ServeEngine:
         phase = ("prefill" if chunk and all(s.next_token is None
                                             for s in live)
                  else "mixed" if chunk else "decode")
-        # Reserve pages for this step's writes (may preempt).
-        for s in list(live):
+        # Reserve pages for this step's writes (may preempt).  _reserve()
+        # can evict any NEWER slot, so re-read liveness from self._slots
+        # each iteration — a snapshot would hand slots whose pages were
+        # just freed back to _reserve().
+        for i in range(self.max_batch):
+            s = self._slots[i]
+            if s is None:
+                continue
             n_new = min(c, len(s.pending)) if len(s.pending) else 1
             self._reserve(s, n_new)
         live = [s for s in self._slots if s is not None]

@@ -196,6 +196,14 @@ class PagedKVCache:
         self._tables[uid] = list(shared_pages)
         self._lengths[uid] = shared_tokens
 
+    def rollback_prefix_hits(self, pages: int, tokens: int) -> None:
+        """Undo :meth:`allocate`'s prefix-hit accounting for a sequence
+        whose admission was rolled back before it did any work — otherwise
+        a request stuck at the queue head re-inflates the sharing counters
+        on every admission attempt."""
+        self.stats.prefix_hit_pages -= int(pages)
+        self.stats.prefix_hit_tokens -= int(tokens)
+
     def ensure(self, uid, new_length: int) -> bool:
         """Grow ``uid``'s table to cover ``new_length`` tokens.
 

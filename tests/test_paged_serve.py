@@ -323,6 +323,66 @@ def test_preemption_requeues_and_completes(engine_setup):
     eng.kv.check_invariants()
 
 
+def test_preemption_mid_reserve_skips_evicted_slots(engine_setup):
+    """Regression: with 3 live slots and a dry pool, the oldest slot's
+    reservation evicts the newest; the reserve loop must then SKIP the
+    freed slot instead of calling ensure() on it (KeyError on its gone
+    block table).  One page per 8-token prompt fills the pool exactly, so
+    the first decode step needs a page for every slot at once."""
+    from repro.serve.engine import ServeEngine
+
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_len=64, max_batch=3, page_size=8,
+                      max_pages=4)                 # 3 allocatable pages
+    uids = [eng.add_request(_prompt(cfg, 8, seed=10 + i), max_new_tokens=4)
+            for i in range(3)]
+    done = {}
+    steps = 0
+    while eng.pending:
+        for r in eng.step():
+            done[r.uid] = r.out_tokens
+        steps += 1
+        assert steps < 300
+    assert sorted(done) == sorted(uids)
+    # The first decode step preempts BOTH newer slots (the oldest evicts
+    # the newest for its page; the middle one then self-preempts).
+    assert sum(s.preemptions for s in eng.step_telemetry) >= 2
+    eng.kv.check_invariants()
+    assert eng.kv.live_sequences == 0
+
+
+def test_failed_admission_rolls_back_prefix_stats(engine_setup):
+    """Regression: a sharer stuck at the queue head (its prompt doesn't
+    fit) must not re-inflate prefix_hit_tokens on every step's admission
+    attempt — only the one successful admission counts."""
+    from repro.serve.engine import ServeEngine
+
+    cfg, model, params = engine_setup
+    prompt = _prompt(cfg, 20, seed=8)              # 2 full pages + 4 tokens
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, page_size=8,
+                      max_pages=4)                 # 3 allocatable pages
+    donor = eng.add_request(prompt, max_new_tokens=2)
+    done = {}
+    while eng.pending:
+        for r in eng.step():
+            done[r.uid] = r.out_tokens
+    assert eng.kv.prefix_entries == 2              # 2 pinned + 1 free page
+    # The blocker takes the last free page; the sharer's admission then
+    # fails (its 2 shared pages are unreclaimable) until the blocker ends.
+    blocker = eng.add_request(_prompt(cfg, 6, seed=9), max_new_tokens=2)
+    sharer = eng.add_request(prompt, max_new_tokens=2)
+    steps = 0
+    while eng.pending:
+        for r in eng.step():
+            done[r.uid] = r.out_tokens
+        steps += 1
+        assert steps < 300
+    assert {donor, blocker, sharer} <= set(done)
+    assert eng.kv.stats.prefix_hit_tokens == 16    # counted exactly once
+    assert done[sharer] == done[donor]
+    eng.kv.check_invariants()
+
+
 def test_engine_admission_errors(engine_setup):
     from repro.serve.engine import ServeEngine
 
