@@ -1,0 +1,378 @@
+"""Sharded MPGEMM: modeled comm-vs-compute overlap, the collective-schedule
+trace gate, and the multi-device parity smoke.
+
+Three measurement families (area ``distributed``, -> ``BENCH_distributed
+.json``):
+
+  * ``dist_model_*`` — pure-arithmetic scale-out accounting per paper
+                       workload and mesh size: per-device wire bytes from
+                       the ring-collective cost model, chunked-pipeline
+                       exposed-comm time vs the blocking-collective
+                       baseline, and the LOCAL-shard CMR the mesh-aware
+                       planner keys plans on (vs the single-device CMR the
+                       same shape would get — the reason ``make_key`` grew
+                       a ``|mesh=`` namespace).  Deterministic, device-
+                       count independent.
+  * ``dist_trace_*`` — the **collective-schedule gate**: the traced jaxpr
+                       of the ring ``mp_dot_sharded`` must contain exactly
+                       P-1 ``ppermute`` equations interleaved with >= P
+                       chunk GEMMs and NO ``psum`` (the all-at-the-end
+                       blocking collective it replaces); the blocking
+                       variant must show the converse; the expert-parallel
+                       grouped path must dispatch and combine through two
+                       ``all_to_all``s.  Trace-time facts — needs >= 4
+                       devices, so on smaller hosts the counts come from a
+                       subprocess re-exec under
+                       ``--xla_force_host_platform_device_count=8`` (the
+                       records are identical either way).
+  * parity smoke     — sharded outputs vs the single-device ``mp_dot`` /
+                       ``mp_dot_grouped`` oracle across mesh sizes and
+                       operand encodings (dense / packed / tile-sparse /
+                       ragged expert-parallel).  Device-count dependent ->
+                       asserted under ``--smoke`` only, never recorded.
+
+``--smoke`` runs the hard gates and exits nonzero on any failure.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, record
+
+# Paper Table III rows with M, N and K all divisible by every modeled mesh
+# size: a decode row, its batched variant, and a large training row.
+DIST_WORKLOADS = [(6, 64, 7168, 2048), (12, 128, 7168, 2048),
+                  (17, 4096, 4096, 7168)]
+
+# One grouped MoE shape with G divisible by 8 (benchmarks/common.py).
+DIST_MOE = ("granite-moe-up", 32, 1280, 512, 1024)
+
+MESH_SIZES = (2, 4, 8)
+
+# Trace-gate problem: tiny, but P | M, N, K and P | G.
+_TRACE_P = 4
+_TRACE_MNK = (16, 64, 128)
+_TRACE_GMNK = (4, 8, 32, 16)
+
+
+def _overlap_metrics(compute_us: float, comm_us: float, steps: int) -> dict:
+    from repro.perf.metrics import modeled_overlap
+    ring = modeled_overlap(compute_us, comm_us, steps)
+    blocking = modeled_overlap(compute_us, comm_us, 1)
+    out = {f"ring_{k}": v for k, v in ring.items()}
+    out["blocking_exposed_comm_us"] = blocking["exposed_comm_us"]
+    out["speedup_vs_blocking"] = (blocking["pipelined_us"]
+                                  / max(ring["pipelined_us"], 1e-30))
+    return out
+
+
+def run(rows=None):
+    """Modeled scale-out accounting: wire bytes, pipelined vs blocking
+    exposed comm, and the local-shard CMR the mesh planner keys on."""
+    from repro.core.blocking import plan_gemm
+    from repro.perf.metrics import (
+        gemm_flops, modeled_collective_us, modeled_gemm_us,
+        sharded_gemm_comm_bytes,
+    )
+
+    rows = rows if rows is not None else []
+    for wid, m, n, k in DIST_WORKLOADS:
+        cmr_global = plan_gemm(m, n, k, "bfloat16").cmr
+        for p in MESH_SIZES:
+            # row partition: B K-sharded, ring reduce-scatter of the f32
+            # partial; local compute is P chunk GEMMs of (m, n/P, k/P).
+            chunk = plan_gemm(m, n // p, k // p, "bfloat16")
+            compute_us = p * modeled_gemm_us(chunk.flops, chunk.hbm_bytes)
+            comm_bytes = sharded_gemm_comm_bytes(
+                m, n, k, partition="row", axis_size=p)
+            comm_us = modeled_collective_us(comm_bytes)
+            cmr_local = plan_gemm(m, n, k // p, "bfloat16").cmr
+            mets = {"comm_bytes": float(comm_bytes),
+                    "comm_us": comm_us, "compute_us": compute_us,
+                    "cmr_local": cmr_local, "cmr_global": cmr_global}
+            mets.update(_overlap_metrics(compute_us, comm_us, p))
+            emit(f"dist_model_row_w{wid}_p{p}", 0.0,
+                 f"comm_bytes={comm_bytes};"
+                 f"exposed_ring={mets['ring_exposed_comm_us']:.2f}us;"
+                 f"exposed_blocking={mets['blocking_exposed_comm_us']:.2f}us;"
+                 f"cmr_local={cmr_local:.1f};cmr_global={cmr_global:.1f}")
+            record(f"dist_model_row_w{wid}_p{p}", "distributed",
+                   workload={"paper_row": wid, "m": m, "n": n, "k": k,
+                             "partition": "row", "axis_size": p},
+                   metrics=mets)
+            rows.append(dict(name=f"dist_model_row_w{wid}_p{p}", **mets))
+
+            # gather partition: X M-sharded, ring all-gather; local compute
+            # is P step GEMMs of (m/P, n/P, k).
+            step = plan_gemm(m // p, n // p, k, "bfloat16")
+            compute_us = p * modeled_gemm_us(step.flops, step.hbm_bytes)
+            comm_bytes = sharded_gemm_comm_bytes(
+                m, n, k, partition="gather", axis_size=p)
+            comm_us = modeled_collective_us(comm_bytes)
+            cmr_local = plan_gemm(m, n // p, k, "bfloat16").cmr
+            mets = {"comm_bytes": float(comm_bytes),
+                    "comm_us": comm_us, "compute_us": compute_us,
+                    "cmr_local": cmr_local, "cmr_global": cmr_global}
+            mets.update(_overlap_metrics(compute_us, comm_us, p))
+            emit(f"dist_model_gather_w{wid}_p{p}", 0.0,
+                 f"comm_bytes={comm_bytes};"
+                 f"exposed_ring={mets['ring_exposed_comm_us']:.2f}us;"
+                 f"cmr_local={cmr_local:.1f};cmr_global={cmr_global:.1f}")
+            record(f"dist_model_gather_w{wid}_p{p}", "distributed",
+                   workload={"paper_row": wid, "m": m, "n": n, "k": k,
+                             "partition": "gather", "axis_size": p},
+                   metrics=mets)
+            rows.append(dict(name=f"dist_model_gather_w{wid}_p{p}",
+                             **mets))
+
+    # expert partition: tokens all-to-all'd to their expert shard; local
+    # compute is the (G/P)-expert grouped GEMM.
+    name, g, m, n, k = DIST_MOE
+    cmr_global = plan_gemm(m, n, k, "bfloat16").cmr
+    for p in MESH_SIZES:
+        local = plan_gemm(m, n, k, "bfloat16")
+        flops = gemm_flops(m, n, k, g=g // p)
+        compute_us = (g // p) * modeled_gemm_us(local.flops,
+                                                local.hbm_bytes)
+        comm_bytes = sharded_gemm_comm_bytes(
+            m, n, k, partition="expert", axis_size=p, g=g)
+        comm_us = modeled_collective_us(comm_bytes)
+        mets = {"comm_bytes": float(comm_bytes), "comm_us": comm_us,
+                "compute_us": compute_us, "local_flops": float(flops),
+                "cmr_local": local.cmr, "cmr_global": cmr_global}
+        # Dispatch overlaps per-expert GEMMs the same way ring steps do.
+        mets.update(_overlap_metrics(compute_us, comm_us, g // p))
+        emit(f"dist_model_expert_{name}_p{p}", 0.0,
+             f"comm_bytes={comm_bytes};"
+             f"exposed_ring={mets['ring_exposed_comm_us']:.2f}us;"
+             f"exposed_blocking={mets['blocking_exposed_comm_us']:.2f}us")
+        record(f"dist_model_expert_{name}_p{p}", "distributed",
+               workload={"moe": name, "g": g, "m": m, "n": n, "k": k,
+                         "partition": "expert", "axis_size": p},
+               metrics=mets)
+        rows.append(dict(name=f"dist_model_expert_{name}_p{p}", **mets))
+    return rows
+
+
+def _collect_ops(jaxpr, out):
+    import jax
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in ("dot_general", "pallas_call", "ppermute",
+                                  "psum", "all_to_all"):
+            out.append(eqn.primitive.name)
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            _collect_ops(sub, out)
+    return out
+
+
+def _counts(ops) -> dict:
+    dots = [o for o in ops if o in ("dot_general", "pallas_call")]
+    seq = "".join("P" if o == "ppermute" else "D"
+                  for o in ops if o != "psum" and o != "all_to_all")
+    return {"dots": len(dots),
+            "ppermutes": ops.count("ppermute"),
+            "psums": ops.count("psum"),
+            "all_to_alls": ops.count("all_to_all"),
+            # every permute separated from the next by a chunk GEMM
+            "interleaved": int("PP" not in seq and "P" in seq)}
+
+
+def _trace_counts() -> dict:
+    """Op counts of each sharded-GEMM schedule (requires >= 4 devices)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed import mp_dot_grouped_sharded, mp_dot_sharded
+    from repro.launch.mesh import make_tp_mesh
+
+    p = _TRACE_P
+    mesh = make_tp_mesh(p)
+    m, n, k = _TRACE_MNK
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    out = {}
+    for variant, partition, overlap in (
+            ("ring_row", "row", "ring"),
+            ("blocking_row", "row", "blocking"),
+            ("ring_gather", "gather", "ring")):
+        jaxpr = jax.make_jaxpr(
+            lambda xx, bb, _p=partition, _o=overlap: mp_dot_sharded(
+                xx, bb, mesh=mesh, partition=_p, overlap=_o,
+                policy="fp32", backend="xla"))(x, b).jaxpr
+        out[variant] = _counts(_collect_ops(jaxpr, []))
+
+    g, gm, gk, gn = _TRACE_GMNK
+    xg = jax.ShapeDtypeStruct((g, gm, gk), jnp.float32)
+    bg = jax.ShapeDtypeStruct((g, gk, gn), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda xx, bb: mp_dot_grouped_sharded(
+            xx, bb, mesh=mesh, policy="fp32", backend="xla"))(xg, bg).jaxpr
+    out["expert_grouped"] = _counts(_collect_ops(jaxpr, []))
+    return out
+
+
+def _trace_counts_subprocess() -> dict:
+    """Re-exec under forced host devices; counts are trace-time facts so
+    the records match the in-process path byte for byte."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "trace.json")
+        subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--trace-json", path],
+            check=True, env=env, cwd=root)
+        with open(path) as f:
+            return json.load(f)
+
+
+def run_trace_gate(assert_gate: bool = False):
+    """The jaxpr proof that the ring schedule is CHUNKED and INTERLEAVED:
+    P-1 ppermutes threaded between >= P chunk GEMMs with no psum, where
+    the blocking baseline is one psum after one GEMM."""
+    import jax
+
+    p = _TRACE_P
+    if jax.device_count() >= p:
+        counts = _trace_counts()
+    else:
+        counts = _trace_counts_subprocess()
+
+    for variant, c in counts.items():
+        m, n, k = _TRACE_MNK
+        emit(f"dist_trace_{variant}", 0.0,
+             f"dots={c['dots']};ppermutes={c['ppermutes']};"
+             f"psums={c['psums']};all_to_alls={c['all_to_alls']};"
+             f"interleaved={c['interleaved']}")
+        record(f"dist_trace_{variant}", "distributed", kind="trace",
+               workload={"m": m, "n": n, "k": k, "axis_size": p,
+                         "variant": variant},
+               metrics={key: float(val) for key, val in c.items()})
+
+    if assert_gate:
+        ring = counts["ring_row"]
+        assert ring["ppermutes"] == p - 1 and ring["psums"] == 0, (
+            f"ring row schedule is not a chunked ring: {ring}")
+        assert ring["dots"] >= p and ring["interleaved"], (
+            f"ring row chunk GEMMs not interleaved with permutes: {ring}")
+        gather = counts["ring_gather"]
+        assert gather["ppermutes"] == p - 1 and gather["psums"] == 0, (
+            f"ring gather schedule is not a chunked ring: {gather}")
+        assert gather["dots"] >= p and gather["interleaved"], (
+            f"ring gather GEMMs not interleaved with permutes: {gather}")
+        blocking = counts["blocking_row"]
+        assert blocking["psums"] >= 1 and blocking["ppermutes"] == 0, (
+            f"blocking baseline grew a ring: {blocking}")
+        ep = counts["expert_grouped"]
+        assert ep["all_to_alls"] == 2 and ep["dots"] >= 1, (
+            f"expert path is not dispatch/combine all-to-all: {ep}")
+    return counts
+
+
+def run_parity(assert_gate: bool = True):
+    """Sharded vs single-device oracle across operand encodings; needs a
+    multi-device host (the CI multidevice job), never recorded."""
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.gemm import mp_dot, mp_dot_grouped
+    from repro.distributed import mp_dot_grouped_sharded, mp_dot_sharded
+    from repro.launch.mesh import make_tp_mesh
+    from repro.packing.pack import pack_operand
+    from repro.sparse.sparsify import sparsify_magnitude
+
+    sizes = [p for p in (1, 2, 4, 8) if p <= jax.device_count()]
+    assert len(sizes) >= 2, (
+        f"parity smoke needs >= 2 devices, got {jax.device_count()} — "
+        "set XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    rng = np.random.default_rng(0)
+    m, n, k = 64, 128, 256
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    want = mp_dot(x, b, bias, policy="fp32", backend="xla")
+    worst = 0.0
+    for p in sizes:
+        mesh = make_tp_mesh(p)
+        for partition in ("column", "row", "gather"):
+            for overlap in ("ring", "blocking"):
+                got = mp_dot_sharded(
+                    x, b, bias, mesh=mesh, partition=partition,
+                    overlap=overlap, policy="fp32", backend="xla")
+                err = float(jnp.max(jnp.abs(got - want)))
+                worst = max(worst, err)
+                if assert_gate:
+                    assert err < 1e-3, (
+                        f"p={p} {partition}/{overlap} diverged: {err}")
+        # packed + tile-sparse ride the per-shard-parts column path
+        pk = pack_operand(b, (32, 16))
+        got = mp_dot_sharded(x, pk, bias, mesh=mesh, policy="fp32")
+        errp = float(jnp.max(jnp.abs(
+            got - mp_dot(x, pk, bias, policy="fp32"))))
+        sp = sparsify_magnitude(b, (32, 16), density=0.5)
+        got = mp_dot_sharded(x, sp, bias, mesh=mesh, policy="fp32")
+        errs = float(jnp.max(jnp.abs(
+            got - mp_dot(x, sp, bias, policy="fp32"))))
+        worst = max(worst, errp, errs)
+        if assert_gate:
+            assert errp < 1e-3, f"p={p} packed diverged: {errp}"
+            assert errs < 1e-3, f"p={p} sparse diverged: {errs}"
+
+    # ragged expert-parallel grouped
+    g, gm, gk, gn = 8, 32, 64, 48
+    xg = jnp.asarray(rng.standard_normal((g, gm, gk)), jnp.float32)
+    bg = jnp.asarray(rng.standard_normal((g, gk, gn)), jnp.float32)
+    sizes_g = [p for p in sizes if g % p == 0]
+    gs = jnp.asarray(rng.integers(0, gm + 1, (g,)), jnp.int32)
+    want_g = mp_dot_grouped(xg, bg, group_sizes=gs, policy="fp32",
+                            backend="xla")
+    for p in sizes_g:
+        mesh = make_tp_mesh(p)
+        got = mp_dot_grouped_sharded(xg, bg, mesh=mesh, group_sizes=gs,
+                                     policy="fp32", backend="xla")
+        err = float(jnp.max(jnp.abs(got - want_g)))
+        worst = max(worst, err)
+        if assert_gate:
+            assert err < 1e-3, f"p={p} expert-parallel diverged: {err}"
+    emit("dist_parity_smoke", 0.0,
+         f"mesh_sizes={sizes};max_abs_err={worst:.2e}")
+    return worst
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="hard gates: chunked-ring trace schedule + "
+                         "multi-device parity vs the mp_dot oracle "
+                         "(CI multidevice job)")
+    ap.add_argument("--trace-json", default=None, metavar="PATH",
+                    help=argparse.SUPPRESS)  # internal re-exec mode
+    args = ap.parse_args()
+
+    if args.trace_json:
+        with open(args.trace_json, "w") as f:
+            json.dump(_trace_counts(), f)
+        return
+
+    run()
+    run_trace_gate(assert_gate=args.smoke)
+    if args.smoke:
+        run_parity(assert_gate=True)
+
+
+if __name__ == "__main__":
+    main()

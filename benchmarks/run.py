@@ -12,7 +12,7 @@ Beyond the CSV, the harness owns the perf-trajectory artifacts
   --diff DIR        compare the emitted files against the baselines in DIR
                     (benchmarks/baselines in CI); exit 1 on any regression
   --only AREA [...] run only the named areas (gemm / packing / sparse /
-                    serve)
+                    serve / distributed)
   --smoke           reduced workloads (small shapes, no wall clocks) — the
                     configuration the committed baselines are built from,
                     so ``--smoke --emit --diff benchmarks/baselines`` is
@@ -30,7 +30,7 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-AREAS = ("gemm", "packing", "sparse", "serve")
+AREAS = ("gemm", "packing", "sparse", "serve", "distributed")
 
 
 def run_gemm(smoke: bool = False) -> None:
@@ -88,11 +88,22 @@ def run_serve(smoke: bool = False) -> None:
     bench_serve.run_e2e(assert_gate=smoke)
 
 
+def run_distributed(smoke: bool = False) -> None:
+    from benchmarks import bench_distributed
+    bench_distributed.run()                # beyond-paper: mesh scale-out
+    # The collective-schedule gate re-execs under forced host devices when
+    # the host has fewer than 4, so the emitted records are device-count
+    # independent; the multi-device parity smoke runs only via
+    # `bench_distributed --smoke` (the CI multidevice job).
+    bench_distributed.run_trace_gate(assert_gate=smoke)
+
+
 AREA_RUNNERS = {
     "gemm": run_gemm,
     "packing": run_packing,
     "sparse": run_sparse,
     "serve": run_serve,
+    "distributed": run_distributed,
 }
 
 

@@ -1,0 +1,24 @@
+"""Multi-device scale-out: sharded MPGEMM, collectives, fault tolerance.
+
+The mesh is the next level of the paper's cache-aware partitioning
+hierarchy.  ``shard_gemm`` runs ``mp_dot`` / ``mp_dot_grouped`` under
+``shard_map`` with compute/communication overlap (ring reduce-scatter and
+ring all-gather matmuls, expert-parallel all-to-all dispatch) and
+per-shard planning (CMR on the local (M, N, K), tuned plans in a
+``|mesh=…`` key namespace).  ``collectives`` holds compressed/hierarchical
+all-reduce building blocks; ``fault_tolerance`` the straggler/elastic-mesh
+contract; ``sharding`` the parameter/activation partitioning rules.
+
+Public API: :func:`mp_dot_sharded`, :func:`mp_dot_grouped_sharded`,
+:func:`shard_operand`, :func:`mesh_plan_tag`, :func:`mesh_axis_size`.
+See docs/distributed.md for mesh setup and the overlap design.
+"""
+from repro.distributed.shard_gemm import (
+    OVERLAPS, PARTITIONS, mesh_axis_size, mesh_plan_tag,
+    mp_dot_grouped_sharded, mp_dot_sharded, shard_operand,
+)
+
+__all__ = [
+    "OVERLAPS", "PARTITIONS", "mesh_axis_size", "mesh_plan_tag",
+    "mp_dot_grouped_sharded", "mp_dot_sharded", "shard_operand",
+]

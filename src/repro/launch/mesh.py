@@ -47,3 +47,14 @@ def make_test_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
     if multi_pod:
         return _mesh((2, n_data, n_model), ("pod", "data", "model"))
     return _mesh((n_data, n_model), ("data", "model"))
+
+
+def make_tp_mesh(n: int, axis: str = "model"):
+    """1-D tensor-parallel mesh over ``n`` devices.
+
+    The mesh the sharded GEMMs in ``distributed/shard_gemm.py`` run over:
+    one named axis that weight N/K shards (and MoE expert groups) are laid
+    out along.  ``n = 1`` is valid and runs the same shard_map code paths
+    degenerately — useful for oracle-parity tests.
+    """
+    return _mesh((n,), (axis,))

@@ -51,6 +51,12 @@ def main():
                          "engine; default max(page_size, 8))")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--warm-prefix", type=int, default=0, metavar="N",
+                    help="pre-populate the paged-KV prefix index with an "
+                         "N-token synthetic system prompt before serving "
+                         "(continuous engine only); every request then "
+                         "prepends that prompt and shares its pages "
+                         "instead of re-prefilling them")
     ap.add_argument("--pack", action="store_true",
                     help="pack static weights into kernel-native tile "
                          "layouts at load time (repro.packing; cache via "
@@ -150,11 +156,30 @@ def main():
                           max_pages=args.max_pages,
                           prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(2, cfg.vocab,
-                                        (int(rng.integers(4, 32)),))
-                    .astype(np.int32),
-                    max_new_tokens=args.max_new)
+    warm = None
+    if args.warm_prefix > 0:
+        if args.engine == "wave":
+            raise SystemExit("--warm-prefix requires --engine continuous "
+                             "(prefix sharing lives in the paged KV cache)")
+        if args.warm_prefix + 32 + args.max_new >= args.max_len:
+            raise SystemExit(
+                f"--warm-prefix {args.warm_prefix} leaves no room for "
+                f"request tails under --max-len {args.max_len} — raise "
+                f"--max-len")
+        warm = rng.integers(2, cfg.vocab,
+                            (args.warm_prefix,)).astype(np.int32)
+        t_w = time.time()
+        new_pages = eng.warm_prefixes([warm])
+        print(f"[serve] warmed {new_pages} prefix pages from a "
+              f"{args.warm_prefix}-token system prompt in "
+              f"{time.time() - t_w:.1f}s")
+
+    def _prompt():
+        tail = rng.integers(2, cfg.vocab,
+                            (int(rng.integers(4, 32)),)).astype(np.int32)
+        return tail if warm is None else np.concatenate([warm, tail])
+
+    reqs = [Request(uid=i, prompt=_prompt(), max_new_tokens=args.max_new)
             for i in range(args.requests)]
     t0 = time.time()
     out = eng.generate(reqs)

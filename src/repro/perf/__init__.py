@@ -30,8 +30,9 @@ from repro.perf.diff import (
     metric_direction,
 )
 from repro.perf.metrics import (
-    PhaseFlops, WorkloadRecord, gemm_bytes, gemm_flops, modeled_gemm_us,
-    phase_flops, record_from_plan, tile_visits, total_flops,
+    PhaseFlops, WorkloadRecord, collective_bytes, gemm_bytes, gemm_flops,
+    modeled_collective_us, modeled_gemm_us, modeled_overlap, phase_flops,
+    record_from_plan, sharded_gemm_comm_bytes, tile_visits, total_flops,
 )
 from repro.perf.trajectory import (
     SCHEMA_VERSION, BenchFile, Recorder, bench_path, environment_stamp,
@@ -41,9 +42,10 @@ from repro.perf.trajectory import (
 __all__ = [
     "DiffResult", "MetricDelta", "diff_bench", "diff_paths",
     "markdown_report", "metric_direction",
-    "PhaseFlops", "WorkloadRecord", "gemm_bytes", "gemm_flops",
-    "modeled_gemm_us", "phase_flops", "record_from_plan", "tile_visits",
-    "total_flops",
+    "PhaseFlops", "WorkloadRecord", "collective_bytes", "gemm_bytes",
+    "gemm_flops", "modeled_collective_us", "modeled_gemm_us",
+    "modeled_overlap", "phase_flops", "record_from_plan",
+    "sharded_gemm_comm_bytes", "tile_visits", "total_flops",
     "SCHEMA_VERSION", "BenchFile", "Recorder", "bench_path",
     "environment_stamp", "read_bench", "validate_bench_dict",
     "validate_record_dict", "write_bench",

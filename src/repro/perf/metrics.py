@@ -112,6 +112,100 @@ def modeled_gemm_us(flops: float, bytes_: float, dtype: str = "bfloat16",
     return max(flops / peak, bytes_ / hw.hbm_bw) * 1e6
 
 
+# --- sharded-GEMM comm/overlap accounting ------------------------------------
+
+COLLECTIVES = ("reduce_scatter", "all_gather", "all_reduce", "all_to_all")
+
+
+def collective_bytes(kind: str, payload_bytes: int, axis_size: int) -> int:
+    """Wire bytes ONE device sends for a ring collective over ``axis_size``.
+
+    ``payload_bytes`` is the per-device operand the collective is applied
+    to: the full partial for reduce_scatter/all_reduce, the local shard for
+    all_gather, the local (to-be-redistributed) buffer for all_to_all.
+    Standard ring costs: reduce_scatter moves P-1 chunks of 1/P each,
+    all_gather forwards the shard P-1 times, all_reduce is a
+    reduce_scatter + all_gather, all_to_all keeps 1/P at home.
+    """
+    if kind not in COLLECTIVES:
+        raise ValueError(f"kind must be one of {COLLECTIVES}, got {kind!r}")
+    p = int(axis_size)
+    if p <= 1:
+        return 0
+    if kind == "reduce_scatter":
+        return int(payload_bytes * (p - 1) / p)
+    if kind == "all_gather":
+        return int(payload_bytes * (p - 1))
+    if kind == "all_reduce":
+        return int(2 * payload_bytes * (p - 1) / p)
+    return int(payload_bytes * (p - 1) / p)          # all_to_all
+
+
+def sharded_gemm_comm_bytes(
+    m: int, n: int, k: int, *, partition: str, axis_size: int,
+    g: int = 1, acc_itemsize: int = 4, x_itemsize: int = 2,
+) -> int:
+    """Per-device wire bytes of one sharded GEMM
+    (``distributed/shard_gemm.py``), by partition:
+
+    * ``column`` — no collective (B sharded along N, X replicated): 0.
+    * ``row``    — ring reduce-scatter of the full (M, N) f32 partial.
+    * ``gather`` — ring all-gather of the (M/P, K) X shard.
+    * ``expert`` — all-to-all dispatch of the token-sharded (G, M/P, K)
+      activations plus the combine of the expert-sharded (G/P, M, N)
+      outputs.
+    """
+    p = int(axis_size)
+    if partition == "column":
+        return 0
+    if partition == "row":
+        return collective_bytes("reduce_scatter", m * n * acc_itemsize, p)
+    if partition == "gather":
+        return collective_bytes("all_gather", (m // p) * k * x_itemsize, p)
+    if partition == "expert":
+        dispatch = collective_bytes(
+            "all_to_all", g * (m // p) * k * x_itemsize, p)
+        combine = collective_bytes(
+            "all_to_all", (g // p) * m * n * acc_itemsize, p)
+        return dispatch + combine
+    raise ValueError(f"unknown partition {partition!r}")
+
+
+def modeled_collective_us(bytes_: float,
+                          hw: HardwareSpec = DEFAULT_HW) -> float:
+    """Ring-collective wire time over the interconnect, microseconds."""
+    return bytes_ / hw.ici_bw * 1e6
+
+
+def modeled_overlap(compute_us: float, comm_us: float,
+                    steps: int) -> Dict[str, float]:
+    """Pipeline model of the chunked ring schedule.
+
+    ``steps`` is the chunk count — the mesh axis size for the ring matmuls,
+    1 for the blocking-collective baseline.  Each step's permute runs
+    concurrently with the next step's chunk GEMM, so with per-step compute
+    ``gc = compute/steps`` and per-step comm ``cc = comm/steps``::
+
+        pipelined_us   = max(gc, cc) * (steps - 1) + gc + cc
+        exposed_comm   = pipelined_us - compute_us
+        overlap_frac   = 1 - exposed_comm / comm_us
+
+    ``steps = 1`` degenerates to fully exposed comm (``overlap_frac = 0``);
+    compute-bound chunking approaches ``1 - 1/steps``.
+    """
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if comm_us <= 0.0:
+        return {"pipelined_us": float(compute_us),
+                "exposed_comm_us": 0.0, "overlap_frac": 0.0}
+    gc, cc = compute_us / steps, comm_us / steps
+    pipelined = max(gc, cc) * (steps - 1) + gc + cc
+    exposed = pipelined - compute_us
+    return {"pipelined_us": float(pipelined),
+            "exposed_comm_us": float(exposed),
+            "overlap_frac": float(1.0 - exposed / comm_us)}
+
+
 # --- llm-profiler-style per-phase model accounting ---------------------------
 
 @dataclasses.dataclass(frozen=True)

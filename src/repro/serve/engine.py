@@ -376,6 +376,45 @@ class ServeEngine:
         """Requests not yet finished (queued + occupying a slot)."""
         return len(self._queue) + sum(s is not None for s in self._slots)
 
+    def warm_prefixes(self, prompts,
+                      *, max_tokens_each: Optional[int] = None) -> int:
+        """Pre-populate the prefix-sharing index with system prompts.
+
+        Runs each prompt through a throwaway 1-token request so its full
+        prompt pages land in the refcounted prefix index BEFORE real
+        traffic arrives — the first real request sharing that system
+        prompt then prefills only its unshared tail instead of the whole
+        prefix.  Prompts shorter than one page can never be indexed
+        (sharing covers full pages only) and are skipped; longer ones are
+        truncated to ``max_tokens_each`` and to what ``max_len`` admits.
+        Resets the telemetry streams afterwards so warm-up steps never
+        pollute serving observability.  Returns the number of newly
+        indexed prefix pages.
+        """
+        self._require_continuous("warm_prefixes()")
+        before = self.kv.prefix_entries
+        budget = 0
+        for prompt in prompts:
+            toks = np.asarray(prompt, np.int32).reshape(-1)
+            if max_tokens_each is not None:
+                toks = toks[:max_tokens_each]
+            toks = toks[: self.max_len - 2]
+            if len(toks) < self.page_size:
+                continue              # sharing covers full pages only
+            self.add_request(toks, max_new_tokens=1)
+            budget += 4 * (len(toks) + 1) + 64
+        for _ in range(budget):
+            if not self.pending:
+                break
+            self.step()
+        if self.pending:
+            raise RuntimeError(
+                f"prefix warm-up failed to drain: {self.pending} warm "
+                f"requests unfinished")
+        self.step_telemetry = []
+        self._step_counter = 0
+        return self.kv.prefix_entries - before
+
     def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Compatibility wrapper: run everything to completion.
 

@@ -22,7 +22,8 @@ from repro.tuning.microbench import (
     tune_sparse_gemm,
 )
 from repro.tuning.plan_cache import (
-    PlanCache, get_plan_cache, lookup_plan, make_key, set_plan_cache,
+    PlanCache, current_mesh_namespace, get_plan_cache, lookup_plan, make_key,
+    mesh_namespace, set_plan_cache,
 )
 from repro.tuning.report import characterization_report, write_report
 
@@ -30,7 +31,7 @@ __all__ = [
     "Measurement", "TuneResult", "candidate_plans", "measure_grouped_plan",
     "measure_plan", "sweep", "sweep_axis", "tune_gemm", "tune_grouped_gemm",
     "tune_sparse_gemm",
-    "PlanCache", "get_plan_cache", "lookup_plan", "make_key",
-    "set_plan_cache",
+    "PlanCache", "current_mesh_namespace", "get_plan_cache", "lookup_plan",
+    "make_key", "mesh_namespace", "set_plan_cache",
     "characterization_report", "write_report",
 ]

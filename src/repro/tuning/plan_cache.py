@@ -46,6 +46,41 @@ _SCHEMA_VERSION = 1
 
 _OFF_VALUES = ("off", "0", "none", "disabled")
 
+# -- mesh namespace ----------------------------------------------------------
+#
+# Sharded GEMMs (distributed/shard_gemm.py) run the planner on the PER-DEVICE
+# local (M, N, K) shard, inside shard_map.  A plan tuned for the local shard
+# of a 4-way mesh is a different optimum than the single-device plan for the
+# same local shape arrived at directly (the surrounding collective schedule
+# changes the memory traffic), so mesh-sharded keys live in their own
+# namespace: a ``|mesh=<tag>`` suffix.  The tag is ambient (thread-local)
+# because the lookup happens deep inside the kernel launch path
+# (``mpgemm_pallas_spec``) which has no mesh argument to thread through.
+
+_mesh_ns = threading.local()
+
+
+def current_mesh_namespace() -> str:
+    """The ambient mesh namespace tag ('' == single-device)."""
+    return getattr(_mesh_ns, "tag", "")
+
+
+@contextlib.contextmanager
+def mesh_namespace(tag: str):
+    """Scope plan-cache keys to mesh namespace ``tag`` on this thread.
+
+    ``distributed/shard_gemm.py`` wraps every sharded GEMM trace in this, so
+    the trace-time :func:`lookup_plan` calls made by the kernel launch see
+    per-shard shapes AND a per-mesh key namespace — tuned sharded plans never
+    alias single-device ones.
+    """
+    prev = current_mesh_namespace()
+    _mesh_ns.tag = str(tag)
+    try:
+        yield
+    finally:
+        _mesh_ns.tag = prev
+
 
 @contextlib.contextmanager
 def _file_lock(path: Path):
@@ -86,6 +121,7 @@ def make_key(
     layout: str = "",
     epilogue: str = "",
     sparsity: str = "",
+    mesh: Optional[str] = None,
 ) -> str:
     """Canonical cache key for one logical GEMM instance.
 
@@ -112,17 +148,31 @@ def make_key(
     different animal again — sparse and dense tunings must never collide,
     and neither must two different sparsity patterns.  Dense keys (the
     empty tag) stay byte-identical to the existing schema.
+
+    ``mesh`` tags a sharded-GEMM instance (``distributed/shard_gemm.py``):
+    the (m, n, k) in a sharded key are the PER-DEVICE local shard dims, and
+    the surrounding collective schedule gives the same local shape a
+    different measured optimum than a true single-device problem — so
+    sharded and single-device tunings must never collide.  ``None`` (the
+    default) reads the ambient :func:`mesh_namespace` on this thread, which
+    makes every existing call site (tuner writes, kernel-launch reads)
+    mesh-aware without threading a mesh argument through; pass ``""`` to
+    opt out explicitly.  Un-namespaced keys stay byte-identical to the
+    existing schema.
     """
     a_dtype, b_dtype, out_dtype, _ = _resolve_dtypes(a_dtype, b_dtype, out_dtype)
+    if mesh is None:
+        mesh = current_mesh_namespace()
     group = f"g{g}|" if g != 1 else ""
     lay = f"|lay={layout}" if layout else ""
     ep = f"|ep={epilogue}" if epilogue else ""
     sp = f"|sp={sparsity}" if sparsity else ""
+    ns = f"|mesh={mesh}" if mesh else ""
     return (
         f"{group}m{m}n{n}k{k}"
         f"|a={a_dtype}|b={b_dtype}|out={out_dtype}"
         f"|ta={int(trans_a)}|tb={int(trans_b)}|beta={int(beta != 0.0)}"
-        f"|hw={hw.name}{lay}{ep}{sp}"
+        f"|hw={hw.name}{lay}{ep}{sp}{ns}"
     )
 
 
@@ -313,6 +363,7 @@ def lookup_plan(
     layout: str = "",
     epilogue: str = "",
     sparsity: str = "",
+    mesh: Optional[str] = None,
 ) -> Optional[GemmPlan]:
     """Tuned plan for this GEMM instance, or None (miss / cache disabled).
 
@@ -321,7 +372,9 @@ def lookup_plan(
     ``mp_dot`` / ``mp_dot_grouped`` flows.  ``g > 1`` selects the
     grouped-instance namespace; ``layout`` the packed-operand namespace;
     ``epilogue`` the fused-epilogue namespace; ``sparsity`` the
-    tile-sparse namespace (see :func:`make_key`).
+    tile-sparse namespace; ``mesh`` (default: the ambient
+    :func:`mesh_namespace`) the sharded-GEMM namespace (see
+    :func:`make_key`).
     """
     cache = get_plan_cache()
     if cache is None:
@@ -329,5 +382,5 @@ def lookup_plan(
     return cache.get(make_key(
         m, n, k, a_dtype, b_dtype, out_dtype,
         trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw, g=g,
-        layout=layout, epilogue=epilogue, sparsity=sparsity,
+        layout=layout, epilogue=epilogue, sparsity=sparsity, mesh=mesh,
     ))

@@ -14,6 +14,7 @@ BENCH_MODULES = [
     "benchmarks.common",
     "benchmarks.bench_autotune",
     "benchmarks.bench_breakdown",
+    "benchmarks.bench_distributed",
     "benchmarks.bench_epilogue",
     "benchmarks.bench_gemm_workloads",
     "benchmarks.bench_irregular",
@@ -47,7 +48,7 @@ def test_run_sys_path_idempotent():
 def test_run_areas_cover_registry():
     import benchmarks.run as run
     assert set(run.AREA_RUNNERS) == set(run.AREAS) == \
-        {"gemm", "packing", "sparse", "serve"}
+        {"gemm", "packing", "sparse", "serve", "distributed"}
 
 
 @pytest.fixture(scope="module")
@@ -62,12 +63,12 @@ def emitted(tmp_path_factory):
 
 class TestEmit(object):
     def test_writes_every_area(self, emitted):
-        for area in ("gemm", "packing", "sparse", "serve"):
+        for area in ("gemm", "packing", "sparse", "serve", "distributed"):
             assert (emitted / f"BENCH_{area}.json").exists()
 
     def test_emitted_files_schema_valid(self, emitted):
         from repro.perf.trajectory import read_bench, validate_bench_dict
-        for area in ("gemm", "packing", "sparse", "serve"):
+        for area in ("gemm", "packing", "sparse", "serve", "distributed"):
             path = emitted / f"BENCH_{area}.json"
             raw = json.loads(path.read_text())
             assert validate_bench_dict(raw) == []
@@ -93,6 +94,9 @@ class TestEmit(object):
         serve = read_bench(emitted / "BENCH_serve.json").by_name()
         assert "serve_trace_w4" in serve
         assert "serve_e2e_smoke" in serve
+        dist = read_bench(emitted / "BENCH_distributed.json").by_name()
+        assert "dist_model_row_w6_p8" in dist
+        assert "dist_trace_ring_row" in dist
 
     def test_paper_workload_metrics_match_accounting(self, emitted):
         """The emitted Table III records carry the metrics core's numbers."""
@@ -147,6 +151,6 @@ def test_committed_baselines_valid():
     from repro.perf.trajectory import read_bench
     base = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "baselines")
-    for area in ("gemm", "packing", "sparse", "serve"):
+    for area in ("gemm", "packing", "sparse", "serve", "distributed"):
         bf = read_bench(os.path.join(base, f"BENCH_{area}.json"))
         assert bf.area == area and len(bf.records) > 0

@@ -1,0 +1,74 @@
+"""distributed/fault_tolerance.py: straggler detection state machine,
+elastic-mesh planning, and the crash/straggle simulation harness."""
+import pytest
+
+from repro.distributed.fault_tolerance import (
+    FailureEvent, StragglerDetector, plan_elastic_mesh, simulate_failures,
+)
+
+
+def test_straggler_ok_suspect_remesh_progression():
+    det = StragglerDetector(factor=2.0, patience=3)
+    assert det.observe(1.0) == "ok"          # first sample seeds the EWMA
+    assert det.observe(1.1) == "ok"
+    # Three consecutive slow steps: suspect, suspect, then remesh.
+    assert det.observe(5.0) == "suspect"
+    assert det.observe(5.0) == "suspect"
+    assert det.observe(5.0) == "remesh"
+    assert det.suspect_streak == 0           # streak resets after remesh
+    # Slow steps never poison the EWMA baseline.
+    assert det.ewma < 2.0
+
+
+def test_straggler_streak_resets_on_recovery():
+    det = StragglerDetector(factor=2.0, patience=2)
+    det.observe(1.0)
+    assert det.observe(5.0) == "suspect"
+    assert det.observe(1.0) == "ok"          # recovery clears the streak
+    assert det.observe(5.0) == "suspect"     # needs a fresh streak
+    assert det.observe(5.0) == "remesh"
+
+
+def test_plan_elastic_mesh_shrinks_data_axis():
+    assert plan_elastic_mesh(1024, model_parallel=16) == (64, 16)
+    # Losing chips shrinks data parallelism; the model axis never moves
+    # (weight shardings stay valid across the re-mesh).
+    assert plan_elastic_mesh(1000, model_parallel=16) == (62, 16)
+    assert plan_elastic_mesh(16, model_parallel=16) == (1, 16)
+    assert plan_elastic_mesh(15, model_parallel=16) is None
+    assert plan_elastic_mesh(40, model_parallel=16, min_data=3) is None
+
+
+def test_simulate_crash_restores_from_checkpoint():
+    saved = []
+    log = simulate_failures(
+        run_step=lambda step: 1.0,
+        total_steps=12,
+        events=[FailureEvent(step=7, kind="crash")],
+        checkpoint_every=5,
+        save=saved.append,
+        restore=lambda: saved[-1] if saved else 0,
+    )
+    assert (7, "crash->restore") in log
+    # Steps 5..6 re-ran after restoring the step-5 checkpoint (the crash
+    # hit before boundary 10, so each boundary still saves exactly once).
+    assert saved == [5, 10]
+    assert [s for s, what in log if what == "checkpoint"] == [5, 10]
+
+
+def test_simulate_straggle_trips_detector():
+    events = [FailureEvent(step=s, kind="straggle", magnitude=10.0)
+              for s in (4, 5, 6)]
+    log = simulate_failures(
+        run_step=lambda step: 1.0, total_steps=10, events=events,
+        checkpoint_every=100,
+    )
+    verdicts = [what for _, what in log]
+    assert verdicts == ["suspect", "suspect", "remesh"]
+    assert [s for s, _ in log] == [4, 5, 6]
+
+
+def test_simulate_no_events_is_clean():
+    log = simulate_failures(run_step=lambda step: 1.0, total_steps=7,
+                            events=[], checkpoint_every=3)
+    assert log == [(3, "checkpoint"), (6, "checkpoint")]

@@ -410,3 +410,59 @@ def test_wave_shim_deprecation_and_guards(engine_setup):
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         ServeEngine(model, params, max_len=32, max_batch=2)   # no warning
+
+
+def test_warm_prefixes_populates_index(engine_setup):
+    from repro.serve.engine import ServeEngine
+
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_len=64, max_batch=3, page_size=8)
+    sys_prompt = _prompt(cfg, 20, seed=11)
+    assert eng.warm_prefixes([sys_prompt]) == 2  # 16 of 20 tokens -> 2 pages
+    assert eng.kv.prefix_entries == 2
+    # Warm-up leaves no live work and no telemetry behind.
+    assert eng.step_telemetry == [] and eng._step_counter == 0
+    assert eng.kv.live_sequences == 0
+    eng.kv.check_invariants()
+
+    # The first real request sharing the warmed system prompt skips its
+    # full warmed pages.
+    eng.add_request(np.concatenate([sys_prompt, _prompt(cfg, 6, seed=12)]),
+                    max_new_tokens=2)
+    while eng.pending:
+        eng.step()
+    assert eng.kv.stats.prefix_hit_tokens == 16
+    eng.kv.check_invariants()
+
+
+def test_warm_prefixes_parity_skips_and_guards(engine_setup):
+    from repro.serve.engine import ServeEngine
+
+    cfg, model, params = engine_setup
+    prompt = _prompt(cfg, 20, seed=13)
+
+    def drain(eng):
+        done = {}
+        while eng.pending:
+            for r in eng.step():
+                done[r.uid] = r.out_tokens
+        return done
+
+    cold = ServeEngine(model, params, max_len=64, max_batch=3, page_size=8)
+    cold_uid = cold.add_request(prompt, max_new_tokens=4)
+    cold_out = drain(cold)[cold_uid]
+
+    warm = ServeEngine(model, params, max_len=64, max_batch=3, page_size=8)
+    # Sub-page prompts can never be indexed: skipped, not an error.
+    assert warm.warm_prefixes([prompt[:4]]) == 0
+    assert warm.warm_prefixes([prompt]) == 2
+    warm_uid = warm.add_request(prompt, max_new_tokens=4)
+    # Sharing warmed pages is transparent: identical greedy tokens.
+    assert drain(warm)[warm_uid] == cold_out
+    assert warm.kv.stats.prefix_hit_tokens == 16
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        wave = ServeEngine(model, params, batch_size=2, max_len=32)
+    with pytest.raises(RuntimeError, match="continuous"):
+        wave.warm_prefixes([prompt])

@@ -1,0 +1,225 @@
+"""Sharded MPGEMM (distributed/shard_gemm.py): parity against the
+single-device mp_dot/mp_dot_grouped oracle across mesh sizes and operand
+encodings, operand-splitting error contracts, and the mesh namespace the
+plan cache keys per-shard tunings under.
+
+Mesh-backed tests skip below the needed device count — the CI multidevice
+job runs the suite with REPRO_FORCE_HOST_DEVICES=8 (tests/conftest.py)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import mp_dot, mp_dot_grouped
+from repro.distributed import (
+    mesh_axis_size, mesh_plan_tag, mp_dot_grouped_sharded, mp_dot_sharded,
+    shard_operand,
+)
+from repro.launch.mesh import make_tp_mesh
+from repro.packing.pack import pack_operand
+from repro.sparse.sparsify import sparsify_magnitude
+from repro.tuning import current_mesh_namespace, mesh_namespace
+from repro.tuning.plan_cache import make_key
+
+# Paper Table III row 6 scaled to test size: decode M, K-major reduction.
+M, N, K = 32, 128, 256
+
+
+def _sizes(limit=8):
+    return [p for p in (1, 2, 4, 8)
+            if p <= min(limit, jax.device_count())]
+
+
+def _need(p):
+    return pytest.mark.skipif(
+        jax.device_count() < p,
+        reason=f"needs {p} devices (REPRO_FORCE_HOST_DEVICES=8)")
+
+
+@pytest.fixture(scope="module")
+def operands():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((M, K)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((K, N)), jnp.float32)
+    bias = jnp.asarray(r.standard_normal((N,)), jnp.float32)
+    return x, b, bias
+
+
+# ---------------------------- dense parity -----------------------------------
+
+@_need(2)
+@pytest.mark.parametrize("partition", ["column", "row", "gather"])
+@pytest.mark.parametrize("overlap", ["ring", "blocking"])
+def test_dense_parity_all_partitions(operands, partition, overlap):
+    x, b, bias = operands
+    want = mp_dot(x, b, bias, policy="fp32", backend="xla")
+    for p in _sizes():
+        got = mp_dot_sharded(x, b, bias, mesh=make_tp_mesh(p),
+                             partition=partition, overlap=overlap,
+                             policy="fp32", backend="xla")
+        assert got.shape == want.shape and got.dtype == want.dtype
+        err = float(jnp.max(jnp.abs(got - want)))
+        # row reassociates the K sum across ring chunks -> fp32 rounding
+        assert err < 1e-3, f"p={p} {partition}/{overlap}: err={err}"
+
+
+@_need(2)
+def test_dense_parity_bf16_policy_and_no_bias(operands):
+    x, b, _ = operands
+    want = mp_dot(x, b, policy="bf16", backend="xla")
+    for p in _sizes(4):
+        got = mp_dot_sharded(x, b, mesh=make_tp_mesh(p), partition="row",
+                             policy="bf16", backend="xla")
+        assert got.dtype == want.dtype == jnp.bfloat16
+        err = float(jnp.max(jnp.abs(
+            got.astype(jnp.float32) - want.astype(jnp.float32))))
+        assert err < 0.2, f"p={p}: err={err}"
+
+
+@_need(4)
+def test_dense_parity_paper_row_kernel_backend():
+    # A real paper shape (row 6 decode, M=64 N=7168 K=2048) on the
+    # interpret-mode kernel path: the per-shard mp_dot goes through the
+    # pallas MPGEMM kernel, not the jnp fallback.
+    r = np.random.default_rng(1)
+    m, n, k = 64, 7168 // 16, 2048 // 4          # scaled: CI-sized, P | all
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    want = mp_dot(x, b, policy="fp32", backend="interpret")
+    got = mp_dot_sharded(x, b, mesh=make_tp_mesh(4), partition="column",
+                         policy="fp32", backend="interpret")
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 1e-3, f"kernel-path column parity: err={err}"
+
+
+# ------------------------ packed / sparse parity -----------------------------
+
+@_need(2)
+def test_packed_column_parity(operands):
+    x, b, bias = operands
+    pk = pack_operand(b, (32, 16))
+    want = mp_dot(x, pk, bias, policy="fp32")
+    for p in _sizes(4):
+        got = mp_dot_sharded(x, pk, bias, mesh=make_tp_mesh(p),
+                             policy="fp32")
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-3, f"p={p} packed: err={err}"
+
+
+@_need(2)
+def test_sparse_column_parity(operands):
+    x, b, bias = operands
+    sp = sparsify_magnitude(b, (32, 16), density=0.5)
+    want = mp_dot(x, sp, bias, policy="fp32")
+    for p in _sizes(4):
+        got = mp_dot_sharded(x, sp, bias, mesh=make_tp_mesh(p),
+                             policy="fp32")
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-3, f"p={p} sparse: err={err}"
+
+
+# ------------------------ expert-parallel grouped ----------------------------
+
+@_need(2)
+def test_grouped_expert_parallel_parity_ragged():
+    r = np.random.default_rng(2)
+    g, m, k, n = 8, 16, 64, 48
+    x = jnp.asarray(r.standard_normal((g, m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((g, k, n)), jnp.float32)
+    # ragged: full, partial, and EMPTY expert batches
+    gs = jnp.asarray([16, 7, 0, 12, 16, 1, 0, 9], jnp.int32)
+    want = mp_dot_grouped(x, b, group_sizes=gs, policy="fp32",
+                          backend="xla")
+    for p in [q for q in _sizes() if g % q == 0]:
+        got = mp_dot_grouped_sharded(x, b, mesh=make_tp_mesh(p),
+                                     group_sizes=gs, policy="fp32",
+                                     backend="xla")
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-3, f"p={p} expert-parallel: err={err}"
+        # masked rows are exactly zero on every shard
+        rows = np.arange(m)[None, :, None]
+        np.testing.assert_array_equal(
+            np.asarray(got) * (rows >= np.asarray(gs)[:, None, None]), 0.0)
+
+
+@_need(2)
+def test_grouped_packed_expert_parity():
+    r = np.random.default_rng(3)
+    g, m, k, n = 4, 8, 64, 32
+    x = jnp.asarray(r.standard_normal((g, m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((g, k, n)), jnp.float32)
+    pk = pack_operand(b, (32, 16))
+    want = mp_dot_grouped(x, pk, policy="fp32")
+    for p in [q for q in _sizes(4) if g % q == 0]:
+        got = mp_dot_grouped_sharded(x, pk, mesh=make_tp_mesh(p),
+                                     policy="fp32")
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-3, f"p={p} grouped packed: err={err}"
+
+
+# --------------------------- shard_operand contracts -------------------------
+
+def test_shard_operand_dense_and_errors(operands):
+    _, b, _ = operands
+    parts = shard_operand(b, 4)
+    assert len(parts) == 4 and all(p.shape == (K, N // 4) for p in parts)
+    np.testing.assert_array_equal(np.concatenate(
+        [np.asarray(p) for p in parts], axis=1), np.asarray(b))
+    assert shard_operand(b, 1) == (b,)
+    with pytest.raises(ValueError, match="not divisible"):
+        shard_operand(b, 3)
+    with pytest.raises(ValueError, match="axis"):
+        shard_operand(b, 2, axis="m")
+    with pytest.raises(ValueError, match="shards"):
+        shard_operand(b, 0)
+
+
+def test_shard_operand_packed_tile_lattice(operands):
+    _, b, _ = operands
+    pk = pack_operand(b, (32, 16))
+    parts = shard_operand(pk, 4)
+    assert all(p.layout.n == N // 4 for p in parts)
+    # shard boundary off the tile lattice: bn=16 doesn't divide N/8=16? it
+    # does — force a misaligned case with a wider tile instead
+    wide = pack_operand(b, (32, 64))
+    with pytest.raises(ValueError, match="tile width"):
+        shard_operand(wide, 4)                    # N/4 = 32 < bn = 64
+
+
+def test_shard_operand_sparse_grouped_n_raises():
+    r = np.random.default_rng(4)
+    g, k, n = 2, 64, 64
+    b = jnp.asarray(r.standard_normal((g, k, n)), jnp.float32)
+    sp = sparsify_magnitude(b, (32, 16), density=0.5)
+    with pytest.raises(ValueError, match="along G"):
+        shard_operand(sp, 2, axis="n")
+    parts = shard_operand(sp, 2, axis="g")        # G split is supported
+    assert len(parts) == 2
+
+
+# --------------------------- mesh plan namespace -----------------------------
+
+def test_make_key_mesh_namespace_suffix():
+    base = make_key(M, N, K, "float32")
+    tagged = make_key(M, N, K, "float32", mesh="tp4[model]")
+    assert tagged == base + "|mesh=tp4[model]"
+    assert make_key(M, N, K, "float32", mesh="") == base
+    # ambient namespace: make_key with mesh=None reads the context tag
+    assert current_mesh_namespace() == ""
+    with mesh_namespace("tp2[model]"):
+        assert current_mesh_namespace() == "tp2[model]"
+        assert make_key(M, N, K, "float32") == base + "|mesh=tp2[model]"
+        with mesh_namespace("tp8[model]"):        # nesting restores
+            assert make_key(M, N, K, "float32").endswith("tp8[model]")
+        assert current_mesh_namespace() == "tp2[model]"
+    assert make_key(M, N, K, "float32") == base
+
+
+@_need(2)
+def test_mesh_tag_matches_axis():
+    mesh = make_tp_mesh(2)
+    assert mesh_axis_size(mesh, "model") == 2
+    assert mesh_plan_tag(mesh, "model") == "tp2[model]"
+    mesh = make_tp_mesh(2, axis="tensor")
+    assert mesh_plan_tag(mesh, "tensor") == "tp2[tensor]"
