@@ -1,0 +1,222 @@
+"""The precision ladder on the paper's DeepSeek/LLaMA workloads.
+
+What a narrower payload codec buys is WEIGHT-side HBM traffic — the term
+that dominates the paper's skinny decode workloads (m = 64 rows stream a
+k x n weight every call).  This benchmark prices each rung of the ladder
+(int8 per-tile, int4 nibble-packed, fp8 e4m3 scaled) with the same
+modeled-traffic accounting the planner optimizes:
+
+  * ``weight_bytes``   — per-call B-side stream: payload (k*n at the
+                         codec's bits-per-element) + per-tile f32 scales;
+  * ``hbm_bytes``      — full modeled traffic of the revisiting grid
+                         (``perf.metrics.gemm_bytes`` with the codec's
+                         fractional byte width);
+  * trace gates        — the int4 path must be ONE Pallas launch with
+                         ZERO weight-sized dequant materializations
+                         outside the kernel (the nibble decode rides the
+                         accumulation loop), and the activation-quantized
+                         ``quant_in`` GEMM must fuse quantize -> GEMM ->
+                         dequant(+act) into ONE launch.
+
+``--smoke`` runs workloads 1/13/19 (DeepSeek decode, DeepSeek prefill,
+LLaMA decode) and hard-asserts the acceptance gates: int4 weight bytes
+<= 0.55x int8 on every workload, and both launch-count gates.
+"""
+import argparse
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PAPER_WORKLOADS, emit, record
+from repro.core.blocking import plan_gemm
+from repro.core.codecs import get_codec
+from repro.core.gemm import mp_dot
+from repro.packing import pack_operand
+from repro.perf.metrics import gemm_bytes
+
+# The ladder, narrowest payload last (int8 is the PR-8 baseline rung).
+LADDER = ("int8", "fp8e4m3", "int4")
+
+# Smoke rows: DeepSeek decode (1), DeepSeek prefill (13), LLaMA decode (19)
+# — the hand-computed shapes tests/test_quant.py pins byte-for-byte.
+SMOKE_WORKLOAD_IDS = (1, 13, 19)
+
+# Acceptance gate: int4 per-call weight bytes vs int8 (payload exactly
+# 0.5x; per-tile scale overhead must not eat the margin).
+INT4_WEIGHT_RATIO_GATE = 0.55
+
+
+def weight_stream_bytes(n: int, k: int, codec_name: str,
+                        bk: int, bn: int) -> int:
+    """Per-call B-side HBM bytes: nibble/byte payload + f32 tile scales.
+
+    Matches ``PackedOperand.nbytes`` for a zero-padding-free shape:
+    ``k*n`` elements at the codec's bits-per-element, plus one f32 scale
+    per (bk, bn) tile.
+    """
+    codec = get_codec(codec_name)
+    payload = (k * n * codec.bits) // 8
+    tiles = math.ceil(k / bk) * math.ceil(n / bn)
+    return payload + tiles * 4
+
+
+def run(smoke: bool = False, rows=None):
+    """Modeled weight/total traffic per codec on the paper workloads."""
+    rows = rows if rows is not None else []
+    work = [w for w in PAPER_WORKLOADS
+            if not smoke or w[0] in SMOKE_WORKLOAD_IDS]
+    for wid, m, n, k in work:
+        per_codec = {}
+        for codec in LADDER:
+            # Each rung is priced at its own planner choice, exactly as
+            # serving launches it (the payload dtype steers the lattice).
+            plan = plan_gemm(m, n, k, "bfloat16", codec)
+            wb = weight_stream_bytes(n, k, codec, plan.bk, plan.bn)
+            total = gemm_bytes(m, n, k, plan.bm, plan.bn,
+                               a_dtype="bfloat16", b_dtype=codec,
+                               out_dtype="bfloat16")
+            per_codec[codec] = (wb, total)
+        ratio = per_codec["int4"][0] / per_codec["int8"][0]
+        rows.append(dict(name=f"workload_{wid:02d}", m=m, n=n, k=k,
+                         per_codec=per_codec, int4_weight_ratio=ratio))
+        emit(f"quant_{wid:02d}_ladder", 0.0,
+             ";".join(f"{c}_weight_bytes={per_codec[c][0]}"
+                      for c in LADDER)
+             + f";int4_over_int8={ratio:.3f}")
+        record(f"quant_{wid:02d}_ladder", "quant", kind="model",
+               workload={"paper_workload": wid, "m": m, "n": n, "k": k},
+               metrics={
+                   **{f"weight_bytes_{c}": float(per_codec[c][0])
+                      for c in LADDER},
+                   **{f"hbm_bytes_{c}": float(per_codec[c][1])
+                      for c in LADDER},
+                   "int4_weight_ratio": ratio,
+               })
+    return rows
+
+
+def _count_pallas(jaxpr) -> int:
+    """Pallas launches anywhere in a jaxpr (recursing into sub-jaxprs)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "pallas" in eqn.primitive.name:
+            n += 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            n += _count_pallas(sub)
+    return n
+
+
+_DEQUANT_PRIMS = {"convert_element_type", "mul", "div"}
+
+
+def _dequant_materializations(jaxpr, weight_elems: int) -> int:
+    """Weight-sized dequant intermediates OUTSIDE Pallas kernels.
+
+    A separate dequant launch shows up as a (k*n)-element convert/scale
+    output in the surrounding jaxpr; the fused path keeps the nibble
+    decode inside the kernel body, which this walk deliberately skips.
+    """
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "pallas" in eqn.primitive.name:
+            continue
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            n += _dequant_materializations(sub, weight_elems)
+        if eqn.primitive.name not in _DEQUANT_PRIMS:
+            continue
+        for var in eqn.outvars:
+            if getattr(var.aval, "size", 0) == weight_elems:
+                n += 1
+    return n
+
+
+def run_trace_gate(assert_gate: bool = True):
+    """Launch-count gates from the traced jaxpr (exact, timing-free)."""
+    m, n, k = 32, 256, 256
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    x = jax.ShapeDtypeStruct((m, k), jnp.bfloat16)
+    results = {}
+    for codec in ("int4", "fp8e4m3"):
+        plan = plan_gemm(m, n, k, "bfloat16", codec)
+        packed = pack_operand(w, plan, dtype=codec, backend="xla")
+
+        def plain_fn(x, p):
+            return mp_dot(x, p, policy="bf16", backend="interpret")
+
+        def fused_fn(x, p):
+            return mp_dot(x, p, policy="bf16", backend="interpret",
+                          quant_in=True, activation="silu")
+
+        jx = jax.make_jaxpr(plain_fn)(x, packed).jaxpr
+        results[codec] = dict(
+            launches=_count_pallas(jx),
+            dequants=_dequant_materializations(jx, k * n),
+            launches_quant_in=_count_pallas(
+                jax.make_jaxpr(fused_fn)(x, packed).jaxpr),
+        )
+        emit(f"quant_trace_gate_{codec}", 0.0,
+             f"pallas_launches={results[codec]['launches']};"
+             f"dequant_materializations={results[codec]['dequants']};"
+             f"quant_in_launches={results[codec]['launches_quant_in']}")
+        record(f"quant_trace_gate_{codec}", "quant", kind="trace",
+               workload={"m": m, "n": n, "k": k, "codec": codec},
+               metrics={"pallas_launches": float(results[codec]["launches"]),
+                        "dequant_materializations":
+                            float(results[codec]["dequants"]),
+                        "quant_in_pallas_launches":
+                            float(results[codec]["launches_quant_in"])})
+    if assert_gate:
+        for codec, r in results.items():
+            if r["launches"] != 1:
+                raise SystemExit(
+                    f"{codec} packed GEMM traced {r['launches']} Pallas "
+                    f"launches, want exactly 1 (decode must ride the "
+                    f"accumulation)")
+            if r["dequants"] != 0:
+                raise SystemExit(
+                    f"{codec} path materializes {r['dequants']} "
+                    f"weight-sized dequant intermediates outside the "
+                    f"kernel, want 0")
+            if r["launches_quant_in"] != 1:
+                raise SystemExit(
+                    f"quant_in {codec} GEMM traced "
+                    f"{r['launches_quant_in']} Pallas launches — "
+                    f"quantize/GEMM/dequant must be ONE fused launch")
+    return results
+
+
+def check_gate(rows) -> None:
+    bad = [r for r in rows
+           if r["int4_weight_ratio"] > INT4_WEIGHT_RATIO_GATE]
+    if bad:
+        raise SystemExit(
+            f"int4 weight bytes exceed {INT4_WEIGHT_RATIO_GATE}x int8 on: "
+            + ", ".join(f"{r['name']} ({r['int4_weight_ratio']:.3f})"
+                        for r in bad))
+    print(f"quant gate OK: {len(rows)} workloads, int4 weight bytes "
+          f"<= {INT4_WEIGHT_RATIO_GATE}x int8 on all")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="workloads 1/13/19 + hard assertions (CI gate)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    check_gate(rows)
+    run_trace_gate(assert_gate=True)
+    print("quant trace gate OK: one launch per packed GEMM, zero "
+          "out-of-kernel dequant, fused quant_in single-launch")
+
+
+if __name__ == "__main__":
+    main()

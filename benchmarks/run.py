@@ -11,8 +11,8 @@ Beyond the CSV, the harness owns the perf-trajectory artifacts
                     ``BENCH_<area>.json`` per area to --out
   --diff DIR        compare the emitted files against the baselines in DIR
                     (benchmarks/baselines in CI); exit 1 on any regression
-  --only AREA [...] run only the named areas (gemm / packing / sparse /
-                    serve / distributed)
+  --only AREA [...] run only the named areas (gemm / packing / quant /
+                    sparse / serve / distributed)
   --smoke           reduced workloads (small shapes, no wall clocks) — the
                     configuration the committed baselines are built from,
                     so ``--smoke --emit --diff benchmarks/baselines`` is
@@ -30,7 +30,7 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-AREAS = ("gemm", "packing", "sparse", "serve", "distributed")
+AREAS = ("gemm", "packing", "quant", "sparse", "serve", "distributed")
 
 
 def run_gemm(smoke: bool = False) -> None:
@@ -73,6 +73,13 @@ def run_packing(smoke: bool = False) -> None:
         bench_packing.run_wall_sanity()
 
 
+def run_quant(smoke: bool = False) -> None:
+    from benchmarks import bench_quant
+    rows = bench_quant.run(smoke=smoke)   # precision-ladder weight traffic
+    bench_quant.check_gate(rows)
+    bench_quant.run_trace_gate(assert_gate=True)
+
+
 def run_sparse(smoke: bool = False) -> None:
     from benchmarks import bench_sparse
     bench_sparse.run()                     # beyond-paper: tile-sparse MPGEMM
@@ -101,6 +108,7 @@ def run_distributed(smoke: bool = False) -> None:
 AREA_RUNNERS = {
     "gemm": run_gemm,
     "packing": run_packing,
+    "quant": run_quant,
     "sparse": run_sparse,
     "serve": run_serve,
     "distributed": run_distributed,

@@ -41,11 +41,29 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codecs import dtype_bits, dtype_bytes, get_codec, plan_dtype
 from repro.core.constants import DEFAULT_HW, HardwareSpec
 
 
-def _dtype_bytes(dtype) -> int:
-    return jnp.dtype(dtype).itemsize
+def _dtype_bytes(dtype):
+    """Bytes per element — fractional for sub-byte payload codecs (int4
+    moves half a byte of HBM per weight element; core/codecs.py)."""
+    return dtype_bytes(dtype)
+
+
+def _min_span(dtype, floor_bytes: int, align: int) -> int:
+    """Smallest ``align``-multiple element count whose contiguous row
+    covers ``floor_bytes`` — computed in BITS so sub-byte codecs get an
+    exact integer answer (int4: 512 B -> 1024 elements)."""
+    bits = dtype_bits(dtype)
+    elems = (floor_bytes * 8 + bits - 1) // bits
+    return max(align, _round_up(elems, align))
+
+
+def _sublane(hw: HardwareSpec, dtype) -> int:
+    """Second-minor granularity; sub-byte codecs tile like their storage
+    bytes (int4 nibbles live in int8 bytes -> the (32, 128) int8 tile)."""
+    return hw.sublane(max(1, dtype_bits(dtype) // 8))
 
 
 def _round_up(x: int, m: int) -> int:
@@ -108,14 +126,21 @@ def _resolve_dtypes(a_dtype, b_dtype=None, out_dtype=None, acc_dtype=None):
 
     int inputs accumulate in int32 and default to an int32 output; float
     inputs accumulate in f32 and default to the input dtype out (the MXU's
-    native pairs, paper Section V).
+    native pairs, paper Section V).  A payload-codec B dtype (``int4`` /
+    ``fp8e4m3``) passes through verbatim — the codec name IS the pricing
+    and cache-key namespace — and defaults the accumulator to f32 (the
+    per-tile dequant accumulates dequantized partials).
     """
     b_dtype = b_dtype or a_dtype
+    b_codec = get_codec(b_dtype)
     out_dtype = out_dtype or ("int32" if jnp.dtype(a_dtype).kind == "i" else a_dtype)
     if acc_dtype is None:
-        acc_dtype = "int32" if jnp.dtype(a_dtype).kind == "i" else "float32"
+        if b_codec is not None and b_codec.name != "int8":
+            acc_dtype = "float32"
+        else:
+            acc_dtype = "int32" if jnp.dtype(a_dtype).kind == "i" else "float32"
     return (
-        str(jnp.dtype(a_dtype)), str(jnp.dtype(b_dtype)),
+        str(jnp.dtype(a_dtype)), plan_dtype(b_dtype),
         str(jnp.dtype(out_dtype)), str(jnp.dtype(acc_dtype)),
     )
 
@@ -139,13 +164,11 @@ def enumerate_block_lattice(
     lattice so measured plans can never leave the space the kernel supports.
     """
     a_dtype, b_dtype, _, _ = _resolve_dtypes(a_dtype, b_dtype)
-    ab = _dtype_bytes(a_dtype)
-    bb = _dtype_bytes(b_dtype)
     lane = hw.lane
-    min_bk = max(lane, _round_up(hw.min_dma_row_bytes // ab, lane))
-    min_bn = max(lane, _round_up(hw.min_dma_row_bytes // bb, lane))
-    sub_a = hw.sublane(ab)
-    sub_b = hw.sublane(bb)
+    min_bk = _min_span(a_dtype, hw.min_dma_row_bytes, lane)
+    min_bn = _min_span(b_dtype, hw.min_dma_row_bytes, lane)
+    sub_a = _sublane(hw, a_dtype)
+    sub_b = _sublane(hw, b_dtype)
 
     def _cands(minimum: int, align: int, dim: int):
         out = []
@@ -168,7 +191,7 @@ def enumerate_block_lattice(
 
 def modeled_traffic_bytes(
     m: int, n: int, k: int, bm: int, bn: int,
-    a_bytes: int, b_bytes: int, c_bytes: int, beta: float = 0.0,
+    a_bytes: float, b_bytes: float, c_bytes: float, beta: float = 0.0,
     extra_mn_inputs: int = 0, density: float = 1.0,
 ) -> int:
     """HBM traffic for a K-innermost revisiting grid (C resident in VMEM).
@@ -176,7 +199,9 @@ def modeled_traffic_bytes(
     A is re-read once per column-block of C; B once per row-block of C; C is
     written once (and read once iff beta != 0).  ``extra_mn_inputs`` counts
     additional (M, N)-shaped epilogue operands (gated-activation / residual
-    fusions — core/gemm_spec.py), each read exactly once.
+    fusions — core/gemm_spec.py), each read exactly once.  The per-element
+    byte counts may be FRACTIONAL: sub-byte payload codecs (int4) price by
+    bits-per-element, so a nibble-packed B stream costs 0.5 bytes/element.
 
     ``density`` < 1 prices a TILE-SPARSE B operand (repro.sparse): only the
     stored fraction of B tiles is ever DMA'd, and the A-side re-reads
@@ -216,7 +241,7 @@ def vmem_working_set(
     if beta:
         ws += dbuf * bm * bn * out_bytes   # streamed C input blocks
     ws += extra_mn_inputs * dbuf * bm * bn * out_bytes  # epilogue operands
-    return ws
+    return int(ws)
 
 
 def plan_gemm(
@@ -257,8 +282,8 @@ def plan_gemm(
 
     budget = int(hw.vmem_bytes * vmem_budget_frac)
     lane = hw.lane
-    sub_a = hw.sublane(ab)   # A/acc second-minor granularity
-    sub_b = hw.sublane(bb)   # B second-minor granularity (constrains bk)
+    sub_a = _sublane(hw, a_dtype)   # A/acc second-minor granularity
+    sub_b = _sublane(hw, b_dtype)   # B second-minor granularity (bk)
     bk_align = max(lane, sub_b)
 
     # Granularity floors (paper P2: four-Z-register loads) are baked into the
@@ -330,8 +355,8 @@ def plan_with_blocks(
     bb = _dtype_bytes(b_dtype)
     ob = _dtype_bytes(out_dtype)
     accb = _dtype_bytes(acc_dtype)
-    sub_a = hw.sublane(ab)
-    bk_align = max(hw.lane, hw.sublane(bb))
+    sub_a = _sublane(hw, a_dtype)
+    bk_align = max(hw.lane, _sublane(hw, b_dtype))
 
     bm = min(bm, _round_up(m, sub_a))
     bn = min(bn, _round_up(n, hw.lane))

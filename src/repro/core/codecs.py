@@ -1,0 +1,169 @@
+"""Payload codecs — the precision ladder's storage formats.
+
+The source paper's point is *multi-precision* GEMM: MpGEMM specializes
+packing and micro-kernels per precision.  Here a precision is one
+:class:`PayloadCodec` — the dtype string stored in a
+``PackedLayout.dtype``, its bits-per-element (sub-byte formats pack
+several elements per storage byte), the jnp storage dtype of the payload
+array, and the symmetric quantization range.  Everything downstream keys
+off this table:
+
+* ``packing/layout.py`` — payload shapes / ``bits_per_element`` / tags
+* ``packing/pack.py`` — encode/decode (nibble interleave, saturating cast)
+* ``core/blocking.py`` / ``perf/metrics.py`` — byte pricing by bits, not
+  ``dtype.itemsize`` (an int4 weight element moves half a byte of HBM)
+* ``kernels/mpgemm.py`` — in-kernel decode riding the accumulation
+
+Codecs:
+
+``int8``
+    One byte per element, per-tile symmetric scale ``amax/127``.
+``int4``
+    Two elements (nibbles) per byte, per-tile symmetric scale ``amax/7``.
+    Packed along the K axis of the transpose-resolved (bk, bn) tile.
+``fp8e4m3``
+    E4M3 floating storage (``jnp.float8_e4m3fn`` via ml_dtypes when the
+    installed jax exposes it; emulated uint8 bit-packing otherwise) with
+    a per-tile ``amax/448`` scale and a saturating cast — e4m3fn has no
+    inf, so out-of-range values clamp to +-448 instead of producing NaN.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+# e4m3fn: max finite = 1.75 * 2**8 = 448 (no inf encoding).
+FP8_E4M3_MAX = 448.0
+
+HAS_JNP_FP8 = hasattr(jnp, "float8_e4m3fn")
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadCodec:
+    """One storage format for packed weight payloads."""
+
+    name: str                  # the PackedLayout.dtype string
+    bits: int                  # logical bits per weight element
+    storage: str               # jnp dtype string of the payload array
+    qmax: float                # symmetric quant range: scale = amax / qmax
+    integer: bool              # int-valued payload (int dot + scale)
+    # False when the format is bit-emulated on this install — the Pallas
+    # kernel path can't decode it natively and callers fall back to the
+    # reference unpack (XLA) path.
+    kernel_native: bool = True
+
+    @property
+    def elems_per_byte(self) -> int:
+        return max(1, 8 // self.bits)
+
+    def payload_rows(self, bk: int) -> int:
+        """Physical payload rows storing ``bk`` logical K rows."""
+        e = self.elems_per_byte
+        return (bk + e - 1) // e
+
+
+CODECS: Dict[str, PayloadCodec] = {
+    "int8": PayloadCodec("int8", 8, "int8", 127.0, integer=True),
+    "int4": PayloadCodec("int4", 4, "int8", 7.0, integer=True),
+    "fp8e4m3": PayloadCodec(
+        "fp8e4m3", 8,
+        "float8_e4m3fn" if HAS_JNP_FP8 else "uint8",
+        FP8_E4M3_MAX, integer=False, kernel_native=HAS_JNP_FP8),
+}
+
+# CLI spellings (launch/serve.py --pack-format) -> codec names.
+_ALIASES = {"fp8": "fp8e4m3", "float8_e4m3fn": "fp8e4m3",
+            "float8": "fp8e4m3", "e4m3": "fp8e4m3"}
+
+
+def get_codec(dtype) -> Optional[PayloadCodec]:
+    """The codec for a dtype string (aliases resolve), or None for plain
+    (float) dtypes."""
+    if not isinstance(dtype, str):
+        return None
+    return CODECS.get(_ALIASES.get(dtype, dtype))
+
+
+def is_codec(dtype) -> bool:
+    return get_codec(dtype) is not None
+
+
+def canonical_payload_dtype(dtype) -> str:
+    """Normalize a payload-dtype spelling: codec names and their aliases
+    pass through canonically; everything else resolves via jnp.dtype."""
+    if isinstance(dtype, str):
+        name = _ALIASES.get(dtype, dtype)
+        if name in CODECS:
+            return name
+    return str(jnp.dtype(dtype))
+
+
+def dtype_bits(dtype) -> int:
+    """Logical bits per element — the byte-pricing primitive.  Codec
+    strings use the table; plain dtypes use itemsize."""
+    codec = get_codec(dtype)
+    if codec is not None:
+        return codec.bits
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def dtype_bytes(dtype) -> float:
+    """Bytes per element; fractional for sub-byte codecs (int4 -> 0.5).
+    Whole-byte dtypes return an exact int so existing integer-arithmetic
+    call sites (block lattices, DMA-row floors) are unchanged."""
+    bits = dtype_bits(dtype)
+    return bits // 8 if bits % 8 == 0 else bits / 8
+
+
+def storage_dtype(dtype) -> jnp.dtype:
+    """jnp dtype of the payload array holding elements of ``dtype``."""
+    codec = get_codec(dtype)
+    return jnp.dtype(codec.storage if codec is not None else dtype)
+
+
+def plan_dtype(dtype) -> str:
+    """The dtype string handed to the analytic planner / cache keys.
+    Codec names are preserved verbatim (they ARE the namespace); plain
+    dtypes canonicalize through jnp."""
+    return canonical_payload_dtype(dtype)
+
+
+# -- emulated e4m3 (no jnp.float8_e4m3fn on this install) ---------------------
+
+def _e4m3_grid() -> Tuple[float, ...]:
+    """The 127 non-negative finite e4m3fn magnitudes, ascending (0,
+    subnormals m*2^-9, then (1+m/8)*2^(e-7) up to 448)."""
+    vals = [0.0]
+    for m in range(1, 8):                 # e == 0: subnormals
+        vals.append(m * 2.0 ** -9)
+    for e in range(1, 16):
+        for m in range(8):
+            if e == 15 and m == 7:        # the NaN encoding
+                continue
+            vals.append((1.0 + m / 8.0) * 2.0 ** (e - 7))
+    return tuple(vals)
+
+
+E4M3_GRID = _e4m3_grid()
+
+
+def emulated_fp8_encode(x):
+    """f32 (already clipped to +-448) -> uint8 e4m3fn bit codes, nearest
+    magnitude on the finite grid (never the NaN code)."""
+    grid = jnp.asarray(E4M3_GRID, jnp.float32)
+    mag = jnp.abs(x).astype(jnp.float32)
+    hi = jnp.clip(jnp.searchsorted(grid, mag), 0, len(E4M3_GRID) - 1)
+    lo = jnp.clip(hi - 1, 0, len(E4M3_GRID) - 1)
+    nearer_lo = (mag - grid[lo]) <= (grid[hi] - mag)
+    code = jnp.where(nearer_lo, lo, hi).astype(jnp.uint8)
+    sign = (x < 0).astype(jnp.uint8) << 7
+    return code | sign
+
+
+def emulated_fp8_decode(codes):
+    """uint8 e4m3fn bit codes -> f32 values."""
+    grid = jnp.asarray(E4M3_GRID, jnp.float32)
+    mag = grid[jnp.clip(codes & 0x7F, 0, len(E4M3_GRID) - 1)]
+    return jnp.where((codes >> 7) != 0, -mag, mag)

@@ -40,7 +40,7 @@ import numpy as np
 from repro.core import config as cfg
 from repro.core.gemm_spec import (
     EpilogueSpec, GemmSpec, apply_epilogue, epilogue_bwd, epilogue_needs_pre,
-    resolve_epilogue,
+    get_epilogue, resolve_epilogue,
 )
 from repro.core.policy import PrecisionPolicy, get_policy, quantize_per_tensor
 from repro.kernels.mpgemm import mpgemm_pallas_spec
@@ -106,6 +106,20 @@ def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
     kernel_backend = backend in ("pallas", "interpret")
     interp = backend == "interpret"
 
+    # Registry pre-stage (quant_in): per-token activation quantization of X
+    # BEFORE the launch — plain jnp ops, so quantize -> GEMM -> dequant is
+    # still ONE kernel launch; the produced row scales ride the extras
+    # stream into the fused dequant tail.
+    ep_def = get_epilogue(epilogue.kind)
+    pre_quant = ep_def.pre is not None
+    if pre_quant:
+        if bias is not None:
+            raise ValueError(
+                f"epilogue {epilogue.kind!r} does not take a bias (the "
+                "fused per-row dequant would rescale it)")
+        x, pre_extras = ep_def.pre(epilogue, x)
+        extras = tuple(pre_extras) + tuple(extras)
+
     def _kernel(a, b, wp, scale, ws=None):
         op = b if b is not None else wp if wp is not None else ws
         return mpgemm_pallas_spec(
@@ -119,8 +133,16 @@ def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
         # — the payload IS the weight-side storage, so only the x side
         # ever needs a per-call cast/quantize.
         layout = w.layout
-        if kernel_backend and not (policy.quantized
-                                   and layout.dtype != "int8"):
+        if kernel_backend and (pre_quant or not (policy.quantized
+                                                 and layout.dtype != "int8")):
+            if pre_quant:
+                # X is already row-quantized int8; an int8 payload dots in
+                # int32 against it, a float payload upcasts in-kernel.
+                if layout.dtype == "int8":
+                    return _kernel(x, None, None, None, w)
+                w = w.astype(policy.compute_dtype)
+                return _kernel(x.astype(jnp.dtype(policy.compute_dtype)),
+                               None, None, None, w)
             if policy.quantized:
                 xq, sx = quantize_per_tensor(x)
                 return _kernel(xq, None, None, sx, w)
@@ -137,23 +159,53 @@ def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
 
     if is_packed(w):
         layout = w.layout
-        if kernel_backend and not (policy.quantized
-                                   and layout.dtype != "int8"):
+        native = kernel_backend and layout.kernel_native
+        if native and (pre_quant or layout.per_tile_scales
+                       or not policy.quantized):
+            if pre_quant:
+                # X is already row-quantized int8.  Quantized payloads
+                # (int8/int4/fp8) dequant via their per-tile scales riding
+                # the accumulation; float payloads upcast the int X values
+                # in-kernel (the row scale still dequantizes in the tail).
+                if layout.per_tile_scales:
+                    return _kernel(x, None, w, None)
+                w = w.astype(policy.compute_dtype)
+                return _kernel(x.astype(jnp.dtype(policy.compute_dtype)),
+                               None, w, None)
             if policy.quantized:
+                if layout.codec is not None and not layout.codec.integer:
+                    # fp8 payload under the dynamic-int8 policy: there is
+                    # no int8 x fp8 dot — stream bf16 activations against
+                    # the fp8 tiles (per-tile scales still dequant).
+                    return _kernel(x.astype(jnp.bfloat16), None, w, None)
                 # Dynamic x-side quantization only: the weight side is
-                # already int8 with per-tile scales inside the payload.
+                # already int-valued with per-tile scales in the payload.
                 xq, sx = quantize_per_tensor(x)
                 return _kernel(xq, None, w, sx)
             xc = x.astype(jnp.dtype(policy.compute_dtype))
-            if layout.dtype != "int8":
+            if not layout.per_tile_scales:
                 w = w.astype(policy.compute_dtype)  # no-op when packed right
             return _kernel(xc, None, w, None)
-        # XLA fallback — or a float payload under the dynamic-int8 policy,
-        # whose per-tensor weight quantization needs a dense array.
+        # XLA fallback — a float payload under the dynamic-int8 policy
+        # (whose per-tensor weight quantization needs a dense array), a
+        # bit-emulated codec the kernel can't decode, or a non-kernel
+        # backend: unpack once and reuse the dense-path logic.
         from repro.packing.pack import unpack_operand
-        w = unpack_operand(w, backend=backend if kernel_backend else None)
+        w = unpack_operand(w, backend=backend if native else None)
         spec = dataclasses.replace(spec, packed=False, tile_scaled=False,
                                    trans_b=False)
+
+    if pre_quant:
+        # Dense weights under activation quantization: per-tensor quantize
+        # the weight side so the dot runs int8 x int8 -> int32; the weight
+        # scale rides the scalar dequant slot, the row scales the tail.
+        wq, sw = quantize_per_tensor(w)
+        if kernel_backend:
+            return _kernel(x, wq, None, sw)
+        acc = jax.lax.dot_general(x, wq, _dims(spec),
+                                  preferred_element_type=jnp.int32)
+        return _xla_epilogue(epilogue, acc, bias, sw, extras,
+                             grouped).astype(out_dtype)
 
     if policy.quantized:
         xq, sx = quantize_per_tensor(x)
@@ -348,17 +400,30 @@ _gemm_core.defvjp(_gemm_fwd, _gemm_bwd)
 
 # --- op-level spec assembly ---------------------------------------------------
 
-def _build_epilogue(epilogue, activation, gate, residual, epilogue_operands):
+def _build_epilogue(epilogue, activation, gate, residual, epilogue_operands,
+                    quant_in=False):
     """Resolve the op-level EpilogueSpec + ordered extras tuple.
 
     Convenience kwargs (``activation``/``gate``/``residual``) infer the
     registry kind; an explicit ``epilogue`` spec wins, with
     ``epilogue_operands`` naming any custom entry's streamed operands.
-    The shared registry-driven resolution lives in core/gemm_spec.py.
+    ``quant_in=True`` selects the activation-quantization family (explicit
+    opt-in — pre-stage kinds are never inferred from operands).  The
+    shared registry-driven resolution lives in core/gemm_spec.py.
     """
     named = {"gate": gate, "residual": residual}
     if epilogue_operands:
         named.update(epilogue_operands)
+    if quant_in:
+        if epilogue is not None:
+            raise ValueError(
+                "pass quant_in=True OR an explicit epilogue spec, not both")
+        if gate is not None:
+            raise ValueError(
+                "quant_in does not compose with the gated epilogue")
+        kind = "quant_in_residual" if residual is not None else "quant_in"
+        epilogue = EpilogueSpec(kind=kind, activation=activation)
+        activation = None
     epilogue, extras = resolve_epilogue(named, epilogue=epilogue,
                                         activation=activation)
     if epilogue.beta != 0.0:
@@ -420,6 +485,7 @@ def mp_dot(
     residual: Optional[jax.Array] = None,
     epilogue: Optional[EpilogueSpec] = None,
     epilogue_operands: Optional[dict] = None,
+    quant_in: bool = False,
 ) -> jax.Array:
     """y[..., n] = tail(x[..., k] @ (b[n, k]ᵀ if trans_w else b[k, n]) + bias).
 
@@ -450,6 +516,14 @@ def mp_dot(
       precision policy; int8 payloads are frozen via float0 like packed
       int8.
 
+    ``quant_in=True`` turns on per-token activation quantization: a
+    registry pre-stage computes per-row amax scales for ``x``, the GEMM
+    runs int8 (against per-tile-quantized packed payloads or a per-tensor-
+    quantized dense weight), and the per-row dequant (+activation
+    [+residual]) is fused into the epilogue — quantize -> GEMM -> dequant
+    in ONE kernel launch.  The backward is straight-through (gradients of
+    the float GEMM, ignoring the rounding).  Excludes ``bias``/``gate``.
+
     ``w=`` and ``b_sparse=`` are deprecated keyword aliases for ``b``.
     """
     w = _resolve_operand("mp_dot", b, w, b_sparse)
@@ -460,7 +534,7 @@ def mp_dot(
     if bias is not None:
         bias = bias.reshape(-1)
     epilogue, extras = _build_epilogue(epilogue, activation, gate, residual,
-                                       epilogue_operands)
+                                       epilogue_operands, quant_in=quant_in)
     extras = tuple(e.reshape(-1, e.shape[-1]) for e in extras)
     out_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
     if is_packed(w) or is_sparse(w):
@@ -504,6 +578,7 @@ def mp_dot_grouped(
     residual: Optional[jax.Array] = None,
     epilogue: Optional[EpilogueSpec] = None,
     epilogue_operands: Optional[dict] = None,
+    quant_in: bool = False,
 ) -> jax.Array:
     """y[g, m, n] = tail(x[g, m, k] @ (b[g, n, k]ᵀ if trans_w else b[g, k, n]) + bias[g, n]).
 
@@ -538,7 +613,7 @@ def mp_dot_grouped(
     policy = get_policy(policy)
     backend = backend or cfg.get_gemm_backend()
     epilogue, extras = _build_epilogue(epilogue, activation, gate, residual,
-                                       epilogue_operands)
+                                       epilogue_operands, quant_in=quant_in)
     out_s = str(jnp.dtype(out_dtype)) if out_dtype is not None else None
     if is_packed(w) or is_sparse(w):
         if w.layout.g != x.shape[0]:

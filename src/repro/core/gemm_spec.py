@@ -54,12 +54,23 @@ class EpilogueDef:
     """One registered epilogue family.
 
     ``tail(ep, acc, extras)`` maps the post-bias accumulator to the output
-    block; ``extras`` is a dict of the entry's named (M, N)-shaped streamed
-    operands.  ``bwd(ep, z, extras, dy)`` returns ``(dz, dextras)``: the
-    cotangent flowing back into the GEMM (pre-tail) and the cotangents of
-    the extra operands.  ``z`` is the recomputed pre-tail value (f32) when
-    ``needs_pre(ep)`` is true, else ``None`` — entries that only need the
-    incoming cotangent (e.g. a pure residual add) skip the recompute GEMM.
+    block; ``extras`` is a dict of the entry's named streamed operands.
+    ``bwd(ep, z, extras, dy)`` returns ``(dz, dextras)``: the cotangent
+    flowing back into the GEMM (pre-tail) and the cotangents of the
+    *external* extra operands.  ``z`` is the recomputed pre-tail value
+    (f32) when ``needs_pre(ep)`` is true, else ``None`` — entries that
+    only need the incoming cotangent (e.g. a pure residual add) skip the
+    recompute GEMM.
+
+    ``pre(ep, x)`` — when set — is a PRE-stage run on the X operand before
+    the GEMM launch (still inside the one custom-VJP core, as plain jnp
+    ops, so the launch count does not change): it returns ``(x',
+    internal_extras)`` and the internal extras are PREPENDED to the
+    caller's.  ``internal`` names the extras the pre-stage supplies (the
+    leading entries of ``extra_operands``); callers only ever provide the
+    remaining :attr:`external_operands`.  ``row_operands`` names extras
+    shaped (M, 1) per-row instead of (M, N) — the kernel streams them as
+    (bm, 1) blocks.
     """
 
     kind: str
@@ -67,13 +78,26 @@ class EpilogueDef:
     tail: Callable
     bwd: Callable
     needs_pre: Callable
+    pre: Optional[Callable] = None
+    internal: Tuple[str, ...] = ()
+    row_operands: Tuple[str, ...] = ()
+
+    @property
+    def external_operands(self) -> Tuple[str, ...]:
+        """The extras a CALLER passes (``extra_operands`` minus the
+        pre-stage-supplied ``internal`` ones)."""
+        return tuple(nm for nm in self.extra_operands
+                     if nm not in self.internal)
 
 
 _EPILOGUES: Dict[str, EpilogueDef] = {}
 
 
 def register_epilogue(kind: str, *, extra_operands: Tuple[str, ...] = (),
-                      bwd: Callable, needs_pre: Callable):
+                      bwd: Callable, needs_pre: Callable,
+                      pre: Optional[Callable] = None,
+                      internal: Tuple[str, ...] = (),
+                      row_operands: Tuple[str, ...] = ()):
     """Register a fused-epilogue family under ``kind`` (decorator).
 
     This is the extension point the four hand-cloned GEMM paths used to be:
@@ -84,9 +108,13 @@ def register_epilogue(kind: str, *, extra_operands: Tuple[str, ...] = (),
     def deco(tail: Callable) -> Callable:
         if kind in _EPILOGUES:
             raise ValueError(f"epilogue {kind!r} already registered")
+        if not set(internal) <= set(extra_operands):
+            raise ValueError(f"internal operands {internal} must be a "
+                             f"subset of extra_operands {extra_operands}")
         _EPILOGUES[kind] = EpilogueDef(
             kind=kind, extra_operands=tuple(extra_operands), tail=tail,
-            bwd=bwd, needs_pre=needs_pre,
+            bwd=bwd, needs_pre=needs_pre, pre=pre,
+            internal=tuple(internal), row_operands=tuple(row_operands),
         )
         return tail
     return deco
@@ -249,6 +277,8 @@ def infer_epilogue_kind(named: dict) -> str:
     if not present:
         return "linear"
     for kind, ed in _EPILOGUES.items():
+        if ed.pre is not None:
+            continue  # pre-stage kinds (quant_in) are explicit-only
         if present == frozenset(ed.extra_operands):
             return kind
     raise ValueError(
@@ -259,15 +289,18 @@ def infer_epilogue_kind(named: dict) -> str:
 
 def collect_extras(ep: EpilogueSpec, named: dict) -> tuple:
     """``named`` operands ordered per the registry entry, with presence and
-    leftover validation."""
+    leftover validation.  Only the entry's EXTERNAL operands are collected
+    — pre-stage-supplied (internal) extras are produced inside the GEMM
+    core, never by callers."""
     ed = get_epilogue(ep.kind)
+    external = ed.external_operands
     extras = []
-    for nm in ed.extra_operands:
+    for nm in external:
         if named.get(nm) is None:
             raise ValueError(f"epilogue {ep.kind!r} requires operand {nm!r}")
         extras.append(named[nm])
     for nm, v in named.items():
-        if v is not None and nm not in ed.extra_operands:
+        if v is not None and nm not in external:
             raise ValueError(
                 f"operand {nm!r} is not consumed by epilogue {ep.kind!r}")
     return tuple(extras)
@@ -341,6 +374,56 @@ def _residual_tail(ep, acc, extras):
     store (unscaled, unlike beta·C, and available on the grouped path)."""
     return ACTIVATIONS[ep.activation](acc) + \
         extras["residual"].astype(acc.dtype)
+
+
+def _quant_pre(ep, x):
+    """Per-token (per-row) dynamic int8 quantization of X — the pre-stage
+    of the ``quant_in`` family.  Returns the quantized operand and its
+    (M, 1) row scales; runs as plain jnp ops inside the custom-VJP core,
+    so quantize -> GEMM -> dequant stays ONE kernel launch."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    row_scale = jnp.maximum(amax, 1e-8) / 127.0
+    xq = jnp.clip(jnp.round(xf / row_scale), -127, 127).astype(jnp.int8)
+    return xq, (row_scale,)
+
+
+def _quant_in_bwd(ep, z, extras, dy):
+    # Straight-through estimator: the backward ignores the quantization
+    # round/clip entirely (z is the recomputed FLOAT pre-tail GEMM).
+    return (_act_vjp(ep, z, dy) if _has_act(ep) else dy), ()
+
+
+@register_epilogue("quant_in", extra_operands=("row_scale",),
+                   internal=("row_scale",), row_operands=("row_scale",),
+                   pre=_quant_pre, bwd=_quant_in_bwd, needs_pre=_has_act)
+def _quant_in_tail(ep, acc, extras):
+    """act(acc · row_scale) — the dequant tail of per-token activation
+    quantization.  The per-row scale computed by the pre-stage rides the
+    extras stream as (bm, 1) blocks; combined with the weight side's
+    per-tile/per-tensor scale the full int GEMM dequantizes without ever
+    leaving the accumulator."""
+    rs = extras["row_scale"].astype(jnp.float32)
+    return ACTIVATIONS[ep.activation](acc.astype(jnp.float32) * rs)
+
+
+def _quant_in_residual_bwd(ep, z, extras, dy):
+    dz = _act_vjp(ep, z, dy) if _has_act(ep) else dy
+    return dz, (dy.astype(extras[0].dtype),)
+
+
+@register_epilogue("quant_in_residual",
+                   extra_operands=("row_scale", "residual"),
+                   internal=("row_scale",), row_operands=("row_scale",),
+                   pre=_quant_pre, bwd=_quant_in_residual_bwd,
+                   needs_pre=_has_act)
+def _quant_in_residual_tail(ep, acc, extras):
+    """act(acc · row_scale) + r — activation quantization composed with
+    the residual-add fusion: quantize, GEMM, dequant, activation, and the
+    transformer skip connection in one launch."""
+    rs = extras["row_scale"].astype(jnp.float32)
+    out = ACTIVATIONS[ep.activation](acc.astype(jnp.float32) * rs)
+    return out + extras["residual"].astype(out.dtype)
 
 
 LINEAR = EpilogueSpec()

@@ -48,6 +48,7 @@ from repro.core.gemm_spec import (
     EpilogueSpec, GemmSpec, apply_epilogue, get_epilogue, resolve_epilogue,
 )
 from repro.packing.layout import PackedOperand, is_packed
+from repro.packing.pack import unpack_nibbles
 from repro.sparse.layout import TileSparseOperand, build_schedule, is_sparse
 
 
@@ -106,28 +107,49 @@ def _accumulate(acc_ref, a, b, ts, trans_a: bool, trans_b: bool, acc_dtype):
 
     ``ts`` is the packed payload's per-tile dequant scale (None on the
     unpacked path).  With a per-tile scale the accumulator is f32 and the
-    scale is applied per K step — int8 x int8 contributions dot in int32
-    and scale on the way in; float x int8 tiles dequantize in VMEM before
-    the dot (int8 HBM reads, upcast at the compute unit)."""
+    scale is applied per K step:
+
+    * int x int (int8/int4-decoded payload vs an int8-quantized A): dot in
+      int32, scale on the way into the f32 accumulator;
+    * float A x quantized payload: dequantize the tile in VMEM before the
+      dot (int8/fp8 HBM reads, upcast at the compute unit);
+    * int A x FLOAT payload (activation-quantized X over an fp8 tile): no
+      mixed int x float dot exists — both sides upcast to f32.
+    """
     if ts is None:
         acc_ref[...] += jax.lax.dot_general(
             a, b, _dot_dims(trans_a, trans_b),
             preferred_element_type=acc_dtype)
-    elif jnp.issubdtype(a.dtype, jnp.integer):
+        return
+    a_int = jnp.issubdtype(a.dtype, jnp.integer)
+    b_int = jnp.issubdtype(b.dtype, jnp.integer)
+    if a_int and b_int:
         part = jax.lax.dot_general(
             a, b, _dot_dims(trans_a, trans_b),
             preferred_element_type=jnp.int32)
         acc_ref[...] += part.astype(jnp.float32) * ts
     else:
-        bf = (b.astype(jnp.float32) * ts).astype(a.dtype)
+        bf = b.astype(jnp.float32) * ts
+        af = a.astype(jnp.float32) if a_int else a
+        if not a_int:
+            bf = bf.astype(a.dtype)
         acc_ref[...] += jax.lax.dot_general(
-            a, bf, _dot_dims(trans_a, trans_b),
+            af, bf, _dot_dims(trans_a, trans_b),
             preferred_element_type=acc_dtype)
 
 
 def make_gemm_kernel(*, spec: GemmSpec, epilogue: EpilogueSpec, nk: int,
-                     k_rem: int, acc_dtype):
+                     k_rem: int, acc_dtype,
+                     b_codec: Optional[str] = None,
+                     b_rows: Optional[int] = None):
     """THE kernel factory: emit one Pallas body from the spec.
+
+    ``b_codec``/``b_rows`` select an in-register payload decode for
+    sub-byte packed B tiles (``int4``): the DMA'd (ceil(bk/2), bn) nibble
+    tile is unpacked to ``b_rows`` int8 K rows right after the read, so
+    the dequant rides the accumulation — no separate unpack launch ever
+    exists (the paper's never-run-a-separate-memory-pass rule applied to
+    the precision ladder).
 
     Grid = (M/bm, N/bn, K/bk) — grouped specs prepend the group axis G —
     with K innermost ('arbitrary').  Ref order (presence driven by the
@@ -226,9 +248,14 @@ def make_gemm_kernel(*, spec: GemmSpec, epilogue: EpilogueSpec, nk: int,
 
         a = _read(a_ref)
         # Packed B: the payload block is a pre-transposed, zero-padded
-        # (bk, bn) tile behind leading (1, 1) tile indices — an identity
+        # physical tile behind leading (1, 1) tile indices — an identity
         # index map, no strided DMA, no on-the-fly transposition.
         b = _read(b_ref, 2 if spec.packed else 0)
+        if b_codec is not None:
+            # Sub-byte payload: two K-adjacent nibbles per byte — unpack
+            # the register tile to b_rows int8 K rows (zero-padded rows
+            # decode to zero, so K-tail predication stays A-side only).
+            b = unpack_nibbles(b, b_rows)
         if k_rem:
             # Paper's predicate registers: mask the K tail so pipeline pad
             # garbage (possibly NaN) never pollutes the accumulator.
@@ -414,8 +441,12 @@ def _launch_sparse(a, b_sparse: TileSparseOperand, *, c, bias, scale, extras,
         sspec, scale1d = _scale_spec_and_input(scale, interpret)
         in_specs.append(sspec)
         inputs.append(scale1d)
-    for x in extras:
-        in_specs.append(mn_spec)
+    ep_def = get_epilogue(epilogue.kind)
+    row_spec = pl.BlockSpec(
+        lead + (bm, 1),
+        _sim(lambda i, t, kk, jj, slot, gg: _lead(gg, t) + (i, 0)))
+    for nm, x in zip(ep_def.extra_operands, extras):
+        in_specs.append(row_spec if nm in ep_def.row_operands else mn_spec)
         inputs.append(x)
 
     kernel = make_gemm_kernel(
@@ -489,6 +520,10 @@ def mpgemm_pallas_spec(
         tile_scaled=(layout is not None and layout.per_tile_scales)
         or (slayout is not None and slayout.per_tile_scales))
     b_layout = layout if layout is not None else slayout
+    if layout is not None and not layout.kernel_native:
+        raise NotImplementedError(
+            f"payload codec {layout.dtype!r} is bit-emulated on this "
+            "install; use the XLA unpack path (packing.pack.unpack_operand)")
     if b_layout is not None:
         if grouped and b_layout.g == 1:
             raise ValueError("2-D payload: use a non-grouped spec")
@@ -536,7 +571,10 @@ def mpgemm_pallas_spec(
             f"{ep_def.extra_operands}, got {len(extras)}")
     if epilogue.beta != 0.0 and c is None:
         raise ValueError("beta != 0 requires c")
-    n_extra_mn = len(extras)
+    # (M, 1) row-scale extras stream (bm, 1) blocks — only the (M, N)-shaped
+    # ones price as full output-sized inputs in the traffic model.
+    n_extra_mn = sum(1 for nm in ep_def.extra_operands
+                     if nm not in ep_def.row_operands)
 
     # --- plan resolution: explicit > tuned (epilogue-tagged) > analytic ---
     if plan is not None and b_layout is not None and (
@@ -599,7 +637,9 @@ def mpgemm_pallas_spec(
     if layout is not None:
         # Identity tile read: grid step (i, j, kk) fetches payload tile
         # (kk, j) — one contiguous DMA, the payoff of ahead-of-time packing.
-        b_spec = pl.BlockSpec(lead + (1, 1, bk, bn),
+        # The block minor dims are the PHYSICAL payload tile (sub-byte
+        # codecs store ceil(bk/2) nibble-pair rows per logical bk).
+        b_spec = pl.BlockSpec(lead + (1, 1) + layout.payload_tile,
                               _im(lambda i, j, kk: (kk, j, 0, 0)))
         inputs = [a, b_packed.payload]
     else:
@@ -626,20 +666,25 @@ def mpgemm_pallas_spec(
         sspec, scale1d = _scale_spec_and_input(scale, interpret)
         in_specs.append(sspec)
         inputs.append(scale1d)
-    for x in extras:
-        in_specs.append(mn_spec)
+    row_spec = pl.BlockSpec(lead + (bm, 1), _im(lambda i, j, kk: (i, 0)))
+    for nm, x in zip(ep_def.extra_operands, extras):
+        in_specs.append(row_spec if nm in ep_def.row_operands else mn_spec)
         inputs.append(x)
 
     scratch = [pltpu.VMEM((bm, bn), acc_dtype)] if pltpu else [
         pl.BlockSpec(memory_space=pl.ANY)
     ]
 
+    codec = layout.codec if layout is not None else None
+    sub_byte = codec is not None and codec.elems_per_byte > 1
     kernel = make_gemm_kernel(
         spec=spec,
         epilogue=epilogue,
         nk=grid[-1],
         k_rem=plan.k_rem,
         acc_dtype=acc_dtype,
+        b_codec=codec.name if sub_byte else None,
+        b_rows=layout.bk if sub_byte else None,
     )
 
     kwargs = {}

@@ -61,6 +61,12 @@ def main():
                     help="pack static weights into kernel-native tile "
                          "layouts at load time (repro.packing; cache via "
                          "REPRO_PACK_CACHE)")
+    ap.add_argument("--pack-format", default=None,
+                    choices=["int8", "int4", "fp8"],
+                    help="payload codec for --pack (the precision ladder): "
+                         "int8 per-tile quantized, int4 nibble-packed "
+                         "(halves weight HBM traffic), fp8 e4m3 scaled. "
+                         "Default: the policy's payload dtype")
     ap.add_argument("--sparsity", type=float, default=0.0,
                     help="fraction of weight TILES to prune at load time "
                          "(repro.sparse tile-magnitude pruning; 0 = off). "
@@ -103,6 +109,8 @@ def main():
     if args.pack and args.sparsity > 0:
         raise SystemExit("--pack and --sparsity are mutually exclusive "
                          "(a weight is stored packed-dense OR tile-sparse)")
+    if args.pack_format is not None and not args.pack:
+        raise SystemExit("--pack-format requires --pack")
 
     cfg = cb.get(args.arch, smoke=args.smoke)
     model = build_model(cfg, policy=args.policy, remat=False)
@@ -110,9 +118,11 @@ def main():
     if args.pack:
         from repro.packing import pack_params, packed_param_bytes
         params = pack_params(params, policy=args.policy,
-                             m_hint=max_batch * 32)
+                             m_hint=max_batch * 32,
+                             pack_format=args.pack_format)
+        fmt = f", format={args.pack_format}" if args.pack_format else ""
         print(f"[serve] packed static weights: "
-              f"{packed_param_bytes(params)/2**20:.1f} MiB payload")
+              f"{packed_param_bytes(params)/2**20:.1f} MiB payload{fmt}")
     if args.sparsity > 0:
         from repro.sparse import (
             sparse_param_bytes, sparse_param_density, sparsify_params,

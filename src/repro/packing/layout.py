@@ -9,8 +9,12 @@ This module defines the TPU form of that layout:
         │  pack (repro.packing.pack): tile, pad edges with ZEROS,
         │  resolve the transpose, optionally per-tile int8 quantize
         ▼
-    payload[nkb, nnb, bk, bn]          (grouped: [g, nkb, nnb, bk, bn])
-    scales [nkb, nnb] f32 (int8 only)  (grouped: [g, nkb, nnb])
+    payload[nkb, nnb, tk, bn]          (grouped: [g, nkb, nnb, tk, bn])
+    scales [nkb, nnb] f32 (quantized codecs)   (grouped: [g, nkb, nnb])
+
+``tk`` is the PHYSICAL tile row count: ``bk`` for byte-or-wider payloads,
+``ceil(bk/2)`` for int4 (two K-adjacent nibbles share a byte — see
+``core.codecs`` for the codec table).
 
 Every (bk, bn) tile is **contiguous in HBM** and sits exactly where the
 kernel's (kk, j) grid step needs it, so the pack-aware MPGEMM path
@@ -31,6 +35,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.codecs import dtype_bits, get_codec, storage_dtype
+
 
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
@@ -42,10 +48,18 @@ class PackedLayout:
 
     ``k``/``n`` are the LOGICAL GEMM dims (contraction x output columns) —
     the transpose of a ``trans_w`` source is already resolved, so consumers
-    never see the storage orientation.  ``dtype`` is the payload dtype
-    (``int8`` implies per-tile scales); ``orig_dtype`` is the source
-    array's dtype (the unpack target for float payloads).  ``g`` > 1 marks
-    a grouped operand (MoE experts / batched weights).
+    never see the storage orientation.  ``dtype`` is the payload dtype —
+    either a plain float dtype or a quantized codec from
+    ``core.codecs.CODECS`` (``int8`` / ``int4`` / ``fp8e4m3``, all of
+    which imply per-tile scales); ``orig_dtype`` is the source array's
+    dtype (the unpack target for quantized payloads).  ``g`` > 1 marks a
+    grouped operand (MoE experts / batched weights).
+
+    ``bits_per_element`` is the LOGICAL storage width of one weight
+    element — 4 for int4 (two nibbles per payload byte), 8 for int8/fp8,
+    ``itemsize * 8`` for float payloads.  It is derived from ``dtype``
+    when left at the 0 sentinel, so layouts serialized before the field
+    existed round-trip unchanged.
     """
 
     k: int
@@ -56,6 +70,12 @@ class PackedLayout:
     orig_dtype: str
     trans_w: bool = False
     g: int = 1
+    bits_per_element: int = 0
+
+    def __post_init__(self):
+        if self.bits_per_element == 0:
+            object.__setattr__(self, "bits_per_element",
+                               dtype_bits(self.dtype))
 
     @property
     def nkb(self) -> int:
@@ -66,12 +86,39 @@ class PackedLayout:
         return _cdiv(self.n, self.bn)
 
     @property
+    def codec(self):
+        """The :class:`~repro.core.codecs.PayloadCodec`, or None (float)."""
+        return get_codec(self.dtype)
+
+    @property
     def per_tile_scales(self) -> bool:
-        return self.dtype == "int8"
+        return self.codec is not None
+
+    @property
+    def storage_dtype(self) -> jnp.dtype:
+        """jnp dtype of the payload array (int8 bytes for int4 nibbles,
+        float8_e4m3fn or emulated uint8 for fp8e4m3)."""
+        return storage_dtype(self.dtype)
+
+    @property
+    def kernel_native(self) -> bool:
+        """True when the Pallas kernel path can decode this payload
+        in-register (False only for bit-emulated fp8 installs)."""
+        codec = self.codec
+        return codec is None or codec.kernel_native
+
+    @property
+    def payload_tile(self) -> Tuple[int, int]:
+        """PHYSICAL payload-array dims of one (bk, bn) logical tile —
+        sub-byte codecs pack along K, so int4 stores (ceil(bk/2), bn)
+        bytes per tile."""
+        codec = self.codec
+        rows = codec.payload_rows(self.bk) if codec is not None else self.bk
+        return (rows, self.bn)
 
     @property
     def payload_shape(self) -> Tuple[int, ...]:
-        base = (self.nkb, self.nnb, self.bk, self.bn)
+        base = (self.nkb, self.nnb) + self.payload_tile
         return (self.g,) + base if self.g != 1 else base
 
     @property
@@ -128,7 +175,10 @@ class PackedOperand:
 
     @property
     def dtype(self):
-        return jnp.dtype(self.layout.dtype)
+        """jnp dtype of the payload ARRAY (codec storage dtype — int4
+        nibbles live in int8 bytes; the logical format is
+        ``layout.dtype`` / ``layout.bits_per_element``)."""
+        return self.layout.storage_dtype
 
     @property
     def nbytes(self) -> int:
@@ -147,7 +197,8 @@ class PackedOperand:
         dtype = jnp.dtype(dtype)
         if self.layout.per_tile_scales or self.payload.dtype == dtype:
             return self
-        layout = dataclasses.replace(self.layout, dtype=str(dtype))
+        layout = dataclasses.replace(self.layout, dtype=str(dtype),
+                                     bits_per_element=0)
         return PackedOperand(self.payload.astype(dtype), None, layout)
 
     def __repr__(self) -> str:

@@ -19,8 +19,20 @@ Two implementations with identical semantics:
 * a pure-jnp reference (pad + reshape + transpose) — used on the ``xla``
   backend and under ``vmap`` (stacked-layer packing in ``params.py``).
 
-``unpack_operand`` is the exact inverse (modulo int8 rounding) and is what
-non-kernel backends and the backward pass use to recover a dense operand.
+``unpack_operand`` is the exact inverse (modulo quantization rounding) and
+is what non-kernel backends and the backward pass use to recover a dense
+operand.
+
+Beyond int8, two sub-byte/low-precision codecs (``core.codecs``) share the
+per-tile-scale machinery:
+
+* ``int4`` — tiles quantize to +-7 and two K-adjacent values interleave
+  into one payload byte (low nibble = even k, high nibble = odd k), so
+  the payload moves HALF the bytes of int8.  ``unpack_nibbles`` is the
+  in-register decode the GEMM kernel rides (sign-extending shifts).
+* ``fp8e4m3`` — tiles scale by ``amax/448`` and saturating-cast to
+  e4m3 (native ``jnp.float8_e4m3fn`` where available, emulated uint8
+  bit codes otherwise — emulated payloads unpack on the XLA path only).
 """
 from __future__ import annotations
 
@@ -34,6 +46,10 @@ from jax.experimental import pallas as pl
 
 from repro.core import config as cfg
 from repro.core.blocking import GemmPlan
+from repro.core.codecs import (
+    FP8_E4M3_MAX, HAS_JNP_FP8, canonical_payload_dtype, emulated_fp8_decode,
+    emulated_fp8_encode, get_codec,
+)
 from repro.packing.layout import PackedLayout, PackedOperand
 
 
@@ -55,7 +71,7 @@ def _layout_for(w, bk: int, bn: int, *, trans_w: bool, dtype,
     # operand packs as a single exact-fit tile instead of a mostly-pad one.
     return PackedLayout(
         k=k, n=n, bk=min(bk, k), bn=min(bn, n),
-        dtype=str(jnp.dtype(dtype or w.dtype)),
+        dtype=canonical_payload_dtype(dtype if dtype is not None else w.dtype),
         orig_dtype=str(jnp.dtype(w.dtype)), trans_w=trans_w,
         g=w.shape[0] if grouped else 1,
     )
@@ -76,13 +92,71 @@ def _pack_dense_ref(w2d, layout: PackedLayout):
     return wp.reshape(layout.nkb, bk, layout.nnb, bn).transpose(0, 2, 1, 3)
 
 
-def _quantize_tiles_ref(tiles):
-    """Per-tile symmetric int8: (..., bk, bn) -> (int8 tiles, f32 scales)."""
+def pack_nibbles(q):
+    """Interleave K-adjacent int4 values into bytes along the tile's K
+    axis: (..., bk, bn) int8 values in [-7, 7] -> (..., ceil(bk/2), bn)
+    int8 bytes, low nibble = even k, high nibble = odd k (odd bk zero-pads
+    the dangling high nibble)."""
+    bk = q.shape[-2]
+    if bk % 2:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 2) + [(0, 1), (0, 0)])
+    lo = q[..., 0::2, :]
+    hi = q[..., 1::2, :]
+    return ((hi << 4) | (lo & 0xF)).astype(jnp.int8)
+
+
+def unpack_nibbles(b, rows: int):
+    """Inverse of :func:`pack_nibbles` — the in-register decode the GEMM
+    kernel uses: sign-extend each nibble with arithmetic shifts, then
+    interleave back to ``rows`` logical K rows."""
+    lo = (b << 4) >> 4                    # int8 shifts sign-extend
+    hi = b >> 4
+    pair = jnp.stack((lo, hi), axis=-2)   # (..., hk, 2, bn)
+    full = pair.reshape(*b.shape[:-2], 2 * b.shape[-2], b.shape[-1])
+    return full[..., :rows, :]
+
+
+def _encode_quant_tiles(tiles, codec):
+    """Per-tile symmetric quantization for one codec: (..., bk, bn) ->
+    (payload tiles in the codec's storage dtype, f32 scales).  int4
+    payloads are nibble-packed (physical rows = ceil(bk/2))."""
     t32 = tiles.astype(jnp.float32)
     amax = jnp.max(jnp.abs(t32), axis=(-2, -1))
-    scales = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(t32 / scales[..., None, None]), -127, 127)
-    return q.astype(jnp.int8), scales.astype(jnp.float32)
+    scales = jnp.maximum(amax, 1e-8) / codec.qmax
+    scaled = t32 / scales[..., None, None]
+    if codec.integer:
+        q = jnp.clip(jnp.round(scaled),
+                     -codec.qmax, codec.qmax).astype(jnp.int8)
+        if codec.elems_per_byte > 1:
+            q = pack_nibbles(q)
+        return q, scales.astype(jnp.float32)
+    # fp8e4m3: saturating cast — e4m3fn has no inf, so clamp to the max
+    # finite magnitude instead of overflowing to NaN.
+    q = jnp.clip(scaled, -FP8_E4M3_MAX, FP8_E4M3_MAX)
+    if HAS_JNP_FP8:
+        return q.astype(jnp.float8_e4m3fn), scales.astype(jnp.float32)
+    return emulated_fp8_encode(q), scales.astype(jnp.float32)
+
+
+def _quantize_tiles_ref(tiles):
+    """int8 per-tile quantization — the tile-sparse path's fixed codec
+    (sparse payloads stay int8; :func:`_encode_quant_tiles` is the
+    codec-general form the packed path uses)."""
+    return _encode_quant_tiles(tiles, get_codec("int8"))
+
+
+def decode_payload_tiles(payload, layout: PackedLayout):
+    """Payload tiles -> per-element values (pre-scale): int4 nibbles
+    sign-extend and interleave back to bk rows, emulated-fp8 bit codes
+    decode to f32, byte-native payloads pass through."""
+    codec = layout.codec
+    if codec is None:
+        return payload
+    if codec.elems_per_byte > 1:
+        return unpack_nibbles(payload, layout.bk)
+    if not codec.integer and not codec.kernel_native:
+        return emulated_fp8_decode(payload)
+    return payload
 
 
 def pack_reference(w, layout: PackedLayout):
@@ -94,8 +168,8 @@ def pack_reference(w, layout: PackedLayout):
     else:
         tiles = _pack_dense_ref(w, layout)
     if layout.per_tile_scales:
-        return _quantize_tiles_ref(tiles)
-    return tiles.astype(jnp.dtype(layout.dtype)), None
+        return _encode_quant_tiles(tiles, layout.codec)
+    return tiles.astype(layout.storage_dtype), None
 
 
 def _unpack_tiles_ref(tiles, layout: PackedLayout):
@@ -105,7 +179,7 @@ def _unpack_tiles_ref(tiles, layout: PackedLayout):
 
 
 def unpack_reference(payload, scales, layout: PackedLayout, dtype):
-    tiles = payload
+    tiles = decode_payload_tiles(payload, layout)
     if scales is not None:
         tiles = tiles.astype(jnp.float32) * scales[..., None, None]
     if layout.g != 1:
@@ -145,12 +219,22 @@ def _pack_kernel(src_ref, out_ref, *, layout: PackedLayout, grouped: bool):
 
 def _pack_quant_kernel(src_ref, out_ref, scale_ref, *, layout: PackedLayout,
                        grouped: bool):
+    codec = layout.codec
     tile = _masked_tile(src_ref, *_tile_ids(grouped), layout)
     tile = tile.astype(jnp.float32)
     amax = jnp.max(jnp.abs(tile))
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(tile / scale), -127, 127)
-    out_ref[...] = q.astype(jnp.int8).reshape(out_ref.shape)
+    scale = jnp.maximum(amax, 1e-8) / codec.qmax
+    scaled = tile / scale
+    if codec.integer:
+        q = jnp.clip(jnp.round(scaled),
+                     -codec.qmax, codec.qmax).astype(jnp.int8)
+        if codec.elems_per_byte > 1:
+            q = pack_nibbles(q)
+    else:
+        # Saturating e4m3 cast (kernel path requires the native dtype).
+        q = jnp.clip(scaled, -FP8_E4M3_MAX,
+                     FP8_E4M3_MAX).astype(out_ref.dtype)
+    out_ref[...] = q.astype(out_ref.dtype).reshape(out_ref.shape)
     scale_ref[...] = jnp.full(scale_ref.shape, scale, jnp.float32)
 
 
@@ -158,9 +242,12 @@ def _unpack_kernel(payload_ref, out_ref, *, dtype):
     out_ref[...] = payload_ref[...].reshape(out_ref.shape).astype(dtype)
 
 
-def _unpack_quant_kernel(payload_ref, scale_ref, out_ref, *, dtype):
-    tile = payload_ref[...].astype(jnp.float32).reshape(out_ref.shape)
-    out_ref[...] = (tile * scale_ref[0].reshape(-1)[0]).astype(dtype)
+def _unpack_quant_kernel(payload_ref, scale_ref, out_ref, *, dtype,
+                         layout: PackedLayout):
+    tile = payload_ref[...].reshape(payload_ref.shape[-2:])
+    tile = decode_payload_tiles(tile, layout).astype(jnp.float32)
+    tile = tile * scale_ref[0].reshape(-1)[0]
+    out_ref[...] = tile.astype(dtype).reshape(out_ref.shape)
 
 
 def _src_spec(layout: PackedLayout, grouped: bool):
@@ -176,11 +263,11 @@ def _src_spec(layout: PackedLayout, grouped: bool):
 
 
 def _payload_spec(layout: PackedLayout, grouped: bool):
+    tile = layout.payload_tile
     if grouped:
-        return pl.BlockSpec((1, 1, 1, layout.bk, layout.bn),
+        return pl.BlockSpec((1, 1, 1) + tile,
                             lambda g, i, j: (g, i, j, 0, 0))
-    return pl.BlockSpec((1, 1, layout.bk, layout.bn),
-                        lambda i, j: (i, j, 0, 0))
+    return pl.BlockSpec((1, 1) + tile, lambda i, j: (i, j, 0, 0))
 
 
 def _scales_spec(grouped: bool):
@@ -200,7 +287,7 @@ def _pack_pallas(w, layout: PackedLayout, *, interpret: bool):
         payload = pl.pallas_call(
             kernel, grid=grid, in_specs=[src_spec], out_specs=payload_spec,
             out_shape=jax.ShapeDtypeStruct(layout.payload_shape,
-                                           jnp.dtype(layout.dtype)),
+                                           layout.storage_dtype),
             interpret=interpret,
         )(w)
         return payload, None
@@ -210,7 +297,7 @@ def _pack_pallas(w, layout: PackedLayout, *, interpret: bool):
         kernel, grid=grid, in_specs=[src_spec],
         out_specs=[payload_spec, _scales_spec(grouped)],
         out_shape=[
-            jax.ShapeDtypeStruct(layout.payload_shape, jnp.int8),
+            jax.ShapeDtypeStruct(layout.payload_shape, layout.storage_dtype),
             jax.ShapeDtypeStruct(layout.scales_shape, jnp.float32),
         ],
         interpret=interpret,
@@ -234,7 +321,8 @@ def _unpack_pallas(p: PackedOperand, dtype, *, interpret: bool):
             kernel, grid=grid, in_specs=[_payload_spec(layout, grouped)],
             out_specs=out_spec, out_shape=out_shape, interpret=interpret,
         )(p.payload)
-    kernel = functools.partial(_unpack_quant_kernel, dtype=jnp.dtype(dtype))
+    kernel = functools.partial(_unpack_quant_kernel, dtype=jnp.dtype(dtype),
+                               layout=layout)
     return pl.pallas_call(
         kernel, grid=grid,
         in_specs=[_payload_spec(layout, grouped), _scales_spec(grouped)],
@@ -260,17 +348,20 @@ def pack_operand(
     """Pack a (k, n) / (n, k) weight — or a grouped (g, ., .) stack — into
     the (bk, bn)-tiled block layout of ``plan_or_blocks``.
 
-    ``dtype`` selects the payload: a float dtype stores cast tiles;
-    ``"int8"`` stores per-tile symmetrically-quantized tiles plus f32
-    scales.  Defaults to the source dtype.  The result is a
-    :class:`PackedOperand` consumable by ``mp_dot(x, packed)`` /
-    ``mpgemm_pallas(a, packed)``.
+    ``dtype`` selects the payload: a float dtype stores cast tiles; a
+    codec name (``"int8"`` / ``"int4"`` / ``"fp8e4m3"``, aliases like
+    ``"fp8"`` accepted) stores per-tile symmetrically-quantized tiles plus
+    f32 scales — int4 nibble-packs two K-adjacent values per byte.
+    Defaults to the source dtype.  The result is a :class:`PackedOperand`
+    consumable by ``mp_dot(x, packed)`` / ``mpgemm_pallas(a, packed)``.
     """
     bk, bn = _blocks_of(plan_or_blocks)
     grouped = w.ndim == 3
     layout = _layout_for(w, bk, bn, trans_w=trans_w, dtype=dtype,
                          grouped=grouped)
     method = _resolve_method(backend)
+    if not layout.kernel_native:
+        method = "xla"          # emulated fp8 encodes via the jnp table
     if method == "xla":
         payload, scales = pack_reference(w, layout)
     else:
@@ -282,13 +373,16 @@ def pack_operand(
 def unpack_operand(p: PackedOperand, *, dtype=None,
                    backend: Optional[str] = None):
     """Inverse of :func:`pack_operand`: dense (k, n) (grouped: (g, k, n)),
-    transpose already resolved.  int8 payloads dequantize per tile; float
-    payloads round-trip exactly.  ``dtype`` defaults to the payload dtype
-    (int8: the source dtype recorded at pack time)."""
+    transpose already resolved.  Quantized payloads (int8/int4/fp8e4m3)
+    dequantize per tile; float payloads round-trip exactly.  ``dtype``
+    defaults to the payload dtype (quantized codecs: the source dtype
+    recorded at pack time)."""
     layout = p.layout
     if dtype is None:
         dtype = layout.orig_dtype if layout.per_tile_scales else layout.dtype
     method = _resolve_method(backend)
+    if not layout.kernel_native:
+        method = "xla"          # emulated fp8 decodes via the jnp table
     if method == "xla":
         return unpack_reference(p.payload, p.scales, layout, dtype)
     return _unpack_pallas(p, dtype, interpret=(method == "interpret"))

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.blocking import plan_gemm
 from repro.core.policy import get_policy
+from repro.core.codecs import CODECS, canonical_payload_dtype, get_codec
 from repro.core.quantization import QUANT_LEAVES
 from repro.packing.cache import PackedWeightCache, get_pack_cache
 from repro.packing.layout import PackedOperand
@@ -76,6 +77,7 @@ def pack_params(
     backend: Optional[str] = None,
     cache: Optional[PackedWeightCache] = None,
     leaves: Optional[Sequence[str]] = None,
+    pack_format: Optional[str] = None,
 ):
     """Replace eligible GEMM weights in ``params`` with packed operands.
 
@@ -85,9 +87,23 @@ def pack_params(
     which stays free at call time anyway).  Run this on the UNQUANTIZED
     checkpoint: under the int8 policy the pack itself performs (per-tile)
     quantization, strictly finer than ``quantize_params``.
+
+    ``pack_format`` overrides the payload codec on the precision ladder —
+    ``"int8"`` / ``"int4"`` / ``"fp8"`` (any ``core.codecs`` alias works).
+    The default keeps the policy-derived payload dtype (int8 under the
+    quantized policy, the compute dtype otherwise); int4 halves the
+    weight-side HBM traffic against int8 at one extra in-kernel nibble
+    unpack.
     """
     policy = get_policy(policy)
-    dtype = _payload_dtype(policy)
+    if pack_format is not None:
+        dtype = canonical_payload_dtype(pack_format)
+        if get_codec(dtype) is None:
+            raise ValueError(
+                f"pack_format {pack_format!r} is not a quantized payload "
+                f"codec; valid: {sorted(CODECS)} (or their aliases)")
+    else:
+        dtype = _payload_dtype(policy)
     a_dtype = "int8" if policy.quantized else policy.compute_dtype
     eligible = frozenset(leaves) if leaves is not None else QUANT_LEAVES
     cache = cache if cache is not None else get_pack_cache()

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.blocking import GemmPlan, modeled_traffic_bytes
+from repro.core.codecs import dtype_bytes as _codec_bytes, plan_dtype
 from repro.core.constants import DEFAULT_HW, HardwareSpec
 
 # Record kinds: how the metrics were obtained.
@@ -32,8 +33,10 @@ from repro.core.constants import DEFAULT_HW, HardwareSpec
 RECORD_KINDS = ("model", "trace", "wall", "report")
 
 
-def _dtype_bytes(dtype) -> int:
-    return jnp.dtype(dtype).itemsize
+def _dtype_bytes(dtype):
+    """Bytes per element by BITS-per-element, not ``dtype.itemsize`` —
+    sub-byte payload codecs (int4) price fractionally (core/codecs.py)."""
+    return _codec_bytes(dtype)
 
 
 # --- GEMM accounting ---------------------------------------------------------
@@ -68,7 +71,7 @@ def gemm_bytes(
     ``density`` prices a tile-sparse B.
     """
     a_dtype = str(jnp.dtype(a_dtype))
-    b_dtype = str(jnp.dtype(b_dtype or a_dtype))
+    b_dtype = plan_dtype(b_dtype if b_dtype is not None else a_dtype)
     out_dtype = str(jnp.dtype(out_dtype or a_dtype))
     per_group = modeled_traffic_bytes(
         m, n, k, bm, bn,
@@ -103,7 +106,9 @@ def modeled_gemm_us(flops: float, bytes_: float, dtype: str = "bfloat16",
                     hw: HardwareSpec = DEFAULT_HW) -> float:
     """Two-term roofline time in microseconds (same peaks table the
     benchmarks and the tuner's modeled mode use)."""
-    if jnp.dtype(dtype).kind == "i":
+    if dtype == "fp8e4m3":
+        peak = hw.peak_ops_int8      # 8-bit MXU rate (no separate fp8 peak)
+    elif jnp.dtype(dtype).kind == "i":
         peak = hw.peak_ops_int8
     elif str(jnp.dtype(dtype)) in ("bfloat16", "float16"):
         peak = hw.peak_flops_bf16

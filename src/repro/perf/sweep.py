@@ -37,13 +37,20 @@ from repro.core.blocking import (
     enumerate_block_lattice, grouped_plan_from_2d, plan_gemm,
     plan_with_blocks,
 )
+from repro.core.codecs import get_codec
 from repro.core.constants import DEFAULT_HW, HardwareSpec
 from repro.core.gemm_spec import EpilogueSpec
 from repro.core.policy import POLICIES, get_policy
 from repro.tuning.microbench import tune_gemm, tune_grouped_gemm
 from repro.tuning.plan_cache import PlanCache, make_key
 
-LAYOUTS = ("dense", "packed")
+LAYOUTS = ("dense", "packed", "packed_int4", "packed_fp8")
+
+# Packed-layout payload codec overrides (the precision ladder): plain
+# "packed" keeps the policy-derived payload dtype; the codec variants pin
+# it to a core.codecs format (launch/serve.py --pack --pack-format).
+PACKED_CODECS = {"packed": None, "packed_int4": "int4",
+                 "packed_fp8": "fp8e4m3"}
 
 # Policies the serving entrypoint ships (launch/serve.py --policy choices).
 SERVE_POLICIES = ("bf16", "bf16_serve", "int8")
@@ -183,14 +190,32 @@ def _packed_layout_tag(inst: GemmInstance, a_dtype: str, b_dtype: str,
     return f"packB{plan.bk}x{plan.bn}{b_dtype}", (plan.bk, plan.bn)
 
 
+def _layout_dtypes(inst: GemmInstance, policy: str,
+                   layout: str) -> Tuple[str, str, str]:
+    """(a, b, out) dtypes at launch time for a layout variant.  Codec
+    layouts pin the payload dtype; the fp8 payload under the int8 policy
+    streams bf16 activations (core/gemm.py: no int8 x fp8 dot exists)."""
+    a_dtype, b_dtype, out_dtype = _instance_dtypes(inst, policy)
+    codec = PACKED_CODECS.get(layout)
+    if codec is not None:
+        b_dtype = codec
+        if a_dtype == "int8" and codec == "fp8e4m3":
+            a_dtype = "bfloat16"
+    return a_dtype, b_dtype, out_dtype
+
+
 def _combo_key(inst: GemmInstance, policy: str, layout: str,
                hw: HardwareSpec) -> str:
-    a_dtype, b_dtype, out_dtype = _instance_dtypes(inst, policy)
+    a_dtype, b_dtype, out_dtype = _layout_dtypes(inst, policy, layout)
     ep = inst.epilogue()
     layout_tag = ""
     trans_b = inst.trans_b
-    if layout == "packed":
-        layout_tag, _ = _packed_layout_tag(inst, a_dtype, b_dtype, hw)
+    if layout.startswith("packed"):
+        # The payload tiling is derived at PACK time from the policy's
+        # operand dtypes (pack_params._blocks), even when the launch-time
+        # a dtype differs (fp8 payload under int8 policy -> bf16 X).
+        a_pack, _, _ = _instance_dtypes(inst, policy)
+        layout_tag, _ = _packed_layout_tag(inst, a_pack, b_dtype, hw)
         trans_b = False     # transposition is resolved at pack time
     return make_key(
         inst.m, inst.n, inst.k, a_dtype, b_dtype, out_dtype,
@@ -226,7 +251,7 @@ def enumerate_shipped_combos(
             for inst in enumerate_gemm_instances(cfg, m_tokens=m):
                 for policy in policies:
                     for layout in layouts:
-                        if layout == "packed" and (
+                        if layout.startswith("packed") and (
                                 inst.force_policy == "fp32"):
                             continue  # the fp32 router is never packed
                         key = _combo_key(inst, policy, layout, hw)
@@ -246,11 +271,14 @@ def _warm_packed(combo: ShippedCombo, cache: PlanCache,
     back to, persisted so the fallback never runs.  The stored plan's
     (bn, bk) MUST equal the layout's or the read side discards it."""
     inst = combo.instance
-    a_dtype, b_dtype, out_dtype = _instance_dtypes(inst, combo.policy)
+    a_dtype, b_dtype, out_dtype = _layout_dtypes(inst, combo.policy,
+                                                 combo.layout)
     ep = inst.epilogue()
     n_extra = len(ep.extra_operands) if ep is not None else 0
-    acc = "float32" if b_dtype == "int8" else None
-    _, (bk, bn) = _packed_layout_tag(inst, a_dtype, b_dtype, hw)
+    # Every quantized payload codec carries per-tile scales -> f32 acc.
+    acc = "float32" if get_codec(b_dtype) is not None else None
+    a_pack, _, _ = _instance_dtypes(inst, combo.policy)
+    _, (bk, bn) = _packed_layout_tag(inst, a_pack, b_dtype, hw)
     base = plan_gemm(inst.m, inst.n, inst.k, a_dtype, b_dtype, out_dtype,
                      acc, extra_mn_inputs=n_extra, hw=hw)
     bm_axis, _, _ = enumerate_block_lattice(inst.m, inst.n, inst.k,
@@ -269,7 +297,7 @@ def _warm_packed(combo: ShippedCombo, cache: PlanCache,
     if inst.g != 1:
         best = grouped_plan_from_2d(best, inst.g)
     cache.put(combo.key, best, meta={
-        "mode": "modeled", "source": "perf.sweep", "layout": "packed",
+        "mode": "modeled", "source": "perf.sweep", "layout": combo.layout,
         "candidates": len(plans),
     })
 
@@ -293,7 +321,7 @@ def warm_plan_cache(
             skipped += 1
             continue
         inst = combo.instance
-        if combo.layout == "packed":
+        if combo.layout.startswith("packed"):
             _warm_packed(combo, cache, hw)
             warmed += 1
             continue

@@ -33,7 +33,7 @@ from repro.perf.metrics import RECORD_KINDS, WorkloadRecord
 
 SCHEMA_VERSION = 1
 
-AREAS = ("gemm", "packing", "sparse", "serve", "distributed")
+AREAS = ("gemm", "packing", "quant", "sparse", "serve", "distributed")
 
 
 def bench_path(directory, area: str) -> Path:

@@ -21,6 +21,7 @@ BENCH_MODULES = [
     "benchmarks.bench_loads",
     "benchmarks.bench_mixed_precision",
     "benchmarks.bench_packing",
+    "benchmarks.bench_quant",
     "benchmarks.bench_serve",
     "benchmarks.bench_sparse",
     "benchmarks.bench_tiles",
@@ -48,7 +49,7 @@ def test_run_sys_path_idempotent():
 def test_run_areas_cover_registry():
     import benchmarks.run as run
     assert set(run.AREA_RUNNERS) == set(run.AREAS) == \
-        {"gemm", "packing", "sparse", "serve", "distributed"}
+        {"gemm", "packing", "quant", "sparse", "serve", "distributed"}
 
 
 @pytest.fixture(scope="module")
@@ -63,12 +64,14 @@ def emitted(tmp_path_factory):
 
 class TestEmit(object):
     def test_writes_every_area(self, emitted):
-        for area in ("gemm", "packing", "sparse", "serve", "distributed"):
+        for area in ("gemm", "packing", "quant", "sparse", "serve",
+                     "distributed"):
             assert (emitted / f"BENCH_{area}.json").exists()
 
     def test_emitted_files_schema_valid(self, emitted):
         from repro.perf.trajectory import read_bench, validate_bench_dict
-        for area in ("gemm", "packing", "sparse", "serve", "distributed"):
+        for area in ("gemm", "packing", "quant", "sparse", "serve",
+                     "distributed"):
             path = emitted / f"BENCH_{area}.json"
             raw = json.loads(path.read_text())
             assert validate_bench_dict(raw) == []
@@ -151,6 +154,7 @@ def test_committed_baselines_valid():
     from repro.perf.trajectory import read_bench
     base = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "baselines")
-    for area in ("gemm", "packing", "sparse", "serve", "distributed"):
+    for area in ("gemm", "packing", "quant", "sparse", "serve",
+                 "distributed"):
         bf = read_bench(os.path.join(base, f"BENCH_{area}.json"))
         assert bf.area == area and len(bf.records) > 0

@@ -1,0 +1,357 @@
+"""Precision-ladder subsystem: int4 nibble-packed and fp8 e4m3 scaled
+payload codecs, per-token activation quantization riding the epilogue
+registry (quant_in), codec-aware byte pricing, and the serving surface
+(pack_params --pack-format, sweep codec layouts)."""
+import math
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import plan_gemm
+from repro.core.codecs import (
+    FP8_E4M3_MAX, dtype_bytes, emulated_fp8_decode, emulated_fp8_encode,
+    get_codec,
+)
+from repro.core.gemm import mp_dot, mp_dot_grouped
+from repro.packing import pack_operand, pack_params, unpack_operand
+from repro.perf.metrics import gemm_bytes
+
+G, M, K, N = 4, 24, 40, 24
+BLOCKS = (16, 8)
+
+LADDER = ("int8", "int4", "fp8e4m3")
+# Forward tolerance per rung, relative to |x @ w|max: 8-bit payloads round
+# to 1/255 of the tile range, int4 to 1/15, e4m3 to a 3-bit mantissa.
+FWD_TOL = {"int8": 0.03, "int4": 0.2, "fp8e4m3": 0.06}
+
+
+@pytest.fixture
+def ops(rng):
+    x = jnp.asarray(rng.standard_normal((M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    return x, w
+
+
+def _tile_amax(w, bk, bn):
+    """Per-element map of each element's (bk, bn)-tile abs-max."""
+    w = np.asarray(w, np.float64)
+    out = np.zeros_like(w)
+    for i0 in range(0, w.shape[0], bk):
+        for j0 in range(0, w.shape[1], bn):
+            t = w[i0:i0 + bk, j0:j0 + bn]
+            out[i0:i0 + bk, j0:j0 + bn] = np.abs(t).max()
+    return out
+
+
+# --- codec round trips -------------------------------------------------------
+
+@pytest.mark.parametrize("kn", [(K, N), (33, 17), (129, 7)])
+def test_int4_roundtrip_error_bound(rng, kn):
+    """int4 dequant error <= half a quantization step, per tile."""
+    k, n = kn
+    w = jnp.asarray(rng.standard_normal((k, n)), "float32")
+    p = pack_operand(w, BLOCKS, dtype="int4", backend="xla")
+    assert p.layout.bits_per_element == 4
+    assert p.layout.codec.qmax == 7.0
+    u = np.asarray(unpack_operand(p, backend="xla"), np.float64)
+    step = _tile_amax(w, *BLOCKS) / 7.0
+    assert np.all(np.abs(u - np.asarray(w, np.float64)) <= step / 2 + 1e-6)
+
+
+def test_int4_payload_is_nibble_packed(rng):
+    """The stored payload holds TWO elements per byte along K."""
+    w = jnp.asarray(rng.standard_normal((K, N)), "float32")
+    p = pack_operand(w, BLOCKS, dtype="int4", backend="xla")
+    bk, bn = BLOCKS
+    kt, nt = math.ceil(K / bk), math.ceil(N / bn)
+    assert p.payload.shape == (kt, nt, bk // 2, bn)
+    assert p.payload.dtype == jnp.int8
+    assert p.nbytes < math.ceil(K / bk) * bk * math.ceil(N / bn) * bn
+
+
+def test_fp8_roundtrip_and_saturation(rng):
+    """fp8 payloads stay finite under outliers; per-tile scaling maps the
+    tile amax onto the e4m3 range so nothing overflows to NaN/inf."""
+    w = np.asarray(rng.standard_normal((K, N)), np.float32)
+    w[3, 5] = 1e4                      # outlier: must saturate, not NaN
+    w[7, 2] = -1e4
+    p = pack_operand(jnp.asarray(w), BLOCKS, dtype="fp8e4m3", backend="xla")
+    u = np.asarray(unpack_operand(p, backend="xla"), np.float32)
+    assert np.all(np.isfinite(u))
+    assert np.abs(u[3, 5] - 1e4) <= 0.1 * 1e4
+    # non-outlier elements keep a few-percent relative accuracy
+    mask = np.abs(w) < 100
+    err = np.abs(u - w)[mask].max()
+    assert err <= 0.08 * np.abs(w[mask]).max() + 1e-3
+
+
+def test_emulated_fp8_codec_grid():
+    """The emulated e4m3 encode/decode round-trips the finite grid and
+    never emits the NaN code, even at the +-448 extremes."""
+    vals = jnp.asarray([0.0, 2.0 ** -9, 0.017, 1.0, -1.5, 447.9,
+                        FP8_E4M3_MAX, -FP8_E4M3_MAX], jnp.float32)
+    dec = emulated_fp8_decode(emulated_fp8_encode(vals))
+    assert bool(jnp.all(jnp.isfinite(dec)))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(vals),
+                               rtol=0.07, atol=2.0 ** -10)
+    assert float(dec[-2]) == FP8_E4M3_MAX
+    assert float(dec[-1]) == -FP8_E4M3_MAX
+
+
+@pytest.mark.parametrize("codec", LADDER)
+def test_all_zero_tile_guard(codec):
+    """An all-zero weight packs to zero payload/scales and dequantizes to
+    exact zeros — the amax guard must not divide by zero (NaN parity with
+    the int8 rung)."""
+    w = jnp.zeros((K, N), jnp.float32)
+    p = pack_operand(w, BLOCKS, dtype=codec, backend="xla")
+    u = np.asarray(unpack_operand(p, backend="xla"), np.float32)
+    assert np.all(np.isfinite(np.asarray(p.scales, np.float32)))
+    assert np.all(u == 0.0)
+    x = jnp.ones((M, K), jnp.bfloat16)
+    y = np.asarray(mp_dot(x, p, policy="bf16", backend="interpret"),
+                   np.float32)
+    assert np.all(y == 0.0)
+
+
+# --- packed forward parity across the ladder ---------------------------------
+
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+@pytest.mark.parametrize("policy", ["bf16", "int8"])
+@pytest.mark.parametrize("codec", LADDER)
+def test_packed_codec_forward_parity(ops, codec, policy, backend):
+    x, w = ops
+    p = pack_operand(w, BLOCKS, dtype=codec, backend="xla")
+    y = np.asarray(mp_dot(x.astype(jnp.bfloat16), p, policy=policy,
+                          backend=backend), np.float32)
+    ref = np.asarray(x) @ np.asarray(w)
+    tol = FWD_TOL[codec] + (0.03 if policy == "int8" else 0.0)
+    assert np.abs(y - ref).max() <= tol * np.abs(ref).max()
+
+
+@pytest.mark.parametrize("codec", ["int4", "fp8e4m3"])
+def test_grouped_packed_codec_parity(rng, codec):
+    x = jnp.asarray(rng.standard_normal((G, M, K)), "float32")
+    w = jnp.asarray(rng.standard_normal((G, K, N)), "float32")
+    p = pack_operand(w, BLOCKS, dtype=codec, backend="xla")
+    y = np.asarray(mp_dot_grouped(x.astype(jnp.bfloat16), p, policy="bf16",
+                                  backend="interpret"), np.float32)
+    ref = np.einsum("gmk,gkn->gmn", np.asarray(x), np.asarray(w))
+    assert np.abs(y - ref).max() <= FWD_TOL[codec] * np.abs(ref).max()
+
+
+# --- gradients: float0 freeze + straight-through -----------------------------
+
+@pytest.mark.parametrize("codec", ["int4", "fp8e4m3"])
+def test_packed_codec_vjp_frozen_payload(ops, codec):
+    """dx flows; the payload cotangent is symbolically zero (float0) just
+    like the int8 rung — serving weights are frozen."""
+    x, w = ops
+    p = pack_operand(w, BLOCKS, dtype=codec, backend="xla")
+    dx, dp = jax.grad(
+        lambda x, p: jnp.sum(
+            mp_dot(x, p, policy="bf16", backend="interpret") ** 2),
+        (0, 1), allow_int=True)(x.astype(jnp.bfloat16), p)
+    assert bool(jnp.all(jnp.isfinite(dx))) and float(jnp.abs(dx).sum()) > 0
+    assert dp.payload.dtype == jax.dtypes.float0
+    assert float(jnp.abs(dp.scales).sum()) == 0.0
+
+
+def test_int4_ste_grad_contracts_dequantized_weight(ops):
+    """The STE backward contracts dy against the DEQUANTIZED payload —
+    exact parity with the dense twin built by unpack_operand."""
+    x, w = ops
+    p = pack_operand(w, BLOCKS, dtype="int4", backend="xla")
+    wd = unpack_operand(p, backend="xla")       # the dense twin
+    dx1 = jax.grad(lambda x: jnp.sum(
+        mp_dot(x, p, policy="fp32", backend="interpret")))(x)
+    dx0 = jax.grad(lambda x: jnp.sum(
+        mp_dot(x, wd, policy="fp32", backend="interpret")))(x)
+    np.testing.assert_allclose(np.asarray(dx1), np.asarray(dx0),
+                               atol=1e-4 * max(1.0,
+                                               float(jnp.abs(dx0).max())))
+
+
+# --- activation quantization (quant_in epilogues) ----------------------------
+
+def _row_quant_ref(x, w):
+    """Per-row activation quantization; the dense path ALSO per-tensor
+    quantizes the float weight so the fused dot runs int8 x int8."""
+    xf = np.asarray(x, np.float32)
+    rs = np.maximum(np.abs(xf).max(axis=-1, keepdims=True), 1e-8) / 127.0
+    xq = np.clip(np.round(xf / rs), -127, 127)
+    wf = np.asarray(w, np.float32)
+    sw = max(np.abs(wf).max(), 1e-8) / 127.0
+    wq = np.clip(np.round(wf / sw), -127, 127)
+    return (xq @ wq) * rs * sw
+
+
+def test_quant_in_forward_matches_row_quant_reference(ops):
+    x, w = ops
+    y = np.asarray(mp_dot(x, w, policy="fp32", backend="interpret",
+                          quant_in=True), np.float32)
+    np.testing.assert_allclose(y, _row_quant_ref(x, w), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_quant_in_with_activation_and_residual(ops, rng):
+    x, w = ops
+    res = jnp.asarray(rng.standard_normal((M, N)), "float32")
+    y = np.asarray(mp_dot(x, w, policy="fp32", backend="interpret",
+                          quant_in=True, activation="relu", residual=res),
+                   np.float32)
+    ref = np.maximum(_row_quant_ref(x, w), 0.0) + np.asarray(res)
+    np.testing.assert_allclose(y, ref, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("codec", LADDER)
+def test_quant_in_over_packed_codecs(ops, codec):
+    """The fused pre-stage composes with every payload rung."""
+    x, w = ops
+    p = pack_operand(w, BLOCKS, dtype=codec, backend="xla")
+    y = np.asarray(mp_dot(x, p, policy="bf16", backend="interpret",
+                          quant_in=True), np.float32)
+    ref = np.asarray(x) @ np.asarray(w)
+    tol = FWD_TOL[codec] + 0.02         # + the per-row activation rounding
+    assert np.abs(y - ref).max() <= tol * np.abs(ref).max()
+
+
+def test_quant_in_grad_is_straight_through(ops):
+    """No activation: the quantizer backward is the identity, so dx equals
+    the unquantized GEMM's gradient exactly (contraction against w)."""
+    x, w = ops
+    dx = jax.grad(lambda x: jnp.sum(
+        mp_dot(x, w, policy="fp32", backend="interpret", quant_in=True)))(x)
+    ref = np.ones((M, N), np.float32) @ np.asarray(w).T
+    np.testing.assert_allclose(np.asarray(dx), ref, rtol=1e-5, atol=1e-4)
+
+
+def test_quant_in_rejects_bias(ops):
+    x, w = ops
+    with pytest.raises(ValueError):
+        mp_dot(x, w, jnp.zeros((N,), jnp.float32), policy="fp32",
+               backend="interpret", quant_in=True)
+
+
+def _count_pallas(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "pallas" in eqn.primitive.name:
+            n += 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            n += _count_pallas(sub)
+    return n
+
+
+@pytest.mark.parametrize("codec", [None, "int4"])
+def test_quant_in_is_single_launch(ops, codec):
+    """quantize -> GEMM -> dequant(+act) is ONE Pallas launch, dense and
+    nibble-packed alike (the int4 decode rides the same kernel)."""
+    x, w = ops
+    b = w if codec is None else pack_operand(w, BLOCKS, dtype=codec,
+                                             backend="xla")
+    jaxpr = jax.make_jaxpr(
+        lambda x, b: mp_dot(x, b, policy="bf16", backend="interpret",
+                            quant_in=True, activation="silu"))(
+        x.astype(jnp.bfloat16), b).jaxpr
+    assert _count_pallas(jaxpr) == 1
+
+
+# --- byte pricing ------------------------------------------------------------
+
+# Paper Table III rows the bench gates on: DeepSeek decode / DeepSeek
+# prefill / LLaMA decode.
+PRICING_WORKLOADS = [(1, 64, 2112, 7168), (13, 4096, 2112, 7168),
+                     (19, 4096, 256, 4096)]
+
+
+@pytest.mark.parametrize("wid,m,n,k", PRICING_WORKLOADS)
+def test_gemm_bytes_prices_sub_byte_payloads(wid, m, n, k):
+    """Hand-computed K-innermost revisiting traffic: the int4 B term costs
+    0.5 bytes/element, everything else is unchanged."""
+    bm, bn = 128, 256
+    a_b, out_b = 2.0, 2.0               # bf16 activations and output
+    col, row = math.ceil(n / bn), math.ceil(m / bm)
+
+    def expected(b_bytes):
+        return int(m * k * a_b * col + k * n * b_bytes * row
+                   + m * n * out_b)
+
+    for codec, b_bytes in (("int8", 1.0), ("int4", 0.5), ("fp8e4m3", 1.0)):
+        got = gemm_bytes(m, n, k, bm, bn, a_dtype="bfloat16",
+                         b_dtype=codec, out_dtype="bfloat16")
+        assert got == expected(b_bytes), (wid, codec)
+    assert dtype_bytes("int4") == 0.5
+
+
+@pytest.mark.parametrize("wid,m,n,k", PRICING_WORKLOADS)
+def test_int4_weight_term_halves(wid, m, n, k):
+    """The acceptance ratio: int4's per-call weight stream is exactly half
+    int8's payload term (<= 0.55x with scale overhead) on the gated
+    workloads."""
+    from benchmarks.bench_quant import weight_stream_bytes
+    plan8 = plan_gemm(m, n, k, "bfloat16", "int8")
+    plan4 = plan_gemm(m, n, k, "bfloat16", "int4")
+    wb8 = weight_stream_bytes(n, k, "int8", plan8.bk, plan8.bn)
+    wb4 = weight_stream_bytes(n, k, "int4", plan4.bk, plan4.bn)
+    assert wb4 <= 0.55 * wb8
+
+
+# --- serving surface ---------------------------------------------------------
+
+@pytest.mark.parametrize("fmt,payload_dtype,bits", [
+    ("int4", "int8", 4), ("fp8", None, 8), ("int8", "int8", 8)])
+def test_pack_params_pack_format(rng, fmt, payload_dtype, bits):
+    params = {"head": jnp.asarray(rng.standard_normal((K, N)), "float32")}
+    packed = pack_params(params, policy="bf16", m_hint=M, cache=None,
+                         pack_format=fmt)
+    leaf = packed["head"]
+    assert leaf.layout.bits_per_element == bits
+    if payload_dtype is not None:
+        assert str(leaf.payload.dtype) == payload_dtype
+    assert leaf.layout.per_tile_scales
+    u = np.asarray(unpack_operand(leaf, backend="xla"), np.float32)
+    ref = np.asarray(params["head"])
+    assert np.abs(u - ref).max() <= {4: 0.15, 8: 0.08}[bits] \
+        * np.abs(ref).max()
+
+
+def test_pack_params_rejects_unknown_format(rng):
+    params = {"head": jnp.asarray(rng.standard_normal((K, N)), "float32")}
+    with pytest.raises(ValueError, match="pack_format"):
+        pack_params(params, policy="bf16", cache=None,
+                    pack_format="bfloat16")
+
+
+def test_sweep_enumerates_and_warms_codec_layouts():
+    from repro.perf.sweep import (
+        LAYOUTS, enumerate_shipped_combos, verify_warm, warm_plan_cache,
+    )
+    from repro.tuning.plan_cache import PlanCache
+    assert "packed_int4" in LAYOUTS and "packed_fp8" in LAYOUTS
+    combos = enumerate_shipped_combos(["granite-moe-1b-a400m"],
+                                      m_tokens=(32,), smoke=True)
+    by_layout = {lay: [c for c in combos if c.layout == lay]
+                 for lay in LAYOUTS}
+    assert by_layout["packed_int4"] and by_layout["packed_fp8"]
+    assert all("b=int4" in c.key and "int4" in c.key.split("lay=")[1]
+               for c in by_layout["packed_int4"])
+    assert all("b=fp8e4m3" in c.key for c in by_layout["packed_fp8"])
+    with tempfile.TemporaryDirectory() as d:
+        cache = PlanCache(os.path.join(d, "plans.json"))
+        warm_plan_cache(combos, cache, mode="modeled")
+        assert verify_warm(combos, cache) == []
+
+
+def test_codec_registry_shape():
+    for name in LADDER:
+        c = get_codec(name)
+        assert c is not None and c.name == name
+        assert c.bits in (4, 8)
+    assert get_codec("bfloat16") is None
+    assert get_codec("fp8") is not None          # alias resolves
