@@ -160,36 +160,18 @@ def run(rows=None):
     return rows
 
 
-def _collect_ops(jaxpr, out):
-    import jax
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name in ("dot_general", "pallas_call", "ppermute",
-                                  "psum", "all_to_all"):
-            out.append(eqn.primitive.name)
-        for sub in jax.core.jaxprs_in_params(eqn.params):
-            _collect_ops(sub, out)
-    return out
-
-
-def _counts(ops) -> dict:
-    dots = [o for o in ops if o in ("dot_general", "pallas_call")]
-    seq = "".join("P" if o == "ppermute" else "D"
-                  for o in ops if o != "psum" and o != "all_to_all")
-    return {"dots": len(dots),
-            "ppermutes": ops.count("ppermute"),
-            "psums": ops.count("psum"),
-            "all_to_alls": ops.count("all_to_all"),
-            # every permute separated from the next by a chunk GEMM
-            "interleaved": int("PP" not in seq and "P" in seq)}
-
-
 def _trace_counts() -> dict:
-    """Op counts of each sharded-GEMM schedule (requires >= 4 devices)."""
+    """Op counts of each sharded-GEMM schedule (requires >= 4 devices).
+
+    ``obs.audit.schedule_counts`` owns the walk: ordered GEMM/collective
+    occurrences plus the ring-interleave summary (every ppermute separated
+    from the next by a chunk GEMM)."""
     import jax
     import jax.numpy as jnp
 
     from repro.distributed import mp_dot_grouped_sharded, mp_dot_sharded
     from repro.launch.mesh import make_tp_mesh
+    from repro.obs import audit
 
     p = _TRACE_P
     mesh = make_tp_mesh(p)
@@ -201,19 +183,17 @@ def _trace_counts() -> dict:
             ("ring_row", "row", "ring"),
             ("blocking_row", "row", "blocking"),
             ("ring_gather", "gather", "ring")):
-        jaxpr = jax.make_jaxpr(
+        out[variant] = audit.schedule_counts(audit.trace(
             lambda xx, bb, _p=partition, _o=overlap: mp_dot_sharded(
                 xx, bb, mesh=mesh, partition=_p, overlap=_o,
-                policy="fp32", backend="xla"))(x, b).jaxpr
-        out[variant] = _counts(_collect_ops(jaxpr, []))
+                policy="fp32", backend="xla"), x, b))
 
     g, gm, gk, gn = _TRACE_GMNK
     xg = jax.ShapeDtypeStruct((g, gm, gk), jnp.float32)
     bg = jax.ShapeDtypeStruct((g, gk, gn), jnp.float32)
-    jaxpr = jax.make_jaxpr(
+    out["expert_grouped"] = audit.schedule_counts(audit.trace(
         lambda xx, bb: mp_dot_grouped_sharded(
-            xx, bb, mesh=mesh, policy="fp32", backend="xla"))(xg, bg).jaxpr
-    out["expert_grouped"] = _counts(_collect_ops(jaxpr, []))
+            xx, bb, mesh=mesh, policy="fp32", backend="xla"), xg, bg))
     return out
 
 

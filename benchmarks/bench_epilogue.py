@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, modeled_time_s, record, wall_time_us
 from repro.core import config as cfg
 from repro.models.layers import init_swiglu, swiglu_mlp
+from repro.obs import audit
 
 # (name, G groups or None, M tokens, d_model, d_ff) — dense SwiGLU shapes
 # plus the grouped expert-batched form (M ≈ capacity tokens per expert at a
@@ -71,21 +72,12 @@ def _gating_bytes(g, m, f, itemsize: int = 2):
     return 4 * elems * itemsize, 2 * elems * itemsize
 
 
-def _count_eqns(jaxpr, counts):
-    """Primitive counts at the XLA level: recurse into every call sub-jaxpr
-    EXCEPT pallas_call bodies (their internal ops are fused in-kernel —
-    that is the point)."""
-    for eqn in jaxpr.eqns:
-        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for sub in jax.core.jaxprs_in_params(eqn.params):
-            _count_eqns(sub, counts)
-    return counts
-
-
 def trace_counts(fused: bool, m: int = 32, d: int = 64, f: int = 128):
-    """(pallas launches, stand-alone gating ops) of a jitted SwiGLU MLP."""
+    """(pallas launches, stand-alone gating ops) of a jitted SwiGLU MLP.
+
+    Primitive counts come from ``obs.audit.primitive_counts``, which skips
+    pallas_call bodies (their internal ops are fused in-kernel — that is
+    the point)."""
     params = init_swiglu(jax.random.PRNGKey(0), d, f)
     x = jax.ShapeDtypeStruct((m, d), jnp.bfloat16)
 
@@ -93,7 +85,7 @@ def trace_counts(fused: bool, m: int = 32, d: int = 64, f: int = 128):
         with cfg.gemm_backend("interpret"), cfg.fused_epilogue(fused):
             return swiglu_mlp(params, x, "bf16")
 
-    counts = _count_eqns(jax.make_jaxpr(mlp)(params, x).jaxpr, {})
+    counts = audit.primitive_counts(audit.trace(mlp, params, x))
     launches = counts.get("pallas_call", 0)
     # The gating pass at the XLA level: silu's sigmoid + the h_gate·up
     # product.  Fused, both live inside the gate GEMM's kernel body.

@@ -1,0 +1,294 @@
+"""Observability transparency gate: metrics on == metrics off, bytewise.
+
+The obs subsystem (``repro.obs``) rides the hot paths this suite grades —
+plan resolution, packing, kernel launch, serving — so the one property it
+must prove continuously is that it is a PURE OBSERVER.  Three measurement
+families (area ``obs``, -> ``BENCH_obs.json``):
+
+  * ``obs_gate_transparency`` — the graded payload (planner roofline terms
+    for the smoke workloads + trace-time launch facts of dense / packed /
+    sparse interpret GEMMs) is computed twice, once with a fresh registry
+    and tracer installed and once with both disabled.  The two payloads'
+    sorted-key JSON dumps must be BYTE-IDENTICAL, and every audit launch
+    count must match — instrumentation may never perturb a modeled metric
+    or add/remove a launch.
+  * ``obs_census_*``          — deterministic counter facts from the same
+    enabled run: the plan-cache miss -> analytic-fallback -> memo-hit
+    sequence, per-spec ``gemm_launches_total`` series, and the span names
+    the tracer captured.  These pin the *coverage* of the instrumentation
+    (a deleted counter_inc shows up here as a baseline diff).
+  * ``obs_wall_inc``          — counter_inc hot-path cost (ns/op, enabled
+    vs disabled) — recorded as noisy, never gated.
+
+``--smoke`` asserts the transparency gate and the census facts hard and
+exits nonzero on any failure (the CI gate).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PAPER_WORKLOADS, emit, record
+from repro import obs
+from repro.obs import audit
+from repro.obs.trace import Tracer, set_tracer
+
+# Planner terms from the quant-smoke workload rows (DeepSeek decode /
+# DeepSeek prefill / LLaMA decode) — same ids bench_quant pins.
+GATE_WORKLOAD_IDS = (1, 13, 19)
+
+# Small traced shapes: big enough for a real (multi-step) grid, small
+# enough that interpret-mode tracing stays sub-second.
+TRACE_M, TRACE_N, TRACE_K = 32, 256, 256
+
+
+def _modeled_payload() -> dict:
+    """Every graded number in one dict: planner terms + launch facts.
+
+    Pure function of the code under test — MUST NOT depend on whether the
+    metrics registry or tracer is installed.  Keys sort deterministically,
+    all values are ints, so ``json.dumps(..., sort_keys=True)`` is a
+    byte-stable fingerprint.
+    """
+    from repro.core.blocking import plan_gemm
+    from repro.core.gemm import mp_dot
+    from repro.packing import pack_operand
+    from repro.sparse import sparsify_magnitude
+
+    out = {"plans": {}, "audit": {}}
+    for wid, m, n, k in PAPER_WORKLOADS:
+        if wid not in GATE_WORKLOAD_IDS:
+            continue
+        plan = plan_gemm(m, n, k, "bfloat16")
+        out["plans"][f"w{wid:02d}"] = dict(
+            hbm_bytes=int(plan.hbm_bytes), flops=int(plan.flops),
+            bm=int(plan.bm), bn=int(plan.bn), bk=int(plan.bk))
+
+    m, n, k = TRACE_M, TRACE_N, TRACE_K
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    x = jax.ShapeDtypeStruct((m, k), jnp.bfloat16)
+
+    jx = audit.trace(
+        lambda x, w: mp_dot(x, w, policy="bf16", backend="interpret"), x, w)
+    out["audit"]["dense"] = dict(
+        launches=audit.count_pallas(jx),
+        grid=[int(g) for g in audit.first_pallas_grid(jx)])
+
+    plan = plan_gemm(m, n, k, "bfloat16", "int4")
+    packed = pack_operand(w, plan, dtype="int4", backend="xla")
+    jx = audit.trace(
+        lambda x, p: mp_dot(x, p, policy="bf16", backend="interpret"),
+        x, packed)
+    out["audit"]["int4"] = dict(
+        launches=audit.count_pallas(jx),
+        dequants=audit.weight_sized_intermediates(
+            jx, k * n, prims=audit.DEQUANT_PRIMS,
+            skip_pallas_bodies=True)[0])
+
+    sp = sparsify_magnitude(w, (128, 128), density=0.5, dtype="bfloat16")
+    jx = audit.trace(
+        lambda x, payload: mp_dot(
+            x, type(sp)(payload, sp.scales, sp.layout),
+            policy="bf16", backend="interpret"),
+        x, jax.ShapeDtypeStruct(sp.payload.shape, sp.payload.dtype))
+    out["audit"]["sparse"] = dict(
+        launches=audit.count_pallas(jx),
+        schedule=int(audit.first_pallas_grid(jx)[-1]))
+    return out
+
+
+def _plan_cache_census() -> dict:
+    """Deterministic miss -> fallback -> memo-hit counter sequence."""
+    from repro.core.blocking import plan_gemm
+    from repro.tuning.plan_cache import (
+        PlanCache, clear_analytic_memo, lookup_plan, make_key,
+        note_analytic_fallback, set_plan_cache,
+    )
+
+    # Own registry + cache + memo: the census counts exactly this
+    # sequence, not whatever the payload run already looked up.
+    reg = obs.MetricsRegistry()
+    prev_reg = obs.set_registry(reg)
+    prev_cache = set_plan_cache(PlanCache(None))
+    try:
+        m, n, k = TRACE_M, TRACE_N, TRACE_K
+        assert lookup_plan(m, n, k, "bfloat16",
+                           analytic_memo=True) is None  # miss
+        note_analytic_fallback(
+            make_key(m, n, k, "bfloat16"), plan_gemm(m, n, k, "bfloat16"))
+        hits = sum(
+            lookup_plan(m, n, k, "bfloat16", analytic_memo=True) is not None
+            for _ in range(2))
+    finally:
+        set_plan_cache(prev_cache)
+        clear_analytic_memo()
+        obs.set_registry(prev_reg)
+
+    snap = reg.snapshot()["counters"]
+    return dict(
+        memo_hits=int(hits),
+        lookups_miss=int(snap.get(
+            'plan_cache_lookups_total{namespace="default",result="miss"}',
+            0)),
+        lookups_hit_analytic=int(snap.get(
+            'plan_cache_lookups_total'
+            '{namespace="default",result="hit_analytic"}', 0)),
+        fallbacks=int(snap.get(
+            'plan_cache_analytic_fallback_total{namespace="default"}', 0)),
+    )
+
+
+def run_gate(assert_gate: bool = True) -> dict:
+    """The transparency gate + the enabled-run census, in one pass."""
+    from repro.tuning.plan_cache import clear_analytic_memo
+
+    # Pass 1: obs fully ON (fresh registry so counts are absolute, fresh
+    # tracer so the span census is exactly this payload's spans).
+    tracer = Tracer()
+    prev_reg = obs.set_registry(obs.MetricsRegistry())
+    prev_tr = set_tracer(tracer)
+    try:
+        clear_analytic_memo()
+        payload_on = _modeled_payload()
+        census = _plan_cache_census()
+        launch_series = [
+            key for key in obs.get_registry().snapshot()["counters"]
+            if key.startswith("gemm_launches_total")]
+        span_names = sorted({ev["name"] for ev in tracer.events()
+                             if ev.get("ph") == "X"})
+    finally:
+        set_tracer(prev_tr)
+        obs.set_registry(prev_reg)
+
+    # Pass 2: obs fully OFF — identical inputs, no observer.
+    prev_reg = obs.set_registry(None)
+    prev_tr = set_tracer(None)
+    try:
+        clear_analytic_memo()
+        payload_off = _modeled_payload()
+    finally:
+        set_tracer(prev_tr)
+        obs.set_registry(prev_reg)
+        clear_analytic_memo()
+
+    dump_on = json.dumps(payload_on, sort_keys=True).encode()
+    dump_off = json.dumps(payload_off, sort_keys=True).encode()
+    identical = dump_on == dump_off
+    launches_match = all(
+        payload_on["audit"][kind]["launches"]
+        == payload_off["audit"][kind]["launches"]
+        for kind in payload_on["audit"])
+
+    emit("obs_gate_transparency", 0.0,
+         f"identical={int(identical)};payload_bytes={len(dump_on)};"
+         f"launch_series={len(launch_series)};spans={len(span_names)}")
+    record("obs_gate_transparency", "obs", kind="trace",
+           workload={"m": TRACE_M, "n": TRACE_N, "k": TRACE_K,
+                     "plan_workloads": list(GATE_WORKLOAD_IDS)},
+           metrics={
+               "payload_identical": float(identical),
+               "launches_match": float(launches_match),
+               "dense_launches":
+                   float(payload_on["audit"]["dense"]["launches"]),
+               "int4_launches":
+                   float(payload_on["audit"]["int4"]["launches"]),
+               "int4_dequants":
+                   float(payload_on["audit"]["int4"]["dequants"]),
+               "sparse_launches":
+                   float(payload_on["audit"]["sparse"]["launches"]),
+           })
+    record("obs_census_plan_cache", "obs", kind="trace",
+           workload={"m": TRACE_M, "n": TRACE_N, "k": TRACE_K},
+           metrics={k: float(v) for k, v in census.items()})
+    record("obs_census_instrumentation", "obs", kind="trace",
+           workload={"m": TRACE_M, "n": TRACE_N, "k": TRACE_K},
+           metrics={"gemm_launch_series": float(len(launch_series)),
+                    "span_names": float(len(span_names))})
+    emit("obs_census_plan_cache", 0.0,
+         ";".join(f"{k}={v}" for k, v in sorted(census.items())))
+    emit("obs_census_spans", 0.0, "names=" + "|".join(span_names))
+
+    if assert_gate:
+        if not identical:
+            raise SystemExit(
+                "obs transparency gate FAILED: modeled payload differs "
+                "with the registry/tracer installed — instrumentation is "
+                "perturbing graded metrics "
+                f"(on={len(dump_on)}B, off={len(dump_off)}B)")
+        if not launches_match:
+            raise SystemExit(
+                "obs transparency gate FAILED: audit launch counts change "
+                "when instrumentation is enabled")
+        if census != dict(memo_hits=2, lookups_miss=1,
+                          lookups_hit_analytic=2, fallbacks=1):
+            raise SystemExit(
+                f"plan-cache census drifted: {census} — the "
+                "miss/fallback/memo-hit counters no longer track lookups")
+        for want in ("gemm.plan", "gemm.launch", "pack"):
+            if want not in span_names:
+                raise SystemExit(
+                    f"span census missing {want!r} (saw {span_names}) — "
+                    "an obs.span() site was removed from the hot path")
+        if not launch_series:
+            raise SystemExit("no gemm_launches_total series recorded — "
+                             "the launch counter left the kernel path")
+    return dict(identical=identical, census=census,
+                launch_series=launch_series, span_names=span_names)
+
+
+def run_wall(iters: int = 20000) -> dict:
+    """counter_inc cost per call, enabled vs disabled (noisy)."""
+    out = {}
+    for state, reg in (("enabled", obs.MetricsRegistry()),
+                       ("disabled", None)):
+        prev = obs.set_registry(reg)
+        try:
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                obs.counter_inc("obs_bench_ticks_total", kind="wall")
+            ns = (time.perf_counter() - t0) / iters * 1e9
+        finally:
+            obs.set_registry(prev)
+        out[state] = ns
+        emit(f"obs_wall_inc_{state}", ns / 1e3, f"ns_per_inc={ns:.0f}")
+    record("obs_wall_inc", "obs", kind="wall",
+           workload={"iters": iters},
+           metrics={},
+           noisy={"ns_per_inc_enabled": out["enabled"],
+                  "ns_per_inc_disabled": out["disabled"]})
+    return out
+
+
+def run(smoke: bool = False):
+    """Harness entry: the gate (always asserted — it is exact) + wall."""
+    res = run_gate(assert_gate=True)
+    if not smoke:
+        run_wall()
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="hard transparency + census gates, no wall "
+                         "timings (CI gate)")
+    args = ap.parse_args()
+    res = run_gate(assert_gate=True)
+    if not args.smoke:
+        run_wall()
+    print(f"obs gate OK: payload byte-identical with registry+tracer "
+          f"on/off; census {res['census']}; spans {res['span_names']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,35 +47,8 @@ from benchmarks.common import (
 )
 from repro.core.blocking import plan_gemm
 from repro.core.gemm import mp_dot, mp_dot_grouped
+from repro.obs.audit import prep_bytes
 from repro.packing import pack_operand
-
-_PREP_PRIMS = {
-    "transpose", "convert_element_type", "pad", "round", "clamp", "abs",
-    "mul", "div", "max", "min", "reduce_max", "integer_pow", "sign",
-    "optimization_barrier", "stop_gradient",
-}
-
-
-def _count_weight_sized(jaxpr, weight_elems: int) -> int:
-    """Bytes of weight-sized intermediates produced by layout/prep
-    primitives anywhere in the jaxpr (recursing into sub-jaxprs).  A
-    weight-sized transpose/convert/quantize output IS the per-call prep
-    pass packing removes; activation-side ops have different extents."""
-    total = 0
-    for eqn in jaxpr.eqns:
-        for sub in jax.core.jaxprs_in_params(eqn.params):
-            total += _count_weight_sized(sub, weight_elems)
-        if eqn.primitive.name not in _PREP_PRIMS:
-            continue
-        for var in eqn.outvars:
-            aval = var.aval
-            if getattr(aval, "size", 0) == weight_elems:
-                total += aval.size * aval.dtype.itemsize
-    return total
-
-
-def prep_bytes(fn, *args, weight_elems: int) -> int:
-    return _count_weight_sized(jax.make_jaxpr(fn)(*args).jaxpr, weight_elems)
 
 
 def _trace_m(m: int, n: int, k: int) -> int:

@@ -39,6 +39,7 @@ from benchmarks.common import PAPER_WORKLOADS, emit, record
 from repro.core.blocking import plan_gemm
 from repro.core.codecs import get_codec
 from repro.core.gemm import mp_dot
+from repro.obs import audit
 from repro.packing import pack_operand
 from repro.perf.metrics import gemm_bytes
 
@@ -103,39 +104,17 @@ def run(smoke: bool = False, rows=None):
     return rows
 
 
-def _count_pallas(jaxpr) -> int:
-    """Pallas launches anywhere in a jaxpr (recursing into sub-jaxprs)."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if "pallas" in eqn.primitive.name:
-            n += 1
-        for sub in jax.core.jaxprs_in_params(eqn.params):
-            n += _count_pallas(sub)
-    return n
-
-
-_DEQUANT_PRIMS = {"convert_element_type", "mul", "div"}
-
-
 def _dequant_materializations(jaxpr, weight_elems: int) -> int:
     """Weight-sized dequant intermediates OUTSIDE Pallas kernels.
 
     A separate dequant launch shows up as a (k*n)-element convert/scale
     output in the surrounding jaxpr; the fused path keeps the nibble
-    decode inside the kernel body, which this walk deliberately skips.
+    decode inside the kernel body, which the audit walk deliberately
+    skips (``skip_pallas_bodies=True``).
     """
-    n = 0
-    for eqn in jaxpr.eqns:
-        if "pallas" in eqn.primitive.name:
-            continue
-        for sub in jax.core.jaxprs_in_params(eqn.params):
-            n += _dequant_materializations(sub, weight_elems)
-        if eqn.primitive.name not in _DEQUANT_PRIMS:
-            continue
-        for var in eqn.outvars:
-            if getattr(var.aval, "size", 0) == weight_elems:
-                n += 1
-    return n
+    return audit.weight_sized_intermediates(
+        jaxpr, weight_elems, prims=audit.DEQUANT_PRIMS,
+        skip_pallas_bodies=True)[0]
 
 
 def run_trace_gate(assert_gate: bool = True):
@@ -156,12 +135,12 @@ def run_trace_gate(assert_gate: bool = True):
             return mp_dot(x, p, policy="bf16", backend="interpret",
                           quant_in=True, activation="silu")
 
-        jx = jax.make_jaxpr(plain_fn)(x, packed).jaxpr
+        jx = audit.trace(plain_fn, x, packed)
         results[codec] = dict(
-            launches=_count_pallas(jx),
+            launches=audit.count_pallas(jx),
             dequants=_dequant_materializations(jx, k * n),
-            launches_quant_in=_count_pallas(
-                jax.make_jaxpr(fused_fn)(x, packed).jaxpr),
+            launches_quant_in=audit.count_pallas(
+                audit.trace(fused_fn, x, packed)),
         )
         emit(f"quant_trace_gate_{codec}", 0.0,
              f"pallas_launches={results[codec]['launches']};"

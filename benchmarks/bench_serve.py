@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, record
+from repro.obs import audit
 from repro.serve.kv_cache import cdiv
 
 # (mix name, max_batch, max_len, page_size, request lengths at peak) —
@@ -105,22 +106,8 @@ def _traced_page_visits(b, hkv, g, tq, d, ps, width) -> tuple:
         jax.ShapeDtypeStruct((b,), jnp.int32),
         jax.ShapeDtypeStruct((b,), jnp.int32),
     )
-    jaxpr = jax.make_jaxpr(
-        lambda *a: paged_flash_attention(*a, interpret=True))(*args).jaxpr
-
-    def find(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                return eqn.params["grid_mapping"].grid
-            for sub in jax.core.jaxprs_in_params(eqn.params):
-                grid = find(sub)
-                if grid is not None:
-                    return grid
-        return None
-
-    grid = find(jaxpr)
-    assert grid is not None, "paged launch did not trace to a pallas_call"
-    return grid
+    return audit.first_pallas_grid(audit.trace(
+        lambda *a: paged_flash_attention(*a, interpret=True), *args))
 
 
 def run_trace_gate(assert_gate: bool = False):

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, modeled_time_s, record, wall_time_us
 from repro.core.blocking import plan_gemm
 from repro.core.gemm import mp_dot
+from repro.obs import audit
 from repro.kernels.mpgemm import mpgemm_pallas
 from repro.sparse import TileSparseOperand, sparsify_magnitude
 
@@ -92,22 +93,8 @@ def _traced_tile_visits(x_shape, sp: TileSparseOperand) -> tuple:
             payload, None if sp.scales is None else sp.scales, sp.layout)
         return mp_dot(x, op, policy="bf16", backend="interpret")
 
-    jaxpr = jax.make_jaxpr(f)(
-        x, jax.ShapeDtypeStruct(sp.payload.shape, sp.payload.dtype)).jaxpr
-
-    def find(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                return eqn.params["grid_mapping"].grid
-            for sub in jax.core.jaxprs_in_params(eqn.params):
-                g = find(sub)
-                if g is not None:
-                    return g
-        return None
-
-    grid = find(jaxpr)
-    assert grid is not None, "sparse launch did not trace to a pallas_call"
-    return grid
+    return audit.first_pallas_grid(audit.trace(
+        f, x, jax.ShapeDtypeStruct(sp.payload.shape, sp.payload.dtype)))
 
 
 def run_trace_gate(assert_gate: bool = False, m_tokens: int = 128):

@@ -12,7 +12,7 @@ Beyond the CSV, the harness owns the perf-trajectory artifacts
   --diff DIR        compare the emitted files against the baselines in DIR
                     (benchmarks/baselines in CI); exit 1 on any regression
   --only AREA [...] run only the named areas (gemm / packing / quant /
-                    sparse / serve / distributed)
+                    sparse / serve / distributed / obs)
   --smoke           reduced workloads (small shapes, no wall clocks) — the
                     configuration the committed baselines are built from,
                     so ``--smoke --emit --diff benchmarks/baselines`` is
@@ -30,7 +30,8 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-AREAS = ("gemm", "packing", "quant", "sparse", "serve", "distributed")
+AREAS = ("gemm", "packing", "quant", "sparse", "serve", "distributed",
+         "obs")
 
 
 def run_gemm(smoke: bool = False) -> None:
@@ -105,6 +106,14 @@ def run_distributed(smoke: bool = False) -> None:
     bench_distributed.run_trace_gate(assert_gate=smoke)
 
 
+def run_obs(smoke: bool = False) -> None:
+    from benchmarks import bench_obs
+    # The transparency gate is exact (modeled payload bytewise-identical
+    # with the registry/tracer on vs off), so it is always asserted; the
+    # counter_inc wall timing is emit-noise, skipped under --smoke.
+    bench_obs.run(smoke=smoke)
+
+
 AREA_RUNNERS = {
     "gemm": run_gemm,
     "packing": run_packing,
@@ -112,6 +121,7 @@ AREA_RUNNERS = {
     "sparse": run_sparse,
     "serve": run_serve,
     "distributed": run_distributed,
+    "obs": run_obs,
 }
 
 

@@ -30,13 +30,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import config as cfg
 from repro.core.gemm_spec import (
     EpilogueSpec, GemmSpec, apply_epilogue, epilogue_bwd, epilogue_needs_pre,
@@ -69,6 +69,50 @@ def _xla_epilogue(epilogue, acc, bias, scale, extras, grouped):
                 else bias.reshape(1, -1))
     return apply_epilogue(epilogue, acc, bias=bias, scale=scale,
                           extras=extras)
+
+
+def _note_xla_dispatch(x, w, spec, epilogue, ep_def, out_dtype):
+    """Launch census + modeled-plan telemetry for GEMMs dispatched to XLA.
+
+    Mirrors the kernel path's accounting in ``kernels/mpgemm.py`` so the
+    per-spec launch counters and the plan-cache hit/miss series do not go
+    dark on non-kernel backends (CPU serving, the explicit ``backend="xla"``
+    A/B baseline).  XLA picks its own tiling, so the resolved plan is used
+    for MODELING only (span bytes/FLOPs) and never steers the dispatch.
+    Trace-time host code — a cached jit executable never re-enters it.
+    """
+    if not (obs.metrics_enabled() or obs.tracing_enabled()):
+        return
+    from repro.core.blocking import grouped_plan_from_2d, plan_gemm
+    from repro.tuning.plan_cache import (
+        lookup_plan, make_key, note_analytic_fallback,
+    )
+    g = x.shape[0] if spec.grouped else 1
+    m = x.shape[-1] if spec.trans_a else x.shape[-2]
+    k = x.shape[-2] if spec.trans_a else x.shape[-1]
+    n = w.shape[-2] if spec.trans_b else w.shape[-1]
+    n_extra_mn = sum(1 for nm in ep_def.extra_operands
+                     if nm not in ep_def.row_operands)
+    with obs.span("gemm.plan", m=m, n=n, k=k, g=g):
+        plan = lookup_plan(
+            m, n, k, x.dtype, w.dtype, out_dtype,
+            trans_a=spec.trans_a, trans_b=spec.trans_b,
+            beta=epilogue.beta, g=g, epilogue=epilogue.tag,
+            analytic_memo=True)
+        if plan is None:
+            plan = plan_gemm(m, n, k, x.dtype, w.dtype, out_dtype=out_dtype,
+                             beta=epilogue.beta, extra_mn_inputs=n_extra_mn)
+            if spec.grouped:
+                plan = grouped_plan_from_2d(plan, g)
+            note_analytic_fallback(make_key(
+                m, n, k, x.dtype, w.dtype, out_dtype,
+                trans_a=spec.trans_a, trans_b=spec.trans_b,
+                beta=epilogue.beta, g=g, epilogue=epilogue.tag), plan)
+        obs.annotate(bytes=plan.hbm_bytes, flops=plan.flops, cmr=plan.cmr)
+    obs.counter_inc("gemm_launches_total",
+                    help="GEMM launches by spec combination",
+                    layout="dense", codec="none", epilogue=epilogue.kind,
+                    sparse="false", grouped=str(spec.grouped).lower())
 
 
 def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
@@ -194,6 +238,9 @@ def _apply_gemm(x, w, bias, extras, spec: GemmSpec, epilogue: EpilogueSpec,
         w = unpack_operand(w, backend=backend if native else None)
         spec = dataclasses.replace(spec, packed=False, tile_scaled=False,
                                    trans_b=False)
+
+    if not kernel_backend:
+        _note_xla_dispatch(x, w, spec, epilogue, ep_def, out_dtype)
 
     if pre_quant:
         # Dense weights under activation quantization: per-tensor quantize
@@ -456,15 +503,17 @@ def _resolve_operand(name, b, w, b_sparse):
         raise ValueError(f"{name}: exactly one of b / w / b_sparse "
                          "is required")
     if w is not None:
-        warnings.warn(
+        obs.warn_deprecated(
+            f"{name}.w",
             f"{name}(w=...) is deprecated; pass the operand positionally "
-            "as `b`", DeprecationWarning, stacklevel=3)
+            "as `b`", stacklevel=3)
         return w
     if b_sparse is not None:
-        warnings.warn(
+        obs.warn_deprecated(
+            f"{name}.b_sparse",
             f"{name}(b_sparse=...) is deprecated; pass the operand as the "
             "polymorphic `b` argument (dispatch is by operand type)",
-            DeprecationWarning, stacklevel=3)
+            stacklevel=3)
         return b_sparse
     return b
 

@@ -29,7 +29,6 @@ are thin argument-to-spec adapters kept as the public entry points.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -41,6 +40,7 @@ try:  # pltpu imports fine on CPU installs; guard anyway.
 except ImportError:  # pragma: no cover
     pltpu = None
 
+from repro import obs
 from repro.core.blocking import (
     GemmPlan, grouped_plan_from_2d, plan_gemm, plan_with_blocks,
 )
@@ -73,10 +73,11 @@ def resolve_b_operand(
         raise ValueError("exactly one of b / b_packed / b_sparse is required")
     if b_packed is not None or b_sparse is not None:
         kw = "b_packed" if b_packed is not None else "b_sparse"
-        warnings.warn(
+        obs.warn_deprecated(
+            f"{name}.{kw}",
             f"{name}({kw}=...) is deprecated; pass the operand as the "
             "polymorphic `b` argument (dispatch is by operand type)",
-            DeprecationWarning, stacklevel=stacklevel)
+            stacklevel=stacklevel)
     op = b if b is not None else b_packed if b_packed is not None else b_sparse
     if is_packed(op):
         return None, op, None
@@ -314,14 +315,16 @@ def _layout_plan(m: int, k: int, n: int, layout, a_dtype, out_dtype,
     tiles cost neither B bytes nor MACs — core/blocking.py ``density=``).
     Per-tile-scaled payloads force an f32 accumulator (scales vary per K
     step, so int32 accumulation across blocks is no longer exact)."""
-    from repro.tuning.plan_cache import lookup_plan
+    from repro.tuning.plan_cache import (
+        lookup_plan, make_key, note_analytic_fallback,
+    )
     acc = "float32" if layout.per_tile_scales else None
     density = layout.density if sparse else 1.0
     namespace = {"sparsity": layout.tag} if sparse else {"layout": layout.tag}
     plan = lookup_plan(
         m, n, k, a_dtype, layout.dtype, out_dtype,
         trans_a=trans_a, trans_b=False, beta=beta, g=g,
-        epilogue=epilogue_tag, **namespace,
+        epilogue=epilogue_tag, analytic_memo=True, **namespace,
     )
     if plan is not None and (plan.bn, plan.bk) != (layout.bn, layout.bk):
         plan = None  # tuned entry from a different payload tiling
@@ -336,6 +339,10 @@ def _layout_plan(m: int, k: int, n: int, layout, a_dtype, out_dtype,
         )
         if g != 1:
             plan = grouped_plan_from_2d(plan, g)
+        note_analytic_fallback(make_key(
+            m, n, k, a_dtype, layout.dtype, out_dtype,
+            trans_a=trans_a, trans_b=False, beta=beta, g=g,
+            epilogue=epilogue_tag, **namespace), plan)
     if layout.per_tile_scales and plan.acc_dtype != "float32":
         plan = dataclasses.replace(plan, acc_dtype="float32")
     return plan
@@ -582,28 +589,40 @@ def mpgemm_pallas_spec(
         raise ValueError(
             f"plan blocks ({plan.bn}, {plan.bk}) incompatible with "
             f"packed/sparse layout ({b_layout.bn}, {b_layout.bk})")
-    if plan is None and b_layout is not None:
-        plan = _layout_plan(m, k, n, b_layout, a.dtype, out_dtype,
-                            spec.trans_a, epilogue.beta,
-                            sparse=slayout is not None, g=g,
-                            epilogue_tag=epilogue.tag, extra_mn=n_extra_mn)
-    if plan is None:
-        # Closed-loop planning: a tuned plan from the persistent cache wins
-        # over the analytic model (repro.tuning populates it; lazy import
-        # keeps the kernel layer free of a hard tuning dependency).
-        from repro.tuning.plan_cache import lookup_plan
-        plan = lookup_plan(
-            m, n, k, a.dtype, b.dtype, out_dtype,
-            trans_a=spec.trans_a, trans_b=spec.trans_b, beta=epilogue.beta,
-            g=g, epilogue=epilogue.tag,
-        )
-    if plan is None:
-        plan = plan_gemm(
-            m, n, k, a.dtype, b.dtype, out_dtype=out_dtype,
-            beta=epilogue.beta, extra_mn_inputs=n_extra_mn,
-        )
-        if grouped:
-            plan = grouped_plan_from_2d(plan, g)
+    with obs.span("gemm.plan", m=m, n=n, k=k, g=g):
+        if plan is None and b_layout is not None:
+            plan = _layout_plan(m, k, n, b_layout, a.dtype, out_dtype,
+                                spec.trans_a, epilogue.beta,
+                                sparse=slayout is not None, g=g,
+                                epilogue_tag=epilogue.tag,
+                                extra_mn=n_extra_mn)
+        if plan is None:
+            # Closed-loop planning: a tuned plan from the persistent cache
+            # wins over the analytic model (repro.tuning populates it; lazy
+            # import keeps the kernel layer free of a hard tuning
+            # dependency).
+            from repro.tuning.plan_cache import lookup_plan
+            plan = lookup_plan(
+                m, n, k, a.dtype, b.dtype, out_dtype,
+                trans_a=spec.trans_a, trans_b=spec.trans_b,
+                beta=epilogue.beta, g=g, epilogue=epilogue.tag,
+                analytic_memo=True,
+            )
+        if plan is None:
+            from repro.tuning.plan_cache import (
+                make_key, note_analytic_fallback,
+            )
+            plan = plan_gemm(
+                m, n, k, a.dtype, b.dtype, out_dtype=out_dtype,
+                beta=epilogue.beta, extra_mn_inputs=n_extra_mn,
+            )
+            if grouped:
+                plan = grouped_plan_from_2d(plan, g)
+            note_analytic_fallback(make_key(
+                m, n, k, a.dtype, b.dtype, out_dtype,
+                trans_a=spec.trans_a, trans_b=spec.trans_b,
+                beta=epilogue.beta, g=g, epilogue=epilogue.tag), plan)
+        obs.annotate(bytes=plan.hbm_bytes, flops=plan.flops, cmr=plan.cmr)
     out_dtype = jnp.dtype(out_dtype or plan.out_dtype)
     acc_dtype = jnp.dtype(plan.acc_dtype)
     if b_layout is not None and b_layout.per_tile_scales:
@@ -611,11 +630,29 @@ def mpgemm_pallas_spec(
         # an explicitly supplied plan (mirrors _layout_plan; an int32
         # accumulator would reject the scaled stores deep inside Pallas).
         acc_dtype = jnp.dtype(jnp.float32)
+    # Per-spec launch accounting: one series per (layout, codec, epilogue,
+    # sparse, grouped) combination — the runtime census of which kernel
+    # variants a workload actually exercises (counted at trace time, like
+    # every other jaxpr-level fact in this stack).
+    launch_labels = dict(
+        layout=("packed" if layout is not None
+                else "sparse" if slayout is not None else "dense"),
+        codec=(b_layout.dtype if b_layout is not None else "none"),
+        epilogue=epilogue.kind,
+        sparse=str(slayout is not None).lower(),
+        grouped=str(grouped).lower(),
+    )
+    obs.counter_inc("gemm_launches_total",
+                    help="GEMM launches by spec combination",
+                    **launch_labels)
     if spec.sparse:
-        return _launch_sparse(
-            a, b_sparse, c=c, bias=bias, scale=scale, extras=extras,
-            spec=spec, epilogue=epilogue, plan=plan, out_dtype=out_dtype,
-            acc_dtype=acc_dtype, m=m, n=n, g=g, interpret=interpret)
+        with obs.span("gemm.launch", bytes=plan.hbm_bytes,
+                      flops=plan.flops, m=m, n=n, k=k, g=g,
+                      **launch_labels):
+            return _launch_sparse(
+                a, b_sparse, c=c, bias=bias, scale=scale, extras=extras,
+                spec=spec, epilogue=epilogue, plan=plan, out_dtype=out_dtype,
+                acc_dtype=acc_dtype, m=m, n=n, g=g, interpret=interpret)
     bm, bn, bk = plan.bm, plan.bn, plan.bk
     grid = ((g,) if grouped else ()) + (
         pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
@@ -693,16 +730,18 @@ def mpgemm_pallas_spec(
         kwargs["compiler_params"] = params
 
     out_shape = ((g, m, n) if grouped else (m, n))
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=mn_spec,
-        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
-        scratch_shapes=scratch,
-        interpret=interpret,
-        **kwargs,
-    )(*inputs)
+    with obs.span("gemm.launch", bytes=plan.hbm_bytes, flops=plan.flops,
+                  m=m, n=n, k=k, g=g, grid=str(grid), **launch_labels):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=mn_spec,
+            out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
+            scratch_shapes=scratch,
+            interpret=interpret,
+            **kwargs,
+        )(*inputs)
 
 
 # --- public wrappers (argument -> spec adapters) -----------------------------

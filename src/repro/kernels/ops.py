@@ -8,6 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import mpgemm as _mpgemm
 from repro.kernels import ref as _ref
 
@@ -18,7 +19,11 @@ _FALLBACKS_LOGGED = set()
 def _note_fallback(op: str, reason: str) -> None:
     """Log the FIRST implicit reference fallback per op; later ones are
     silent (the wrapper is jit'd — this fires at trace time, so a hot loop
-    never spams the log)."""
+    never spams the log).  Every fallback lands in the registry under its
+    reason string, so the rate stays observable after the log goes quiet."""
+    obs.counter_inc("kernel_fallback_total",
+                    help="implicit XLA-reference fallbacks by reason",
+                    op=op, reason=reason)
     if op not in _FALLBACKS_LOGGED:
         _FALLBACKS_LOGGED.add(op)
         _log.warning(

@@ -89,7 +89,28 @@ def main():
                     help="disable the fused gated-activation/residual "
                          "epilogues (core/gemm_spec.py) — the unfused A/B "
                          "baseline benchmarks/bench_epilogue.py measures")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the obs metrics registry over HTTP on this "
+                         "port (/metrics Prometheus text, /metrics.json, "
+                         "/trace Chrome trace; 0 = ephemeral port, printed "
+                         "at startup); a summary snapshot prints at exit")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record obs tracing spans (serve step phases, "
+                         "GEMM plan/pack/launch legs) and write a "
+                         "Perfetto/chrome://tracing trace.json to FILE")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace_out:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.Tracer()
+        obs_trace.set_tracer(tracer)
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs.server import start_metrics_server
+        server = start_metrics_server(port=args.metrics_port)
+        print(f"[serve] metrics server on {server.url} "
+              f"(/metrics, /metrics.json, /trace)")
 
     if args.batch is not None:
         print("[serve] --batch is deprecated; use --max-batch "
@@ -222,6 +243,26 @@ def main():
                   f"{s.tokens_per_s:.1f} tok/s")
     for uid in sorted(out):
         print(f"  req{uid}: {out[uid][:10]}")
+
+    if server is not None:
+        # Scrape our own endpoint so the snapshot below exercised the full
+        # HTTP path, not just the in-process registry.
+        import urllib.request
+        with urllib.request.urlopen(server.url + "/metrics") as resp:
+            text = resp.read().decode()
+        series = [ln for ln in text.splitlines()
+                  if ln and not ln.startswith("#")]
+        print(f"[serve] /metrics snapshot: {len(series)} series")
+        for ln in series:
+            if ln.startswith(("gemm_launches_total", "plan_cache_",
+                              "paged_kv_", "serve_steps_total",
+                              "serve_tokens_total")):
+                print(f"  {ln}")
+        server.close()
+    if tracer is not None:
+        tracer.export(args.trace_out)
+        print(f"[serve] wrote {len(tracer)} trace events to "
+              f"{args.trace_out}")
 
 
 if __name__ == "__main__":

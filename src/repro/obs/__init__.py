@@ -1,0 +1,51 @@
+"""Runtime observability: metrics registry, tracing spans, jaxpr auditor.
+
+One import surface for the whole stack::
+
+    from repro import obs
+
+    obs.counter_inc("gemm_launches_total", layout="packed", ...)
+    with obs.span("gemm.launch", bytes=plan.hbm_bytes):
+        ...
+    obs.audit.count_pallas(obs.audit.trace(fn, x))
+
+Submodules: ``registry`` (counters/gauges/histograms, Prometheus/JSON
+exposition), ``trace`` (contextvar-nested spans, Perfetto trace.json),
+``audit`` (jaxpr launch auditor), ``deprecation`` (warn-once-per-site
+shims), ``server`` (stdlib /metrics + /trace endpoint — import it
+directly, it is not pulled in here).
+
+``repro.obs`` itself is dependency-free (stdlib only; ``audit`` imports
+jax lazily), so any module in the tree may instrument itself without
+creating an import cycle.
+"""
+from repro.obs import audit
+from repro.obs.deprecation import reset_warned_sites, warn_deprecated
+from repro.obs.registry import (
+    MetricsRegistry, counter_inc, gauge_set, get_registry, metrics_enabled,
+    observe, set_registry,
+)
+from repro.obs.trace import (
+    Tracer, annotate, get_tracer, instant, set_tracer, span,
+    tracing_enabled,
+)
+
+__all__ = [
+    "MetricsRegistry",
+    "Tracer",
+    "annotate",
+    "audit",
+    "counter_inc",
+    "gauge_set",
+    "get_registry",
+    "get_tracer",
+    "instant",
+    "metrics_enabled",
+    "observe",
+    "reset_warned_sites",
+    "set_registry",
+    "set_tracer",
+    "span",
+    "tracing_enabled",
+    "warn_deprecated",
+]

@@ -1,0 +1,231 @@
+"""Reusable jaxpr launch auditor — the one implementation of the trace
+gates that PRs 3–9 each hand-rolled inside a bench module.
+
+Everything here operates on a traced jaxpr (``trace(fn, *args)`` or
+``jax.make_jaxpr(...)(...).jaxpr``) and returns exact, timing-free
+facts about the launch schedule:
+
+* ``count_pallas``          — Pallas launches anywhere in the program;
+* ``pallas_grids`` /
+  ``first_pallas_grid``     — the grid of each ``pallas_call`` (the
+                              sparse/paged gates read the innermost axis:
+                              stored-tile schedule length, block-table
+                              width);
+* ``primitive_counts``      — XLA-level primitive histogram, *skipping*
+                              pallas kernel bodies (in-kernel ops are
+                              fused — that is the point);
+* ``weight_sized_intermediates`` — count and bytes of weight-sized
+                              outputs of a primitive set (per-call prep
+                              passes, dequant materializations);
+* ``op_sequence`` /
+  ``schedule_counts``       — the ordered GEMM/collective schedule and
+                              the ring-interleave summary the
+                              distributed gate asserts on.
+
+The set constants (``PREP_PRIMS``, ``DEQUANT_PRIMS``) moved here from
+``bench_packing`` / ``bench_quant`` so tests and future gates import one
+definition.  This module imports jax lazily-at-call so ``repro.obs``
+stays importable without it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "DEQUANT_PRIMS",
+    "PREP_PRIMS",
+    "SCHEDULE_OPS",
+    "LaunchAudit",
+    "audit",
+    "count_pallas",
+    "first_pallas_grid",
+    "op_sequence",
+    "pallas_grids",
+    "prep_bytes",
+    "primitive_counts",
+    "schedule_counts",
+    "trace",
+    "weight_sized_intermediates",
+]
+
+#: Layout/prep primitives whose weight-sized outputs are the per-call
+#: operand preparation that ahead-of-time packing eliminates (casts,
+#: transposes, per-tensor dynamic quantization chains).
+PREP_PRIMS = frozenset({
+    "transpose", "convert_element_type", "pad", "round", "clamp", "abs",
+    "mul", "div", "max", "min", "reduce_max", "integer_pow", "sign",
+    "optimization_barrier", "stop_gradient",
+})
+
+#: Primitives a separate dequantization pass materializes through; a
+#: weight-sized output of one of these OUTSIDE a kernel body means the
+#: nibble/scale decode is not riding the accumulation loop.
+DEQUANT_PRIMS = frozenset({"convert_element_type", "mul", "div"})
+
+#: The ops that make up a sharded-GEMM schedule (order-preserved by
+#: ``op_sequence``; ``schedule_counts`` summarizes interleaving).
+SCHEDULE_OPS = ("dot_general", "pallas_call", "ppermute", "psum",
+                "all_to_all")
+
+
+def trace(fn, *args, **kwargs):
+    """The jaxpr of ``fn(*args, **kwargs)`` (ShapeDtypeStructs welcome)."""
+    import jax
+    return jax.make_jaxpr(fn)(*args, **kwargs).jaxpr
+
+
+def _sub_jaxprs(eqn):
+    import jax
+    return jax.core.jaxprs_in_params(eqn.params)
+
+
+def _is_pallas(eqn) -> bool:
+    return "pallas" in eqn.primitive.name
+
+
+def count_pallas(jaxpr) -> int:
+    """Pallas launches anywhere in a jaxpr (recursing into sub-jaxprs)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if _is_pallas(eqn):
+            n += 1
+        for sub in _sub_jaxprs(eqn):
+            n += count_pallas(sub)
+    return n
+
+
+def pallas_grids(jaxpr) -> List[tuple]:
+    """The grid of every ``pallas_call``, in program order."""
+    grids: List[tuple] = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            grids.append(tuple(eqn.params["grid_mapping"].grid))
+        for sub in _sub_jaxprs(eqn):
+            grids.extend(pallas_grids(sub))
+    return grids
+
+
+def first_pallas_grid(jaxpr) -> tuple:
+    """Grid of the first ``pallas_call``; raises if the fn never launches
+    a kernel (the gates treat that as a broken dispatch, not a zero)."""
+    grids = pallas_grids(jaxpr)
+    if not grids:
+        raise ValueError("traced fn contains no pallas_call")
+    return grids[0]
+
+
+def primitive_counts(jaxpr, counts: Optional[Dict[str, int]] = None,
+                     *, skip_pallas_bodies: bool = True) -> Dict[str, int]:
+    """Primitive-name histogram.  By default pallas kernel bodies are
+    skipped (their internal ops are fused in-kernel), matching the
+    epilogue gate's notion of "stand-alone" XLA ops."""
+    if counts is None:
+        counts = {}
+    for eqn in jaxpr.eqns:
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+        if skip_pallas_bodies and eqn.primitive.name == "pallas_call":
+            continue
+        for sub in _sub_jaxprs(eqn):
+            primitive_counts(sub, counts,
+                             skip_pallas_bodies=skip_pallas_bodies)
+    return counts
+
+
+def weight_sized_intermediates(jaxpr, weight_elems: int, *,
+                               prims: frozenset = PREP_PRIMS,
+                               skip_pallas_bodies: bool = False,
+                               ) -> Tuple[int, int]:
+    """(count, bytes) of weight-sized outputs produced by ``prims``.
+
+    With the default ``prims=PREP_PRIMS`` and recursion into kernel
+    bodies this is the packing gate's per-call prep traffic; with
+    ``prims=DEQUANT_PRIMS, skip_pallas_bodies=True`` it is the quant
+    gate's dequant-materialization count.  Size-based isolation: a
+    weight-sized transpose/convert/scale output IS the pass being
+    audited; activation-side ops have different extents (callers pick a
+    trace-time M distinct from N and K).
+    """
+    count = 0
+    total = 0
+    for eqn in jaxpr.eqns:
+        if not (skip_pallas_bodies and _is_pallas(eqn)):
+            for sub in _sub_jaxprs(eqn):
+                c, b = weight_sized_intermediates(
+                    sub, weight_elems, prims=prims,
+                    skip_pallas_bodies=skip_pallas_bodies)
+                count += c
+                total += b
+        if eqn.primitive.name not in prims:
+            continue
+        for var in eqn.outvars:
+            aval = var.aval
+            if getattr(aval, "size", 0) == weight_elems:
+                count += 1
+                total += aval.size * aval.dtype.itemsize
+    return count, total
+
+
+def prep_bytes(fn, *args, weight_elems: int) -> int:
+    """Bytes of weight-sized prep intermediates in the traced fn."""
+    return weight_sized_intermediates(trace(fn, *args), weight_elems)[1]
+
+
+def op_sequence(jaxpr, names: Sequence[str] = SCHEDULE_OPS) -> List[str]:
+    """Ordered occurrences of ``names`` (program order, recursing into
+    every sub-jaxpr) — the raw material of the interleaving gate."""
+    nameset = frozenset(names)
+    out: List[str] = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in nameset:
+                out.append(eqn.primitive.name)
+            for sub in _sub_jaxprs(eqn):
+                walk(sub)
+
+    walk(jaxpr)
+    return out
+
+
+def schedule_counts(jaxpr) -> Dict[str, int]:
+    """The distributed gate's schedule summary: GEMM count, collective
+    counts, and whether every ppermute is separated from the next by a
+    chunk GEMM (``interleaved``)."""
+    ops = op_sequence(jaxpr)
+    seq = "".join("P" if o == "ppermute" else "D"
+                  for o in ops if o != "psum" and o != "all_to_all")
+    return {"dots": sum(1 for o in ops
+                        if o in ("dot_general", "pallas_call")),
+            "ppermutes": ops.count("ppermute"),
+            "psums": ops.count("psum"),
+            "all_to_alls": ops.count("all_to_all"),
+            "interleaved": int("PP" not in seq and "P" in seq)}
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchAudit:
+    """One traced fn's launch facts, bundled for tests and reports."""
+
+    pallas_calls: int
+    grids: Tuple[tuple, ...]
+    primitives: Dict[str, int]       # outside pallas bodies
+    collectives: Dict[str, int]
+
+    @property
+    def single_launch(self) -> bool:
+        return self.pallas_calls == 1
+
+
+def audit(fn, *args, **kwargs) -> LaunchAudit:
+    """Trace ``fn`` and collect the standard launch facts."""
+    jaxpr = trace(fn, *args, **kwargs)
+    prims = primitive_counts(jaxpr)
+    return LaunchAudit(
+        pallas_calls=count_pallas(jaxpr),
+        grids=tuple(pallas_grids(jaxpr)),
+        primitives=prims,
+        collectives={name: prims.get(name, 0)
+                     for name in ("ppermute", "psum", "all_to_all",
+                                  "all_gather", "reduce_scatter")},
+    )

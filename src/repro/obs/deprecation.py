@@ -1,0 +1,51 @@
+"""Warn-once-per-site deprecation shims, counted in the registry.
+
+The legacy keyword shims (``mp_dot(w=...)``, ``mpgemm_pallas(b_packed=
+...)``, ``ServeEngine(batch_size=...)``) used to warn on EVERY call —
+a serve loop hitting one per step drowned the log.  ``warn_deprecated``
+keeps the first warning per (file, line) call site, silences repeats,
+and increments ``deprecated_call_total{shim=...}`` on every invocation
+so dead shims can be retired with usage evidence instead of guesses.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import warnings
+from typing import Set, Tuple
+
+from repro.obs.registry import counter_inc
+
+__all__ = ["reset_warned_sites", "warn_deprecated"]
+
+_lock = threading.Lock()
+_warned_sites: Set[Tuple[str, str, int]] = set()
+
+
+def warn_deprecated(shim: str, message: str, *,
+                    stacklevel: int = 2) -> None:
+    """Drop-in for ``warnings.warn(message, DeprecationWarning,
+    stacklevel=...)`` with per-site dedup + registry counting.
+
+    ``stacklevel`` has the same meaning as in ``warnings.warn`` issued at
+    the caller: 2 points the warning at the caller's caller.  The dedup
+    site is the frame the warning would be attributed to.
+    """
+    counter_inc("deprecated_call_total",
+                help="legacy-shim invocations by shim name", shim=shim)
+    try:
+        frame = sys._getframe(stacklevel)
+        site = (shim, frame.f_code.co_filename, frame.f_lineno)
+    except (AttributeError, ValueError):  # no _getframe / shallow stack
+        site = (shim, "<unknown>", 0)
+    with _lock:
+        if site in _warned_sites:
+            return
+        _warned_sites.add(site)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel + 1)
+
+
+def reset_warned_sites() -> None:
+    """Forget dedup state (tests re-asserting the first warning)."""
+    with _lock:
+        _warned_sites.clear()

@@ -1,0 +1,332 @@
+"""Process-wide metrics registry: counters, gauges, histograms with labels.
+
+The registry is the one sink for runtime counters across the stack —
+plan-cache hits, packed-weight / paged-KV cache traffic, per-spec kernel
+launch counts, deprecation-shim invocations, flash-attention fallbacks,
+and serve-engine telemetry.  Design constraints, in order:
+
+* **Near-zero overhead.**  The hot-path entry points are the module-level
+  helpers (``counter_inc`` / ``gauge_set`` / ``observe``); when metrics
+  are disabled (``REPRO_OBS=off`` or ``set_registry(None)``) they return
+  after one attribute check and allocate nothing.  When enabled, one
+  increment is a dict lookup + ``+=`` under a lock.
+* **Thread-safe.**  The serve HTTP server snapshots from a daemon thread
+  while the engine increments; a single registry lock covers both.
+* **Deterministic exposition.**  ``snapshot()`` / ``to_json()`` /
+  ``prometheus_text()`` sort families and label series, so two identical
+  runs produce byte-identical dumps (the property ``bench_obs`` gates).
+
+Label values are stringified and the label *set* is canonicalised by
+sorting keys, so ``c.inc(a="1", b="2")`` and ``c.inc(b="2", a="1")`` hit
+the same series.  Keep label cardinality bounded (kinds and namespaces,
+never raw shapes or keys).
+
+The ambient registry follows the same process-global pattern as
+``tuning.plan_cache.get_plan_cache`` / ``set_plan_cache``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "counter_inc",
+    "gauge_set",
+    "get_registry",
+    "metrics_enabled",
+    "observe",
+    "set_registry",
+]
+
+LabelSet = Tuple[Tuple[str, str], ...]
+
+#: Histogram bucket upper bounds (seconds-flavoured; +Inf is implicit).
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1e-4, 5e-4, 1e-3, 5e-3, 1e-2, 5e-2, 0.1, 0.5, 1.0, 5.0, 10.0)
+
+_OFF_VALUES = {"off", "0", "false", "none", "disabled"}
+
+
+def _labelset(labels: Mapping[str, object]) -> LabelSet:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _series_key(name: str, labelset: LabelSet) -> str:
+    if not labelset:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in labelset)
+    return f"{name}{{{inner}}}"
+
+
+class _Family:
+    """Base for one named metric family holding label-keyed series."""
+
+    kind = "untyped"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str):
+        self._registry = registry
+        self.name = name
+        self.help = help
+        self._series: Dict[LabelSet, object] = {}
+
+    def labelsets(self) -> List[LabelSet]:
+        with self._registry._lock:
+            return sorted(self._series)
+
+
+class Counter(_Family):
+    """Monotonically increasing float per label set."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels: object) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name!r}: negative increment "
+                             f"{amount!r}")
+        ls = _labelset(labels)
+        with self._registry._lock:
+            self._series[ls] = self._series.get(ls, 0.0) + amount
+
+    def value(self, **labels: object) -> float:
+        with self._registry._lock:
+            return float(self._series.get(_labelset(labels), 0.0))
+
+    def total(self) -> float:
+        """Sum over every label series."""
+        with self._registry._lock:
+            return float(sum(self._series.values()))
+
+
+class Gauge(_Family):
+    """Last-write-wins float per label set."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels: object) -> None:
+        with self._registry._lock:
+            self._series[_labelset(labels)] = float(value)
+
+    def add(self, amount: float, **labels: object) -> None:
+        ls = _labelset(labels)
+        with self._registry._lock:
+            self._series[ls] = self._series.get(ls, 0.0) + amount
+
+    def value(self, **labels: object) -> float:
+        with self._registry._lock:
+            return float(self._series.get(_labelset(labels), 0.0))
+
+
+class _HistData:
+    __slots__ = ("count", "sum", "bucket_counts")
+
+    def __init__(self, n_buckets: int):
+        self.count = 0
+        self.sum = 0.0
+        self.bucket_counts = [0] * (n_buckets + 1)  # +1 for +Inf
+
+
+class Histogram(_Family):
+    """Cumulative-bucket histogram per label set."""
+
+    kind = "histogram"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str,
+                 buckets: Iterable[float] = DEFAULT_BUCKETS):
+        super().__init__(registry, name, help)
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        if not self.buckets:
+            raise ValueError(f"histogram {self.name!r}: empty buckets")
+
+    def observe(self, value: float, **labels: object) -> None:
+        ls = _labelset(labels)
+        with self._registry._lock:
+            data = self._series.get(ls)
+            if data is None:
+                data = self._series[ls] = _HistData(len(self.buckets))
+            data.count += 1
+            data.sum += value
+            for i, ub in enumerate(self.buckets):
+                if value <= ub:
+                    data.bucket_counts[i] += 1
+                    break
+            else:
+                data.bucket_counts[-1] += 1
+
+    def snapshot_one(self, **labels: object) -> Dict[str, object]:
+        with self._registry._lock:
+            data = self._series.get(_labelset(labels))
+            if data is None:
+                return {"count": 0, "sum": 0.0, "buckets": {}}
+            return self._hist_dict(data)
+
+    def _hist_dict(self, data: _HistData) -> Dict[str, object]:
+        cumulative, out = 0, {}
+        for ub, n in zip(self.buckets, data.bucket_counts):
+            cumulative += n
+            out[repr(ub)] = cumulative
+        out["+Inf"] = data.count
+        return {"count": data.count, "sum": data.sum, "buckets": out}
+
+
+class MetricsRegistry:
+    """A family-name → Counter/Gauge/Histogram map with one lock."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.RLock()
+        self._families: Dict[str, _Family] = {}
+
+    # -- family accessors (get-or-create, type-checked) ----------------------
+
+    def _family(self, cls, name: str, help: str, **kwargs) -> _Family:
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = cls(self, name, help, **kwargs)
+                self._families[name] = fam
+            elif not isinstance(fam, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {fam.kind}, "
+                    f"not {cls.kind}")
+            return fam
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._family(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._family(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Iterable[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._family(Histogram, name, help, buckets=buckets)
+
+    # -- exposition ----------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Deterministic nested dict: kind → series-key → value."""
+        out: Dict[str, Dict[str, object]] = {
+            "counters": {}, "gauges": {}, "histograms": {}}
+        with self._lock:
+            for name in sorted(self._families):
+                fam = self._families[name]
+                for ls in sorted(fam._series):
+                    key = _series_key(name, ls)
+                    if isinstance(fam, Histogram):
+                        out["histograms"][key] = fam._hist_dict(
+                            fam._series[ls])
+                    elif isinstance(fam, Gauge):
+                        out["gauges"][key] = float(fam._series[ls])
+                    else:
+                        out["counters"][key] = float(fam._series[ls])
+        return out
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition format (0.0.4)."""
+        lines: List[str] = []
+        with self._lock:
+            for name in sorted(self._families):
+                fam = self._families[name]
+                if fam.help:
+                    lines.append(f"# HELP {name} {fam.help}")
+                lines.append(f"# TYPE {name} {fam.kind}")
+                for ls in sorted(fam._series):
+                    if isinstance(fam, Histogram):
+                        data = fam._series[ls]
+                        cumulative = 0
+                        for ub, n in zip(fam.buckets, data.bucket_counts):
+                            cumulative += n
+                            lines.append(_series_key(
+                                f"{name}_bucket",
+                                ls + (("le", repr(ub)),)) +
+                                f" {cumulative}")
+                        lines.append(_series_key(
+                            f"{name}_bucket", ls + (("le", "+Inf"),)) +
+                            f" {data.count}")
+                        lines.append(
+                            f"{_series_key(name + '_sum', ls)} {data.sum}")
+                        lines.append(
+                            f"{_series_key(name + '_count', ls)} "
+                            f"{data.count}")
+                    else:
+                        lines.append(
+                            f"{_series_key(name, ls)} {fam._series[ls]}")
+        return "\n".join(lines) + "\n"
+
+    def reset(self) -> None:
+        with self._lock:
+            self._families.clear()
+
+
+# --- the ambient process-wide registry ---------------------------------------
+
+_ambient_lock = threading.Lock()
+_ambient: Optional[MetricsRegistry] = None
+_ambient_initialised = False
+
+
+def _default_enabled() -> bool:
+    return os.environ.get("REPRO_OBS", "on").strip().lower() \
+        not in _OFF_VALUES
+
+
+def get_registry() -> Optional[MetricsRegistry]:
+    """The ambient registry (created on first use; None when disabled)."""
+    global _ambient, _ambient_initialised
+    if _ambient_initialised:
+        return _ambient
+    with _ambient_lock:
+        if not _ambient_initialised:
+            _ambient = MetricsRegistry() if _default_enabled() else None
+            _ambient_initialised = True
+    return _ambient
+
+
+def set_registry(registry: Optional[MetricsRegistry]
+                 ) -> Optional[MetricsRegistry]:
+    """Install ``registry`` as ambient (None disables); returns previous."""
+    global _ambient, _ambient_initialised
+    with _ambient_lock:
+        prev = _ambient if _ambient_initialised else None
+        _ambient = registry
+        _ambient_initialised = True
+    return prev
+
+
+def metrics_enabled() -> bool:
+    reg = get_registry()
+    return reg is not None and reg.enabled
+
+
+# --- hot-path helpers (no-ops when disabled) ---------------------------------
+
+def counter_inc(name: str, amount: float = 1.0, *, help: str = "",
+                **labels: object) -> None:
+    reg = get_registry()
+    if reg is None or not reg.enabled:
+        return
+    reg.counter(name, help).inc(amount, **labels)
+
+
+def gauge_set(name: str, value: float, *, help: str = "",
+              **labels: object) -> None:
+    reg = get_registry()
+    if reg is None or not reg.enabled:
+        return
+    reg.gauge(name, help).set(value, **labels)
+
+
+def observe(name: str, value: float, *, help: str = "",
+            **labels: object) -> None:
+    reg = get_registry()
+    if reg is None or not reg.enabled:
+        return
+    reg.histogram(name, help).observe(value, **labels)

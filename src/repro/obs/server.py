@@ -1,0 +1,102 @@
+"""Stdlib HTTP surfacing for the registry and tracer.
+
+``start_metrics_server(port)`` spins up a ``ThreadingHTTPServer`` on a
+daemon thread serving:
+
+* ``/metrics``       — Prometheus text exposition of the ambient registry
+* ``/metrics.json``  — the same snapshot as sorted JSON
+* ``/trace``         — the ambient tracer's Chrome ``trace.json`` so far
+                       (404 when tracing is off)
+
+Port 0 binds an ephemeral port; the bound port is on the returned
+handle.  The server reads shared state only through the registry/tracer
+locks, so it is safe to scrape mid-run.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.obs import registry as _registry
+from repro.obs import trace as _trace
+
+__all__ = ["MetricsServer", "start_metrics_server"]
+
+
+class _Handler(BaseHTTPRequestHandler):
+    def _send(self, code: int, content_type: str, body: str) -> None:
+        data = body.encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def do_GET(self) -> None:  # noqa: N802 (http.server API)
+        path = self.path.split("?", 1)[0]
+        if path in ("/metrics", "/"):
+            reg = _registry.get_registry()
+            if reg is None:
+                self._send(503, "text/plain; charset=utf-8",
+                           "metrics disabled (REPRO_OBS=off)\n")
+            else:
+                self._send(200, "text/plain; version=0.0.4; charset=utf-8",
+                           reg.prometheus_text())
+        elif path == "/metrics.json":
+            reg = _registry.get_registry()
+            if reg is None:
+                self._send(503, "application/json", "{}\n")
+            else:
+                self._send(200, "application/json",
+                           reg.to_json(indent=1) + "\n")
+        elif path == "/trace":
+            tracer = _trace.get_tracer()
+            if tracer is None:
+                self._send(404, "text/plain; charset=utf-8",
+                           "tracing off (use --trace-out / set_tracer)\n")
+            else:
+                self._send(200, "application/json",
+                           json.dumps(tracer.chrome_trace()) + "\n")
+        else:
+            self._send(404, "text/plain; charset=utf-8",
+                       "endpoints: /metrics /metrics.json /trace\n")
+
+    def log_message(self, format: str, *args) -> None:
+        pass  # scrapes must not spam the serve log
+
+
+class MetricsServer:
+    """A running observability endpoint; ``close()`` to stop."""
+
+    def __init__(self, host: str, port: int):
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="repro-obs-metrics",
+            daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def start_metrics_server(port: int = 0,
+                         host: str = "127.0.0.1") -> MetricsServer:
+    """Serve ``/metrics`` + ``/trace`` on a daemon thread; returns the
+    handle (``.port`` resolves port 0 to the bound port)."""
+    return MetricsServer(host, port)

@@ -43,11 +43,18 @@ from typing import Callable, Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.registry import counter_inc
 from repro.packing.layout import PackedLayout, PackedOperand
 
 _SCHEMA_VERSION = 1
 
 _OFF_VALUES = ("off", "0", "none", "disabled")
+
+
+def _count_weight_lookup(kind: str, result: str) -> None:
+    counter_inc("packed_weight_cache_lookups_total",
+                help="packed-weight cache reads by layout kind and outcome",
+                kind=kind, result=result)
 
 
 def _file_lock(path: Path):
@@ -288,8 +295,10 @@ class PackedWeightCache:
         hit = self.get(key)
         if hit is not None:
             self.hits += 1
+            _count_weight_lookup(_layout_kind(layout), "hit")
             return hit
         self.misses += 1
+        _count_weight_lookup(_layout_kind(layout), "miss")
         packer = pack_fn or pack_operand
         packed = packer(w, (bk, bn), trans_w=trans_w, dtype=dtype,
                         backend=backend)
@@ -305,8 +314,10 @@ class PackedWeightCache:
         hit = self.get(key)
         if hit is not None:
             self.hits += 1
+            _count_weight_lookup(_layout_kind(layout), "hit")
             return hit
         self.misses += 1
+        _count_weight_lookup(_layout_kind(layout), "miss")
         built = build_fn()
         self.put(key, built)
         return built

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import obs
 from repro.core import config as cfg
 from repro.core.blocking import GemmPlan
 from repro.core.codecs import (
@@ -362,11 +363,15 @@ def pack_operand(
     method = _resolve_method(backend)
     if not layout.kernel_native:
         method = "xla"          # emulated fp8 encodes via the jnp table
-    if method == "xla":
-        payload, scales = pack_reference(w, layout)
-    else:
-        payload, scales = _pack_pallas(w, layout,
-                                       interpret=(method == "interpret"))
+    with obs.span("pack", dtype=str(layout.dtype), bk=bk, bn=bn,
+                  g=layout.g, method=method):
+        if method == "xla":
+            payload, scales = pack_reference(w, layout)
+        else:
+            payload, scales = _pack_pallas(w, layout,
+                                           interpret=(method == "interpret"))
+        obs.annotate(payload_bytes=int(payload.size)
+                     * jnp.dtype(payload.dtype).itemsize)
     return PackedOperand(payload, scales, layout)
 
 

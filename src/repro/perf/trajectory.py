@@ -33,7 +33,8 @@ from repro.perf.metrics import RECORD_KINDS, WorkloadRecord
 
 SCHEMA_VERSION = 1
 
-AREAS = ("gemm", "packing", "quant", "sparse", "serve", "distributed")
+AREAS = ("gemm", "packing", "quant", "sparse", "serve", "distributed",
+         "obs")
 
 
 def bench_path(directory, area: str) -> Path:

@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
@@ -35,6 +34,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.serve.kv_cache import PagedKVCache, cdiv
 
 
@@ -155,10 +155,11 @@ class ServeEngine:
         self._token_bytes = _kv_token_bytes(model)
         self._wave_mode = batch_size is not None
         if self._wave_mode:
-            warnings.warn(
+            obs.warn_deprecated(
+                "serve_engine.batch_size",
                 "ServeEngine(batch_size=) selects the deprecated wave "
                 "engine; use max_batch= for continuous batching",
-                DeprecationWarning, stacklevel=2)
+                stacklevel=2)
             self.batch_size = batch_size
             self._prefill = jax.jit(
                 lambda p, b: model.prefill(p, b, max_len=max_len))
@@ -249,6 +250,7 @@ class ServeEngine:
         self._queue.appendleft(s.req)
         self._slots[i] = None
         self._preempted_now += 1
+        obs.instant("serve.preempt", uid=s.req.uid, slot=i)
 
     def _reserve(self, slot: _Slot, n_new: int) -> bool:
         """Grow slot's table for n_new tokens, preempting newer requests
@@ -276,7 +278,9 @@ class ServeEngine:
         self._require_continuous("step()")
         t0 = time.perf_counter()
         self._preempted_now = 0
-        self._admit()
+        with obs.span("serve.admit", step=self._step_counter,
+                      queued=len(self._queue)):
+            self._admit()
         live = [s for s in self._slots if s is not None]
         if not live:
             if self._queue:
@@ -322,11 +326,14 @@ class ServeEngine:
             q_start[i] = s.length
             n_valid[i] = n
             bt[i] = self.kv.block_table_row(s.req.uid, self.bt_width)
-        logits, self.caches = self._step_fn(
-            self.params, jnp.asarray(tokens), self.caches, jnp.asarray(bt),
-            jnp.asarray(q_start), jnp.asarray(n_valid))
-        logits = np.asarray(logits)       # blocks until device done
-        sampled = np.argmax(logits, axis=-1)
+        with obs.span("serve." + phase, step=self._step_counter,
+                      live=len(live), chunk=c,
+                      pages_in_use=self.kv.pages_in_use):
+            logits, self.caches = self._step_fn(
+                self.params, jnp.asarray(tokens), self.caches,
+                jnp.asarray(bt), jnp.asarray(q_start), jnp.asarray(n_valid))
+            logits = np.asarray(logits)   # blocks until device done
+            sampled = np.argmax(logits, axis=-1)
         finished: List[Request] = []
         emitted = 0
         for i, s in enumerate(self._slots):
@@ -365,11 +372,33 @@ class ServeEngine:
             kv_bytes_dense=self.max_batch * self.max_len * self._token_bytes,
             prefix_hit_tokens=self.kv.stats.prefix_hit_tokens,
             wall_s=wall, tokens_per_s=emitted / wall if wall > 0 else 0.0)
-        self.step_telemetry.append(rec)
-        if self.on_step is not None:
-            self.on_step(rec)
+        self._emit_step(rec)
         self._step_counter += 1
         return finished
+
+    def _emit_step(self, rec: StepTelemetry) -> None:
+        """One StepTelemetry record lands in all three sinks: the in-memory
+        stream, the caller's on_step hook, and the process registry —
+        serving, benches, and an HTTP scrape read the same numbers."""
+        self.step_telemetry.append(rec)
+        obs.counter_inc("serve_steps_total", phase=rec.phase,
+                        help="engine steps by phase")
+        if rec.tokens:
+            obs.counter_inc("serve_tokens_total", amount=rec.tokens,
+                            help="tokens sampled")
+        if rec.preemptions:
+            obs.counter_inc("serve_preemptions_total",
+                            amount=rec.preemptions,
+                            help="requests preempted under page pressure")
+        obs.gauge_set("serve_queue_depth", rec.queue_depth)
+        obs.gauge_set("serve_live_slots", rec.live)
+        obs.gauge_set("serve_pages_in_use", rec.pages_in_use)
+        obs.gauge_set("serve_page_occupancy", rec.page_occupancy)
+        obs.gauge_set("serve_kv_bytes", rec.kv_bytes)
+        obs.gauge_set("serve_prefix_hit_tokens", rec.prefix_hit_tokens)
+        obs.observe("serve_step_wall_seconds", rec.wall_s, phase=rec.phase)
+        if self.on_step is not None:
+            self.on_step(rec)
 
     @property
     def pending(self) -> int:
@@ -455,12 +484,16 @@ class ServeEngine:
             queue = queue[self.batch_size:]
             t0 = time.perf_counter()
             n_steps0 = len(self.step_telemetry)
-            out = self._run_wave(wave, len(queue))
+            with obs.span("serve.wave", wave=wave_idx, requests=len(wave)):
+                out = self._run_wave(wave, len(queue))
             wall = time.perf_counter() - t0
             record = WaveTelemetry.from_steps(
                 wave_idx, len(wave), len(queue),
                 self.step_telemetry[n_steps0:], wall, self.batch_size)
             self.telemetry.append(record)
+            obs.counter_inc("serve_waves_total",
+                            help="waves run by the deprecated wave engine")
+            obs.gauge_set("serve_wave_tokens_per_s", record.tokens_per_s)
             if self.on_wave is not None:
                 self.on_wave(record)
             results.update(out)
@@ -476,9 +509,7 @@ class ServeEngine:
             pages_in_use=0, page_occupancy=0.0,
             kv_bytes=dense, kv_bytes_dense=dense, prefix_hit_tokens=0,
             wall_s=wall, tokens_per_s=tokens / wall if wall > 0 else 0.0)
-        self.step_telemetry.append(rec)
-        if self.on_step is not None:
-            self.on_step(rec)
+        self._emit_step(rec)
         self._wave_step += 1
 
     def _run_wave(self, wave: List[Request], queue_depth: int):

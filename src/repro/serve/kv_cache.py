@@ -37,6 +37,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.registry import counter_inc
+
 # Page id 0 is never allocated: it is the scratch page every dead block-table
 # slot points at.
 SCRATCH_PAGE = 0
@@ -112,6 +114,9 @@ class PagedKVCache:
                 self._ref[page] = 0
                 self._free.append(page)
                 self.stats.evictions += 1
+                counter_inc("paged_kv_prefix_evictions_total",
+                            help="prefix-index pages reclaimed under "
+                                 "memory pressure")
                 return True
         return False
 
@@ -122,6 +127,8 @@ class PagedKVCache:
         assert page != SCRATCH_PAGE and self._ref[page] == 0
         self._ref[page] = 1
         self.stats.allocated_pages += 1
+        counter_inc("paged_kv_pages_allocated_total",
+                    help="page-allocation events (lifetime)")
         return page
 
     def _release_page(self, page: int) -> None:
@@ -152,6 +159,9 @@ class PagedKVCache:
             if page is None:
                 break
             pages.append(page)
+        counter_inc("paged_kv_prefix_queries_total",
+                    help="prefix-index probes by outcome",
+                    result="hit" if pages else "miss")
         return pages, len(pages) * ps
 
     def register_prefix(self, uid, prompt: Sequence[int]) -> int:
@@ -193,6 +203,13 @@ class PagedKVCache:
             self._ref[page] += 1
         self.stats.prefix_hit_pages += len(shared_pages)
         self.stats.prefix_hit_tokens += shared_tokens
+        if shared_pages:
+            counter_inc("paged_kv_prefix_hit_pages_total",
+                        amount=len(shared_pages),
+                        help="pages mapped in via prefix sharing")
+            counter_inc("paged_kv_prefix_hit_tokens_total",
+                        amount=shared_tokens,
+                        help="prompt tokens skipped via prefix sharing")
         self._tables[uid] = list(shared_pages)
         self._lengths[uid] = shared_tokens
 
@@ -203,6 +220,11 @@ class PagedKVCache:
         on every admission attempt."""
         self.stats.prefix_hit_pages -= int(pages)
         self.stats.prefix_hit_tokens -= int(tokens)
+        # Registry counters are monotone: the rollback gets its own series
+        # instead of decrementing the hit counters.
+        counter_inc("paged_kv_prefix_rollback_tokens_total",
+                    amount=int(tokens),
+                    help="prefix-hit tokens rolled back on failed admission")
 
     def ensure(self, uid, new_length: int) -> bool:
         """Grow ``uid``'s table to cover ``new_length`` tokens.

@@ -22,8 +22,9 @@ from repro.tuning.microbench import (
     tune_sparse_gemm,
 )
 from repro.tuning.plan_cache import (
-    PlanCache, current_mesh_namespace, get_plan_cache, lookup_plan, make_key,
-    mesh_namespace, set_plan_cache,
+    PlanCache, cached_analytic, clear_analytic_memo, current_mesh_namespace,
+    get_plan_cache, key_namespace, lookup_plan, make_key, mesh_namespace,
+    note_analytic_fallback, set_plan_cache,
 )
 from repro.tuning.report import characterization_report, write_report
 
@@ -31,7 +32,9 @@ __all__ = [
     "Measurement", "TuneResult", "candidate_plans", "measure_grouped_plan",
     "measure_plan", "sweep", "sweep_axis", "tune_gemm", "tune_grouped_gemm",
     "tune_sparse_gemm",
-    "PlanCache", "current_mesh_namespace", "get_plan_cache", "lookup_plan",
-    "make_key", "mesh_namespace", "set_plan_cache",
+    "PlanCache", "cached_analytic", "clear_analytic_memo",
+    "current_mesh_namespace", "get_plan_cache", "key_namespace",
+    "lookup_plan", "make_key", "mesh_namespace", "note_analytic_fallback",
+    "set_plan_cache",
     "characterization_report", "write_report",
 ]

@@ -35,6 +35,7 @@ model and the hardware disagree — the paper's Fig. 10/11 story.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 from typing import List, Optional, Sequence, Tuple
@@ -43,6 +44,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 from repro.core.blocking import (
     GemmPlan, enumerate_block_lattice, grouped_plan_from_2d, plan_gemm,
@@ -371,6 +374,17 @@ def sweep_axis(
     return out
 
 
+def _obs_tune(fn):
+    """Wrap a ``tune_*`` entrypoint in an ``obs.span("tune")`` — the tune
+    leg of the plan → pack → tune → launch trace chain.  The winning key
+    and wall time land on the span via :func:`_persist_best`'s annotate."""
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with obs.span("tune", op=fn.__name__):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
 def _persist_best(key: str, measurements, cache: Optional[PlanCache],
                   save: bool, extra_meta: Optional[dict] = None) -> TuneResult:
     """Shared tune-result tail: pick the winner, write it to the cache.
@@ -380,6 +394,8 @@ def _persist_best(key: str, measurements, cache: Optional[PlanCache],
     """
     analytic = measurements[0]
     best = min(measurements, key=lambda mm: mm.wall_us)
+    obs.annotate(key=key, mode=best.mode, wall_us=best.wall_us,
+                 candidates=len(measurements))
     if cache is None:
         cache = get_plan_cache()
     if cache is not None:
@@ -399,6 +415,7 @@ def _persist_best(key: str, measurements, cache: Optional[PlanCache],
                       measurements=tuple(measurements))
 
 
+@_obs_tune
 def tune_gemm(
     m: int,
     n: int,
@@ -466,6 +483,7 @@ def tune_gemm(
 
 # --- tile-sparse instances ----------------------------------------------------
 
+@_obs_tune
 def tune_sparse_gemm(
     m: int,
     a,
@@ -600,6 +618,7 @@ def measure_grouped_plan(
                        modeled_us=modeled)
 
 
+@_obs_tune
 def tune_grouped_gemm(
     g: int,
     m: int,

@@ -31,11 +31,15 @@ from __future__ import annotations
 
 import contextlib
 import json
+import logging
 import os
+import re
 import tempfile
 import threading
 from pathlib import Path
 from typing import Dict, Optional
+
+from repro.obs.registry import counter_inc
 
 from repro.core.blocking import (
     GemmPlan, _resolve_dtypes, plan_from_dict, plan_to_dict,
@@ -45,6 +49,29 @@ from repro.core.constants import DEFAULT_HW, HardwareSpec
 _SCHEMA_VERSION = 1
 
 _OFF_VALUES = ("off", "0", "none", "disabled")
+
+_log = logging.getLogger(__name__)
+
+_GROUPED_KEY_RE = re.compile(r"^g\d+\|")
+
+
+def key_namespace(key: str) -> str:
+    """Coarse, bounded-cardinality namespace of a plan-cache key.
+
+    Classifies by the structural key components (grouped prefix, layout /
+    epilogue / sparsity / mesh suffixes) rather than their full tags, so
+    the per-namespace metrics and the fallback log stay bounded no matter
+    how many shapes flow through.  ``'default'`` is the plain dense 2-D
+    GEMM namespace.
+    """
+    parts = []
+    if _GROUPED_KEY_RE.match(key):
+        parts.append("grouped")
+    for marker, name in (("|lay=", "layout"), ("|ep=", "epilogue"),
+                         ("|sp=", "sparse"), ("|mesh=", "mesh")):
+        if marker in key:
+            parts.append(name)
+    return "+".join(parts) or "default"
 
 # -- mesh namespace ----------------------------------------------------------
 #
@@ -344,7 +371,66 @@ def set_plan_cache(cache: Optional[PlanCache]) -> Optional[PlanCache]:
         prev = _global_cache if _global_configured else None
         _global_cache = cache
         _global_configured = True
-        return prev
+    # A new cache is a new tuning world: drop memoized analytic fallbacks
+    # so they can never shadow (or leak between) test-installed caches.
+    clear_analytic_memo()
+    return prev
+
+
+# -- analytic-fallback memo + once-per-namespace logging ----------------------
+#
+# A tuned-cache miss falls back to the analytic planner (plan_gemm).  That
+# used to be completely silent — an un-warmed production launch planned
+# every layer analytically and nothing said so.  Now the kernel layer
+# reports each fallback here: the plan is memoized under its full key (the
+# key determines the analytic plan, so this is a pure cache — repeat
+# lookups of the same instance become 'hit_analytic' instead of re-running
+# the planner), the per-namespace counter increments, and the first
+# fallback in each namespace logs a warning (mirroring
+# ``kernels/ops.py::flash_attention_fallback_reason``'s once-per-process
+# discipline).
+
+_analytic_lock = threading.Lock()
+_analytic_memo: Dict[str, GemmPlan] = {}
+_fallback_logged_ns: set = set()
+
+
+def cached_analytic(key: str) -> Optional[GemmPlan]:
+    """A previously memoized analytic-fallback plan for ``key``, or None."""
+    with _analytic_lock:
+        return _analytic_memo.get(key)
+
+
+def note_analytic_fallback(key: str, plan: GemmPlan) -> None:
+    """Record one analytic-planner fallback for a tuned-cache miss.
+
+    Counts ``plan_cache_analytic_fallback_total{namespace=...}``, warns
+    once per process per key namespace, and memoizes the plan so repeat
+    lookups of the same instance hit instead of silently re-falling-back.
+    """
+    ns = key_namespace(key)
+    counter_inc("plan_cache_analytic_fallback_total",
+                help="tuned-plan misses resolved by the analytic planner",
+                namespace=ns)
+    first = False
+    with _analytic_lock:
+        _analytic_memo[key] = plan
+        if ns not in _fallback_logged_ns:
+            _fallback_logged_ns.add(ns)
+            first = True
+    if first:
+        _log.warning(
+            "plan cache miss in namespace %r (key %s): falling back to the "
+            "analytic planner. Tune this workload (repro.perf.sweep or "
+            "tuning.microbench) to pin measured blocks; further %r "
+            "fallbacks will be counted but not logged.", ns, key, ns)
+
+
+def clear_analytic_memo() -> None:
+    """Forget memoized analytic plans + per-namespace log dedup."""
+    with _analytic_lock:
+        _analytic_memo.clear()
+        _fallback_logged_ns.clear()
 
 
 def lookup_plan(
@@ -364,6 +450,7 @@ def lookup_plan(
     epilogue: str = "",
     sparsity: str = "",
     mesh: Optional[str] = None,
+    analytic_memo: bool = False,
 ) -> Optional[GemmPlan]:
     """Tuned plan for this GEMM instance, or None (miss / cache disabled).
 
@@ -375,12 +462,39 @@ def lookup_plan(
     tile-sparse namespace; ``mesh`` (default: the ambient
     :func:`mesh_namespace`) the sharded-GEMM namespace (see
     :func:`make_key`).
+
+    Every lookup lands in ``plan_cache_lookups_total{namespace, result}``
+    with result ``hit_tuned`` / ``hit_analytic`` / ``miss`` /
+    ``disabled``.  ``analytic_memo=True`` (the kernel launch path) also
+    consults plans memoized by :func:`note_analytic_fallback`, so a
+    repeated un-tuned instance hits the memo instead of re-running the
+    analytic planner on every trace; direct callers (tests, tuning
+    reports) keep the pure tuned-only semantics by default.
     """
-    cache = get_plan_cache()
-    if cache is None:
-        return None
-    return cache.get(make_key(
+    key = make_key(
         m, n, k, a_dtype, b_dtype, out_dtype,
         trans_a=trans_a, trans_b=trans_b, beta=beta, hw=hw, g=g,
         layout=layout, epilogue=epilogue, sparsity=sparsity, mesh=mesh,
-    ))
+    )
+    ns = key_namespace(key)
+    cache = get_plan_cache()
+    if cache is None:
+        _count_lookup(ns, "disabled")
+        return None
+    plan = cache.get(key)
+    if plan is not None:
+        _count_lookup(ns, "hit_tuned")
+        return plan
+    if analytic_memo:
+        plan = cached_analytic(key)
+        if plan is not None:
+            _count_lookup(ns, "hit_analytic")
+            return plan
+    _count_lookup(ns, "miss")
+    return None
+
+
+def _count_lookup(namespace: str, result: str) -> None:
+    counter_inc("plan_cache_lookups_total",
+                help="plan-cache reads by namespace and outcome",
+                namespace=namespace, result=result)

@@ -20,6 +20,7 @@ BENCH_MODULES = [
     "benchmarks.bench_irregular",
     "benchmarks.bench_loads",
     "benchmarks.bench_mixed_precision",
+    "benchmarks.bench_obs",
     "benchmarks.bench_packing",
     "benchmarks.bench_quant",
     "benchmarks.bench_serve",
@@ -49,7 +50,8 @@ def test_run_sys_path_idempotent():
 def test_run_areas_cover_registry():
     import benchmarks.run as run
     assert set(run.AREA_RUNNERS) == set(run.AREAS) == \
-        {"gemm", "packing", "quant", "sparse", "serve", "distributed"}
+        {"gemm", "packing", "quant", "sparse", "serve", "distributed",
+         "obs"}
 
 
 @pytest.fixture(scope="module")
@@ -65,13 +67,13 @@ def emitted(tmp_path_factory):
 class TestEmit(object):
     def test_writes_every_area(self, emitted):
         for area in ("gemm", "packing", "quant", "sparse", "serve",
-                     "distributed"):
+                     "distributed", "obs"):
             assert (emitted / f"BENCH_{area}.json").exists()
 
     def test_emitted_files_schema_valid(self, emitted):
         from repro.perf.trajectory import read_bench, validate_bench_dict
         for area in ("gemm", "packing", "quant", "sparse", "serve",
-                     "distributed"):
+                     "distributed", "obs"):
             path = emitted / f"BENCH_{area}.json"
             raw = json.loads(path.read_text())
             assert validate_bench_dict(raw) == []
@@ -100,6 +102,10 @@ class TestEmit(object):
         dist = read_bench(emitted / "BENCH_distributed.json").by_name()
         assert "dist_model_row_w6_p8" in dist
         assert "dist_trace_ring_row" in dist
+        oarea = read_bench(emitted / "BENCH_obs.json").by_name()
+        assert "obs_gate_transparency" in oarea
+        assert oarea["obs_gate_transparency"].metrics[
+            "payload_identical"] == 1.0
 
     def test_paper_workload_metrics_match_accounting(self, emitted):
         """The emitted Table III records carry the metrics core's numbers."""
@@ -155,6 +161,6 @@ def test_committed_baselines_valid():
     base = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "baselines")
     for area in ("gemm", "packing", "quant", "sparse", "serve",
-                 "distributed"):
+                 "distributed", "obs"):
         bf = read_bench(os.path.join(base, f"BENCH_{area}.json"))
         assert bf.area == area and len(bf.records) > 0

@@ -1,0 +1,391 @@
+"""Observability subsystem: registry, tracer, auditor, deprecation shims,
+and the plan-cache counter contract.
+
+The gated properties: label-set canonicalisation (kwarg order never forks
+a series), thread-safe increments, byte-deterministic exposition, span
+nesting + Perfetto-loadable export, auditor parity with the bench gates
+it replaced, warn-once-per-site dedup with every call counted, and the
+miss -> analytic-fallback -> memo-hit lookup sequence.
+"""
+import json
+import threading
+import urllib.error
+import urllib.request
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.obs import audit
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import Tracer, set_tracer
+
+
+@pytest.fixture
+def registry():
+    """A fresh ambient registry, restored on exit."""
+    reg = MetricsRegistry()
+    prev = obs.set_registry(reg)
+    try:
+        yield reg
+    finally:
+        obs.set_registry(prev)
+
+
+@pytest.fixture
+def tracer():
+    """A fresh ambient tracer, restored on exit."""
+    tr = Tracer()
+    prev = set_tracer(tr)
+    try:
+        yield tr
+    finally:
+        set_tracer(prev)
+
+
+# --- registry ----------------------------------------------------------------
+
+class TestRegistry:
+    def test_labelset_identity(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x_total")
+        c.inc(a="1", b="2")
+        c.inc(b="2", a="1")
+        assert c.value(a="1", b="2") == 2.0
+        assert len(reg.snapshot()["counters"]) == 1
+
+    def test_label_values_stringified(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x_total")
+        c.inc(g=8)
+        assert c.value(g="8") == 1.0
+
+    def test_thread_safety(self):
+        reg = MetricsRegistry()
+        c = reg.counter("races_total")
+        n_threads, n_incs = 8, 2000
+
+        def worker(i):
+            for _ in range(n_incs):
+                c.inc(thread=i % 2)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.total() == float(n_threads * n_incs)
+
+    def test_snapshot_deterministic_across_insertion_order(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.counter("one_total").inc(k="x")
+        a.counter("two_total").inc(k="y")
+        a.gauge("g").set(3.0)
+        b.gauge("g").set(3.0)
+        b.counter("two_total").inc(k="y")
+        b.counter("one_total").inc(k="x")
+        assert a.to_json() == b.to_json()
+        assert a.prometheus_text() == b.prometheus_text()
+
+    def test_prometheus_text_format(self):
+        reg = MetricsRegistry()
+        reg.counter("hits_total", help="cache hits").inc(2.0, ns="gemm")
+        reg.histogram("lat_seconds", buckets=(0.1, 1.0)).observe(0.05)
+        text = reg.prometheus_text()
+        assert "# HELP hits_total cache hits" in text
+        assert "# TYPE hits_total counter" in text
+        assert 'hits_total{ns="gemm"} 2.0' in text
+        assert 'lat_seconds_bucket{le="0.1"} 1' in text
+        assert "lat_seconds_count 1" in text
+
+    def test_histogram_cumulative_buckets(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("h", buckets=(1.0, 10.0))
+        for v in (0.5, 5.0, 50.0):
+            h.observe(v)
+        snap = h.snapshot_one()
+        assert snap["count"] == 3 and snap["sum"] == 55.5
+        assert snap["buckets"] == {"1.0": 1, "10.0": 2, "+Inf": 3}
+
+    def test_counter_rejects_negative(self):
+        with pytest.raises(ValueError):
+            MetricsRegistry().counter("c_total").inc(-1.0)
+
+    def test_kind_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("name")
+        with pytest.raises(TypeError):
+            reg.gauge("name")
+
+    def test_disabled_helpers_are_noops(self):
+        prev = obs.set_registry(None)
+        try:
+            assert not obs.metrics_enabled()
+            obs.counter_inc("ghost_total")
+            obs.gauge_set("ghost", 1.0)
+            obs.observe("ghost_seconds", 0.1)
+        finally:
+            obs.set_registry(prev)
+
+    def test_module_helpers_hit_ambient(self, registry):
+        obs.counter_inc("tick_total", kind="a")
+        obs.counter_inc("tick_total", kind="a")
+        obs.gauge_set("depth", 7, queue="q")
+        assert registry.counter("tick_total").value(kind="a") == 2.0
+        assert registry.gauge("depth").value(queue="q") == 7.0
+
+
+# --- tracer ------------------------------------------------------------------
+
+class TestTracer:
+    def test_span_nesting_and_export(self, tracer, tmp_path):
+        with obs.span("outer", layer=0):
+            with obs.span("inner"):
+                obs.annotate(bytes=123)
+            obs.instant("tick", step=1)
+        path = tmp_path / "trace.json"
+        tracer.export(path)
+        doc = json.loads(path.read_text())
+        events = doc["traceEvents"]
+        by_name = {e["name"]: e for e in events}
+        assert set(by_name) == {"outer", "inner", "tick"}
+        # annotate lands on the INNERMOST open span.
+        assert by_name["inner"]["args"] == {"bytes": 123}
+        assert by_name["outer"]["args"] == {"layer": 0}
+        assert by_name["tick"]["ph"] == "i"
+        for ev in events:
+            assert {"ph", "name", "ts", "pid", "tid"} <= set(ev)
+        # inner closes before outer, and starts after it.
+        assert by_name["inner"]["ts"] >= by_name["outer"]["ts"]
+
+    def test_disabled_span_is_shared_nullcontext(self):
+        prev = set_tracer(None)
+        try:
+            assert not obs.tracing_enabled()
+            cm1, cm2 = obs.span("a"), obs.span("b", x=1)
+            assert cm1 is cm2  # no per-call allocation when off
+            with cm1:
+                obs.annotate(dropped=True)  # no-op, must not raise
+            obs.instant("nothing")
+        finally:
+            set_tracer(prev)
+
+    def test_len_and_clear(self, tracer):
+        with obs.span("s"):
+            pass
+        assert len(tracer) == 1
+        tracer.clear()
+        assert len(tracer) == 0
+
+
+# --- auditor parity with the bench gates -------------------------------------
+
+class TestAudit:
+    M, N, K = 32, 256, 256
+
+    def _weight(self):
+        rng = np.random.default_rng(0)
+        return jnp.asarray(rng.standard_normal((self.K, self.N)),
+                           jnp.float32)
+
+    def _x(self):
+        return jax.ShapeDtypeStruct((self.M, self.K), jnp.bfloat16)
+
+    def test_dense_gemm_single_launch(self):
+        from repro.core.gemm import mp_dot
+        jx = audit.trace(
+            lambda x, w: mp_dot(x, w, policy="bf16", backend="interpret"),
+            self._x(), self._weight())
+        assert audit.count_pallas(jx) == 1
+        assert len(audit.pallas_grids(jx)) == 1
+        assert audit.first_pallas_grid(jx)  # nonempty grid tuple
+
+    def test_packed_int4_one_launch_zero_dequants(self):
+        from repro.core.blocking import plan_gemm
+        from repro.core.gemm import mp_dot
+        from repro.packing import pack_operand
+        plan = plan_gemm(self.M, self.N, self.K, "bfloat16", "int4")
+        packed = pack_operand(self._weight(), plan, dtype="int4",
+                              backend="xla")
+        jx = audit.trace(
+            lambda x, p: mp_dot(x, p, policy="bf16", backend="interpret"),
+            self._x(), packed)
+        assert audit.count_pallas(jx) == 1
+        count, nbytes = audit.weight_sized_intermediates(
+            jx, self.K * self.N, prims=audit.DEQUANT_PRIMS,
+            skip_pallas_bodies=True)
+        assert count == 0 and nbytes == 0
+
+    def test_sparse_grid_walks_schedule(self):
+        from repro.core.gemm import mp_dot
+        from repro.sparse import TileSparseOperand, sparsify_magnitude
+        sp = sparsify_magnitude(self._weight(), (128, 128), density=0.5,
+                                dtype="bfloat16")
+        jx = audit.trace(
+            lambda x, payload: mp_dot(
+                x, TileSparseOperand(payload, sp.scales, sp.layout),
+                policy="bf16", backend="interpret"),
+            self._x(),
+            jax.ShapeDtypeStruct(sp.payload.shape, sp.payload.dtype))
+        assert audit.first_pallas_grid(jx)[-1] == sp.layout.schedule_len
+
+    def test_prep_bytes_packed_vs_unpacked(self):
+        from repro.core.blocking import plan_gemm
+        from repro.core.gemm import mp_dot
+        from repro.packing import pack_operand
+        w = self._weight()
+        plan = plan_gemm(self.M, self.N, self.K, "bfloat16")
+        packed = pack_operand(w, plan, dtype="bfloat16", backend="xla")
+        packed_bytes = audit.prep_bytes(
+            lambda x, p: mp_dot(x, p, policy="bf16", backend="interpret"),
+            self._x(), packed, weight_elems=self.K * self.N)
+        unpacked_bytes = audit.prep_bytes(
+            lambda x, w: mp_dot(x, w, policy="bf16", backend="interpret"),
+            self._x(), w, weight_elems=self.K * self.N)
+        assert packed_bytes == 0
+        assert unpacked_bytes > 0
+
+    def test_first_pallas_grid_raises_without_launch(self):
+        jx = audit.trace(lambda a, b: a + b,
+                         jnp.ones((2, 2)), jnp.ones((2, 2)))
+        assert audit.count_pallas(jx) == 0
+        with pytest.raises(ValueError, match="no pallas_call"):
+            audit.first_pallas_grid(jx)
+
+    def test_schedule_counts_shape(self):
+        jx = audit.trace(
+            lambda a, b: jnp.dot(a, b), jnp.ones((4, 4)), jnp.ones((4, 4)))
+        counts = audit.schedule_counts(jx)
+        assert counts["dots"] == 1
+        assert set(counts) == {"dots", "ppermutes", "psums",
+                               "all_to_alls", "interleaved"}
+
+
+# --- deprecation shims -------------------------------------------------------
+
+class TestDeprecation:
+    def test_warn_once_per_site_count_every_call(self, registry):
+        obs.reset_warned_sites()
+        try:
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                for _ in range(5):
+                    obs.warn_deprecated("test_shim", "use the new thing")
+            assert len(caught) == 1  # one site -> one warning
+            assert issubclass(caught[0].category, DeprecationWarning)
+            assert registry.counter("deprecated_call_total").value(
+                shim="test_shim") == 5.0
+        finally:
+            obs.reset_warned_sites()
+
+    def test_reset_rearms_warning(self, registry):
+        obs.reset_warned_sites()
+        try:
+            def call():
+                obs.warn_deprecated("test_shim2", "gone soon")
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                call()
+                obs.reset_warned_sites()
+                call()
+            assert len(caught) == 2
+        finally:
+            obs.reset_warned_sites()
+
+    def test_engine_batch_size_shim_counted(self, registry):
+        from repro.configs import base as cb
+        from repro.models.transformer import build_model
+        from repro.serve.engine import ServeEngine
+        obs.reset_warned_sites()
+        try:
+            cfg = cb.get("phi3-mini-3.8b", smoke=True)
+            model = build_model(cfg, policy="bf16", remat=False)
+            params = model.init(jax.random.PRNGKey(0))
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                ServeEngine(model, params, max_len=32, batch_size=2,
+                            page_size=8)
+            assert registry.counter("deprecated_call_total").value(
+                shim="serve_engine.batch_size") == 1.0
+        finally:
+            obs.reset_warned_sites()
+
+
+# --- plan-cache counter contract ---------------------------------------------
+
+class TestPlanCacheCounters:
+    def test_miss_fallback_memo_hit_sequence(self, registry):
+        from repro.core.blocking import plan_gemm
+        from repro.tuning.plan_cache import (
+            PlanCache, clear_analytic_memo, lookup_plan, make_key,
+            note_analytic_fallback, set_plan_cache,
+        )
+        prev = set_plan_cache(PlanCache(None))
+        try:
+            args = (48, 128, 256, "bfloat16")
+            assert lookup_plan(*args, analytic_memo=True) is None
+            note_analytic_fallback(make_key(*args), plan_gemm(*args))
+            assert lookup_plan(*args, analytic_memo=True) is not None
+            assert lookup_plan(*args, analytic_memo=True) is not None
+            c = registry.counter("plan_cache_lookups_total")
+            assert c.value(namespace="default", result="miss") == 1.0
+            assert c.value(namespace="default",
+                           result="hit_analytic") == 2.0
+            assert registry.counter(
+                "plan_cache_analytic_fallback_total").value(
+                namespace="default") == 1.0
+            # Installing a new cache clears the memo: back to a miss.
+            set_plan_cache(PlanCache(None))
+            assert lookup_plan(*args, analytic_memo=True) is None
+            assert c.value(namespace="default", result="miss") == 2.0
+        finally:
+            set_plan_cache(prev)
+            clear_analytic_memo()
+
+    def test_launch_counter_labels(self, registry):
+        from repro.core.gemm import mp_dot
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+        audit.trace(
+            lambda x, w: mp_dot(x, w, policy="bf16", backend="interpret"),
+            jax.ShapeDtypeStruct((16, 64), jnp.bfloat16), w)
+        assert registry.counter("gemm_launches_total").value(
+            layout="dense", codec="none", epilogue="linear",
+            sparse="false", grouped="false") >= 1.0
+
+
+# --- metrics server ----------------------------------------------------------
+
+class TestServer:
+    def test_endpoints(self, registry, tracer):
+        from repro.obs.server import start_metrics_server
+        obs.counter_inc("served_total", route="x")
+        with obs.span("covered"):
+            pass
+        with start_metrics_server(port=0) as server:
+            text = urllib.request.urlopen(
+                server.url + "/metrics", timeout=5).read().decode()
+            assert 'served_total{route="x"} 1.0' in text
+            snap = json.loads(urllib.request.urlopen(
+                server.url + "/metrics.json", timeout=5).read())
+            assert 'served_total{route="x"}' in snap["counters"]
+            trace_doc = json.loads(urllib.request.urlopen(
+                server.url + "/trace", timeout=5).read())
+            assert any(e["name"] == "covered"
+                       for e in trace_doc["traceEvents"])
+
+    def test_trace_404_when_tracing_off(self, registry):
+        from repro.obs.server import start_metrics_server
+        prev = set_tracer(None)
+        try:
+            with start_metrics_server(port=0) as server:
+                with pytest.raises(urllib.error.HTTPError) as err:
+                    urllib.request.urlopen(server.url + "/trace", timeout=5)
+                assert err.value.code == 404
+        finally:
+            set_tracer(prev)

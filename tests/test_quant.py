@@ -238,28 +238,19 @@ def test_quant_in_rejects_bias(ops):
                backend="interpret", quant_in=True)
 
 
-def _count_pallas(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if "pallas" in eqn.primitive.name:
-            n += 1
-        for sub in jax.core.jaxprs_in_params(eqn.params):
-            n += _count_pallas(sub)
-    return n
-
-
 @pytest.mark.parametrize("codec", [None, "int4"])
 def test_quant_in_is_single_launch(ops, codec):
     """quantize -> GEMM -> dequant(+act) is ONE Pallas launch, dense and
     nibble-packed alike (the int4 decode rides the same kernel)."""
+    from repro.obs import audit
     x, w = ops
     b = w if codec is None else pack_operand(w, BLOCKS, dtype=codec,
                                              backend="xla")
-    jaxpr = jax.make_jaxpr(
+    jaxpr = audit.trace(
         lambda x, b: mp_dot(x, b, policy="bf16", backend="interpret",
-                            quant_in=True, activation="silu"))(
-        x.astype(jnp.bfloat16), b).jaxpr
-    assert _count_pallas(jaxpr) == 1
+                            quant_in=True, activation="silu"),
+        x.astype(jnp.bfloat16), b)
+    assert audit.count_pallas(jaxpr) == 1
 
 
 # --- byte pricing ------------------------------------------------------------
